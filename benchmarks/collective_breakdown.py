@@ -1,0 +1,93 @@
+"""Hillclimb tooling: per-op_name breakdown of collective bytes and FLOPs
+from a cell's compiled HLO (loop-aware). The 'profile' of the dry-run world.
+
+  PYTHONPATH=src python -m benchmarks.collective_breakdown --arch olmoe-1b-7b \
+      --shape train_4k [--top 15]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+
+def breakdown(arch: str, shape: str, mesh_kind: str = "single",
+              top: int = 15, remat: bool = True):
+    from repro.launch import hlo_cost as H
+    from repro.launch.dryrun import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    with mesh:
+        fn, args, cfg, shp = build_cell(arch, shape, mesh, remat=remat)
+        text = fn.lower(*args).compile().as_text()
+    comps, entry = H.parse_hlo(text)
+    mult = defaultdict(float)
+    fusion_called = set()
+
+    def visit(name, m):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                refs = dict(H._ATTR_CALL_RE.findall(ins.attrs))
+                trip = H._trip_count(comps, refs.get("condition", ""))
+                visit(refs.get("body", ""), m * trip)
+                visit(refs.get("condition", ""), m * trip)
+            else:
+                for kind, ref in H._ATTR_CALL_RE.findall(ins.attrs):
+                    if kind in ("calls", "to_apply", "branch_computations"):
+                        fusion_called.add(ref)
+                        visit(ref, m)
+
+    visit(entry, 1.0)
+    coll = defaultdict(float)
+    flops = defaultdict(float)
+    mem = defaultdict(float)
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if not m:
+            continue
+        for ins in comp.instrs:
+            mm = re.search(r'op_name="([^"]+)"', ins.raw)
+            key = mm.group(1) if mm else f"<{ins.name}>"
+            key = re.sub(r"\[\d+\]", "", key)[:120]
+            base = ins.opcode.replace("-start", "")
+            if base in H._COLLECTIVES and not ins.opcode.endswith("-done"):
+                coll[(base, key)] += m * ins.out_bytes
+            if ins.opcode == "dot":
+                flops[key] += m * H._dot_flops(ins, comp)
+            if name not in fusion_called and ins.opcode not in H._SKIP_BYTES_OPS:
+                mem[key] += m * ins.out_bytes
+    print(f"== {arch} x {shape} x {mesh_kind} ==")
+    print("-- collectives (per-device bytes) --")
+    for (op, key), b in sorted(coll.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{b / 1e9:9.2f} GB  {op:20s} {key}")
+    print("-- flops --")
+    tot = sum(flops.values())
+    for key, f in sorted(flops.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{f:10.3e} ({f / tot * 100:4.1f}%)  {key}")
+    print("-- memory-proxy bytes --")
+    mtot = sum(mem.values())
+    for key, b in sorted(mem.items(), key=lambda kv: -kv[1])[:top]:
+        print(f"{b / 1e9:9.2f} GB ({b / mtot * 100:4.1f}%)  {key}")
+    return coll, flops, mem
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--no-remat", action="store_true")
+    args = ap.parse_args()
+    breakdown(args.arch, args.shape, args.mesh, args.top,
+              remat=not args.no_remat)
+
+
+if __name__ == "__main__":
+    main()

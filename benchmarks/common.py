@@ -1,0 +1,41 @@
+"""Shared benchmark scaffolding.
+
+The DES reproduces the paper's experiments on SCALED-DOWN drives (8192-page
+FTLs instead of 128 GB) so every table finishes in CPU-minutes; IOPS numbers
+are therefore compared to the paper as RATIOS/trends, with the fresh-drive
+write rate calibrated to the paper's 60 928 IOPS "maximal" cell.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.gc_sim import SSDParams
+
+OUT = Path("experiments/bench")
+
+# scaled-down drive used by every benchmark (calibrated: fresh ~= 60928 IOPS)
+SSD = SSDParams(capacity_pages=8192)
+
+PAPER = {
+    "table1_iops": {"fresh": 60928, "0.4": 42240, "0.6": 38656, "0.8": 32512},
+    "table2_per_ssd": {"1": 38656, "6": 37888, "12": 33280, "18": 31744},
+    "fig2_gain_pct": 28.0,
+    "fig3_gain_pct": 24.0,
+    "fig4_gain_pct": 39.0,
+    "fig5_best_gain_pct": 62.0,
+    "table3_extra_writeback_max_pct": 3.2,
+    "table3_hit_increase_pct": {"0.8": 0.7, "0.6": 0.6, "0.4": 1.0,
+                                "0.2": 1.4, "0.0": 4.0},
+}
+
+
+def save(name: str, payload: dict) -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                 default=float))
+
+
+def row(name: str, value, paper=None, note: str = "") -> str:
+    p = "" if paper is None else f",{paper}"
+    return f"{name},{value}{p}{',' + note if note else ''}"

@@ -1,0 +1,80 @@
+"""Roofline aggregation: reads experiments/dryrun/*.json into §Roofline tables.
+
+Run the dry-run first:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+then:
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.configs import ARCH_IDS, cells
+
+# prefer the optimized-defaults sweep; fall back to the baseline sweep
+DRYRUN_DIRS = [Path("experiments/dryrun_opt"), Path("experiments/dryrun")]
+
+
+def load(mesh: str = "single", dirs=None) -> list[dict]:
+    rows = []
+    for arch in ARCH_IDS:
+        for shp in cells(arch):
+            for d in (dirs or DRYRUN_DIRS):
+                p = d / f"{arch}_{shp}_{mesh}.json"
+                if p.exists():
+                    rows.append(json.loads(p.read_text()))
+                    break
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'compute_ms':>10s} {'memory_ms':>10s} "
+           f"{'coll_ms':>9s} {'bound':>10s} {'useful':>7s} {'AG_GB':>7s} "
+           f"{'AR_GB':>7s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        rf = r["roofline"]
+        cb = r["collectives"]["bytes"]
+        out.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{rf['compute_s'] * 1e3:10.2f} {rf['memory_s'] * 1e3:10.2f} "
+            f"{rf['collective_s'] * 1e3:9.2f} {rf['bottleneck']:>10s} "
+            f"{(r['useful_flop_ratio'] or 0):7.3f} "
+            f"{cb.get('all-gather', 0) / 1e9:7.2f} "
+            f"{cb.get('all-reduce', 0) / 1e9:7.2f}")
+    return "\n".join(out)
+
+
+def summarize(rows: list[dict]) -> dict:
+    worst = min((r for r in rows if r["mode"] == "train"),
+                key=lambda r: r["useful_flop_ratio"] or 0, default=None)
+    coll_bound = max(rows, key=lambda r: r["roofline"]["collective_s"] /
+                     max(r["roofline"]["compute_s"], 1e-12))
+    return {
+        "n_cells": len(rows),
+        "worst_useful_train": worst and (worst["arch"], worst["shape"],
+                                         worst["useful_flop_ratio"]),
+        "most_collective_bound": (coll_bound["arch"], coll_bound["shape"]),
+        "bottleneck_histogram": {
+            b: sum(1 for r in rows if r["roofline"]["bottleneck"] == b)
+            for b in ("compute", "memory", "collective")},
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    rows = load(args.mesh)
+    if not rows:
+        print("no dry-run artifacts found; run repro.launch.dryrun --all first")
+        return
+    print(fmt_table(rows))
+    print()
+    print(json.dumps(summarize(rows), indent=1))
+
+
+if __name__ == "__main__":
+    main()

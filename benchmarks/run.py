@@ -1,0 +1,46 @@
+"""Benchmark aggregator: one section per paper table/figure + the
+beyond-paper serving benchmark + the roofline table (if dry-run artifacts
+exist).
+
+  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller op counts (CI)")
+    args = ap.parse_args(argv)
+    del args
+
+    from . import paper_figs, paper_tables, roofline, serving_bench
+
+    t0 = time.time()
+    print("=" * 72)
+    print("SSPaper -- Table 1 / Table 2 / Figure 2 (raw array under GC)")
+    print("=" * 72)
+    paper_tables.main()
+    print()
+    print("=" * 72)
+    print("SSPaper -- Figures 3-5, Table 3 (SAFS + dirty-page flusher)")
+    print("=" * 72)
+    paper_figs.main()
+    print()
+    print("=" * 72)
+    print("SSBeyond-paper -- flusher in the paged-KV serving engine")
+    print("=" * 72)
+    serving_bench.main()
+    print()
+    print("=" * 72)
+    print("SSRoofline -- per (arch x shape), single-pod 16x16 (from dry-run)")
+    print("=" * 72)
+    roofline.main()
+    print(f"\ntotal benchmark wall time: {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

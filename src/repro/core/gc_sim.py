@@ -1,0 +1,488 @@
+"""Discrete-event simulator of an SSD array with unsynchronized garbage collection.
+
+This reproduces the *evaluation substrate* of the paper (§4.1): OCZ Vertex-4
+class SSDs behind HBAs, raw 4 KB random I/O. Three coupled models:
+
+1. ``FTL`` — page-mapped flash translation layer with greedy (min-valid) GC
+   and free-block watermark hysteresis. Hysteresis is what makes GC *bursty*:
+   an SSD reclaims several blocks back-to-back, pausing user I/O for
+   milliseconds. Across an array these pauses are unsynchronized — the
+   phenomenon the paper attacks.
+2. ``SSDSim`` — fluid single-server service model: ``channels`` internal
+   parallel units give per-op service time ``t_op / channels``; GC copies and
+   erases occupy the same server (strict priority during a GC episode).
+3. ``ArraySim`` — host with a bounded total outstanding window W and bounded
+   per-SSD queues. Tokens regenerate only on completion, so a GC-paused SSD
+   accumulates an ever larger share of W while fast SSDs starve — exactly the
+   Table-2/Figure-2 dynamic.
+
+Calibration: ``t_prog`` is set so a fresh single SSD sustains 60 928 IOPS of
+4 KB random writes (paper Table 1 "maximal"); occupancy-dependent degradation
+then *emerges* from the FTL (write amplification), it is not programmed in.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+import numpy as np
+
+# Paper Table 1 calibration target.
+FRESH_WRITE_IOPS = 60928.0
+READ_IOPS = 90000.0
+
+
+@dataclass(frozen=True)
+class SSDParams:
+    capacity_pages: int = 65536          # scaled-down drive (4 KB pages)
+    pages_per_block: int = 64
+    op_frac: float = 0.55                # effective spare factor. Calibrated to
+                                         # paper Table 1; large because the
+                                         # Vertex 4 reorganizes below half fill
+                                         # ("performance mode") and so behaves
+                                         # as if heavily over-provisioned.
+    channels: int = 32                   # internal parallelism
+    t_prog: float = 32.0 / FRESH_WRITE_IOPS
+    t_read: float = 32.0 / READ_IOPS
+    t_erase: float = 2.0e-3
+    t_coalesce: float = 10.0e-6          # DRAM write-buffer hit: a write whose
+                                         # LBA already has a pending write is
+                                         # absorbed at bus speed, no program
+    gc_low_blocks: int = 12              # enter GC episode at <= low free blocks
+    gc_high_blocks: int = 16             # leave episode at >= high free blocks
+                                         # (width => ~5 ms pauses; calibrated so
+                                         # the Table-2 array decline matches)
+    device_slots: int = 32               # NCQ-style concurrent admissions
+    gc_window: int = 0                   # 0 = pure greedy; else greedy over the
+                                         # oldest-sealed window (wear-leveling-
+                                         # constrained controllers; raises WA)
+    gc_sample: int = 2                   # 0 = full scan; else min-valid over a
+                                         # random sample of sealed blocks
+                                         # (d-choices, as firmware actually does).
+                                         # Calibrated (with op_frac) to Table 1.
+
+    @property
+    def phys_pages(self) -> int:
+        blocks = int(round(self.capacity_pages * (1 + self.op_frac))) // self.pages_per_block
+        return blocks * self.pages_per_block
+
+    @property
+    def n_blocks(self) -> int:
+        return self.phys_pages // self.pages_per_block
+
+
+class FTL:
+    """Page-mapped FTL with greedy GC. All state in numpy for speed."""
+
+    def __init__(self, params: SSDParams, rng: np.random.Generator):
+        self.p = params
+        self.rng = rng
+        n_blocks = params.n_blocks
+        self.page_lba = np.full(params.phys_pages, -1, dtype=np.int64)
+        self.lba_loc = np.full(params.capacity_pages, -1, dtype=np.int64)
+        self.valid_count = np.zeros(n_blocks, dtype=np.int32)
+        self.sealed = np.zeros(n_blocks, dtype=bool)
+        self.seal_fifo: list[int] = []   # blocks in seal order (gc_window policy)
+        self.free_blocks: list[int] = list(range(n_blocks - 1, 0, -1))
+        self.active = 0
+        self.active_off = 0
+        self.writes = 0          # user page programs
+        self.gc_copies = 0       # GC page programs
+        self.erases = 0
+
+    # -- helpers -------------------------------------------------------------
+    @property
+    def n_free_blocks(self) -> int:
+        return len(self.free_blocks)
+
+    def _advance_active(self) -> None:
+        if self.active_off == self.p.pages_per_block:
+            self.sealed[self.active] = True
+            self.seal_fifo.append(self.active)
+            self.active = self.free_blocks.pop()
+            self.active_off = 0
+
+    def _program(self, lba: int) -> None:
+        """Append ``lba`` to the active block (mapping update only)."""
+        self._advance_active()
+        phys = self.active * self.p.pages_per_block + self.active_off
+        self.active_off += 1
+        old = self.lba_loc[lba]
+        if old >= 0:
+            self.page_lba[old] = -1
+            self.valid_count[old // self.p.pages_per_block] -= 1
+        self.page_lba[phys] = lba
+        self.lba_loc[lba] = phys
+        self.valid_count[self.active] += 1
+
+    # -- public ----------------------------------------------------------------
+    def prefill(self, occupancy: float, churn: bool = True) -> None:
+        """Sequentially write ``occupancy`` of the LBA space (paper's pre-
+        conditioning), then churn random overwrites (with GC interleaved,
+        charging no simulated time) until the drive reaches GC steady state."""
+        live = int(self.p.capacity_pages * occupancy)
+        for lba in range(live):
+            self._program(lba)
+        self.live_lbas = live
+        if churn:
+            spare = self.p.phys_pages - live
+            lbas = self.rng.integers(0, live, size=3 * spare)
+            for lba in lbas:
+                self._program(int(lba))
+                while self.need_gc() and not self.gc_satisfied():
+                    self.gc_reclaim_one()
+            # reset counters so WA statistics reflect steady state only
+            self.writes = 0
+            self.gc_copies = 0
+            self.erases = 0
+
+    def user_write(self, lba: int) -> None:
+        self._program(lba)
+        self.writes += 1
+
+    def need_gc(self) -> bool:
+        return self.n_free_blocks <= self.p.gc_low_blocks
+
+    def gc_satisfied(self) -> bool:
+        return self.n_free_blocks >= self.p.gc_high_blocks
+
+    def gc_reclaim_one(self) -> int:
+        """Reclaim the min-valid sealed block (within the seal-order window if
+        ``gc_window`` > 0). Returns the number of page copies performed
+        (caller charges time)."""
+        if self.p.gc_window > 0:
+            window = self.seal_fifo[: self.p.gc_window]
+            victim = min(window, key=lambda b: self.valid_count[b])
+        elif self.p.gc_sample > 0 and len(self.seal_fifo) > self.p.gc_sample:
+            idx = self.rng.integers(0, len(self.seal_fifo), size=self.p.gc_sample)
+            victim = min((self.seal_fifo[i] for i in idx),
+                         key=lambda b: self.valid_count[b])
+        else:
+            cand = np.where(self.sealed)[0]
+            victim = int(cand[np.argmin(self.valid_count[cand])])
+        self.seal_fifo.remove(victim)
+        moved = 0
+        base = victim * self.p.pages_per_block
+        for off in range(self.p.pages_per_block):
+            lba = self.page_lba[base + off]
+            if lba >= 0:
+                self._program(int(lba))
+                moved += 1
+        self.sealed[victim] = False
+        self.valid_count[victim] = 0
+        self.free_blocks.insert(0, victim)  # tail: not reused before active moves on
+        self.gc_copies += moved
+        self.erases += 1
+        return moved
+
+
+def _mix64(x: int) -> int:
+    """splitmix64 finalizer — cheap stateless permutation-ish hash."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+class ZipfSampler:
+    """Bounded Zipf(s) over ranks 1..N: exact CDF for the head, continuous
+    generalized-harmonic inverse for the tail. O(1) memory in N."""
+
+    HEAD = 4096
+
+    def __init__(self, n: int, s: float, rng: np.random.Generator):
+        self.n, self.s, self.rng = n, s, rng
+        head = min(self.HEAD, n)
+        ranks = np.arange(1, head + 1, dtype=np.float64)
+        head_w = ranks ** (-s)
+        self._head_cum = np.cumsum(head_w)
+        h_head = float(self._head_cum[-1])
+        if n > head:
+            # integral_{head+.5}^{n+.5} x^-s dx
+            if abs(s - 1.0) < 1e-9:
+                tail = np.log((n + 0.5) / (head + 0.5))
+            else:
+                tail = ((n + 0.5) ** (1 - s) - (head + 0.5) ** (1 - s)) / (1 - s)
+        else:
+            tail = 0.0
+        self._h_head, self._h_total = h_head, h_head + tail
+        self._p_head = h_head / self._h_total
+
+    def sample(self) -> int:
+        u = self.rng.random()
+        if u < self._p_head or self.n <= self.HEAD:
+            t = u * self._h_total
+            return int(np.searchsorted(self._head_cum, t) + 1)
+        rem = u * self._h_total - self._h_head
+        head, s = min(self.HEAD, self.n), self.s
+        if abs(s - 1.0) < 1e-9:
+            k = (head + 0.5) * np.exp(rem)
+        else:
+            k = ((head + 0.5) ** (1 - s) + rem * (1 - s)) ** (1.0 / (1 - s))
+        return int(min(max(k, head + 1), self.n))
+
+
+@dataclass(frozen=True)
+class Workload:
+    read_frac: float = 0.0
+    dist: str = "uniform"            # "uniform" | "zipf"
+    zipf_s: float = 0.99
+    w_total: int = 128               # total outstanding window (app tokens)
+    qd_per_ssd: int = 128            # host-side per-SSD queue bound
+    n_streams: int = 1               # submission sequencers: a stream BLOCKS
+                                     # (head-of-line) when its next request
+                                     # targets a full device queue, as an AIO
+                                     # submit loop does. SAFS's long in-memory
+                                     # queues exist to break exactly this.
+    virtual_scale: int = 512         # Zipf ranks live in a virtual LBA space
+                                     # this many times larger than the scaled
+                                     # drives (≈ real 128 GB drives), then hash
+                                     # onto physical LBAs. Keeps the Zipf head
+                                     # below one SSD's fair share, as at real
+                                     # scale, instead of a scale-artifact
+                                     # hotspot.
+
+
+@dataclass
+class ArrayResults:
+    iops: float
+    per_ssd_iops: np.ndarray
+    read_iops: float
+    write_iops: float
+    util: np.ndarray                 # busy fraction per SSD during measurement
+    sim_time: float
+    gc_pause_frac: np.ndarray        # fraction of time in GC episodes
+    mean_latency: float
+
+
+_ARRIVE, _SSD_DONE = 0, 1
+
+
+class SSDServer:
+    """Fluid single-server SSD with GC episodes (wraps an FTL)."""
+
+    def __init__(self, params: SSDParams, occupancy: float, rng: np.random.Generator):
+        self.p = params
+        self.ftl = FTL(params, rng)
+        self.ftl.prefill(occupancy)
+        self.busy = False
+        self.in_gc = False
+        self.queue: list = []        # admitted (tok, stream, lba, is_read, coal)
+        self.host_queue: list = []   # waiting for device slots
+        self.pending_writes: dict[int, int] = {}  # lba -> pending write count
+        self.gc_time = 0.0
+        self.busy_time = 0.0
+        self.served_reads = 0
+        self.served_writes = 0
+
+    def service_time(self, is_read: bool) -> float:
+        t = self.p.t_read if is_read else self.p.t_prog
+        return t / self.p.channels
+
+    def gc_episode_time(self) -> float:
+        """Reclaim blocks until the high watermark; return total busy time."""
+        t = 0.0
+        while not self.ftl.gc_satisfied():
+            copies = self.ftl.gc_reclaim_one()
+            t += copies * (self.p.t_read + self.p.t_prog) / self.p.channels
+            t += self.p.t_erase / self.p.channels
+        return t
+
+
+class ArraySim:
+    """Host + n SSDs. Global LBAs stripe across SSDs page-granularly."""
+
+    def __init__(self, n_ssds: int, ssd: SSDParams = SSDParams(),
+                 occupancy: float = 0.6, workload: Workload = Workload(),
+                 seed: int = 0):
+        self.n = n_ssds
+        self.p = ssd
+        self.wl = workload
+        self.rng = np.random.default_rng(seed)
+        self.ssds = [SSDServer(ssd, occupancy, self.rng) for _ in range(n_ssds)]
+        self.live_per_ssd = self.ssds[0].ftl.live_lbas
+        self.n_live = self.live_per_ssd * n_ssds
+        if workload.dist == "zipf":
+            self._zipf = ZipfSampler(self.n_live * workload.virtual_scale,
+                                     workload.zipf_s, self.rng)
+
+    # -- workload ------------------------------------------------------------
+    def _sample_lba(self) -> int:
+        if self.wl.dist == "zipf":
+            v = self._zipf.sample()
+            return _mix64(v) % self.n_live
+        return int(self.rng.integers(self.n_live))
+
+    def _sample_op(self) -> tuple[int, int, bool]:
+        lba = self._sample_lba()
+        is_read = bool(self.rng.random() < self.wl.read_frac)
+        return lba % self.n, lba // self.n, is_read
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
+        n, wl = self.n, self.wl
+        if warmup_ops is None:
+            warmup_ops = measure_ops // 2
+        total_ops = warmup_ops + measure_ops
+        now = 0.0
+        seq = 0
+        heap: list[tuple[float, int, int, int]] = []  # (time, seq, kind, ssd)
+        completions = 0
+        t_measure_start = None
+        measured = np.zeros(n, dtype=np.int64)
+        measured_reads = 0
+        measured_writes = 0
+        lat_sum, lat_n = 0.0, 0
+        issue_time: dict[int, float] = {}
+        token_id = 0
+
+        # Submitter streams: each has a window of w_total/n_streams tokens and
+        # a single submission sequence. A full target queue parks the whole
+        # stream (AIO io_submit head-of-line behaviour).
+        n_streams = max(1, wl.n_streams)
+        window = max(1, wl.w_total // n_streams)
+        outstanding = [0] * n_streams
+        parked: list[tuple[int, int, bool] | None] = [None] * n_streams
+        waiters: list[list[int]] = [[] for _ in range(n)]  # streams parked per SSD
+
+        def push(t, kind, ssd):
+            nonlocal seq
+            heapq.heappush(heap, (t, seq, kind, ssd))
+            seq += 1
+
+        def try_start(ssd_i: int):
+            """Admit host-queue -> device and start service / GC episodes."""
+            s = self.ssds[ssd_i]
+            if s.busy:
+                return
+            # GC has strict priority once the watermark trips.
+            if s.ftl.need_gc():
+                dt = s.gc_episode_time()
+                s.busy = True
+                s.in_gc = True
+                s.gc_time += dt
+                s.busy_time += dt
+                push(now + dt, _SSD_DONE, ssd_i)
+                return
+            while len(s.queue) < self.p.device_slots and s.host_queue:
+                s.queue.append(s.host_queue.pop(0))
+            if s.queue:
+                _, _, _, is_read, coal = s.queue[0]
+                dt = self.p.t_coalesce if coal else s.service_time(is_read)
+                s.busy = True
+                s.busy_time += dt
+                push(now + dt, _SSD_DONE, ssd_i)
+
+        def room(ssd_i: int) -> bool:
+            s = self.ssds[ssd_i]
+            return len(s.host_queue) + len(s.queue) < wl.qd_per_ssd
+
+        def enqueue(stream: int, ssd_i: int, lba: int, is_read: bool):
+            nonlocal token_id
+            tok = token_id
+            token_id += 1
+            issue_time[tok] = now
+            s = self.ssds[ssd_i]
+            coal = False
+            if not is_read:
+                coal = s.pending_writes.get(lba, 0) > 0
+                s.pending_writes[lba] = s.pending_writes.get(lba, 0) + 1
+            s.host_queue.append((tok, stream, lba, is_read, coal))
+            outstanding[stream] += 1
+            try_start(ssd_i)
+
+        def stream_fill(stream: int):
+            """Submit until the stream's window is full or it parks."""
+            if parked[stream] is not None:
+                return
+            while outstanding[stream] < window:
+                ssd_i, lba, is_read = self._sample_op()
+                if room(ssd_i):
+                    enqueue(stream, ssd_i, lba, is_read)
+                else:
+                    parked[stream] = (ssd_i, lba, is_read)
+                    waiters[ssd_i].append(stream)
+                    return
+
+        def unpark(ssd_i: int):
+            while waiters[ssd_i] and room(ssd_i):
+                stream = waiters[ssd_i].pop(0)
+                tgt, lba, is_read = parked[stream]
+                parked[stream] = None
+                enqueue(stream, tgt, lba, is_read)
+                stream_fill(stream)
+
+        for si in range(n_streams):
+            stream_fill(si)
+
+        while completions < total_ops and heap:
+            now, _, kind, ssd_i = heapq.heappop(heap)
+            s = self.ssds[ssd_i]
+            s.busy = False
+            if s.in_gc:
+                s.in_gc = False
+                try_start(ssd_i)
+                unpark(ssd_i)
+                continue
+            tok, stream, lba, is_read, coal = s.queue.pop(0)
+            outstanding[stream] -= 1
+            if is_read:
+                s.served_reads += 1
+            else:
+                s.served_writes += 1
+                c = s.pending_writes[lba] - 1
+                if c:
+                    s.pending_writes[lba] = c
+                else:
+                    del s.pending_writes[lba]
+                if not coal:
+                    s.ftl.user_write(lba)
+            completions += 1
+            if t_measure_start is None and completions >= warmup_ops:
+                t_measure_start = now
+                measured[:] = 0
+                measured_reads = measured_writes = 0
+                lat_sum, lat_n = 0.0, 0
+                for ss in self.ssds:
+                    ss.busy_time = 0.0
+                    ss.gc_time = 0.0
+            if t_measure_start is not None:
+                measured[ssd_i] += 1
+                if is_read:
+                    measured_reads += 1
+                else:
+                    measured_writes += 1
+                lat_sum += now - issue_time.pop(tok, now)
+                lat_n += 1
+            else:
+                issue_time.pop(tok, None)
+            try_start(ssd_i)
+            unpark(ssd_i)
+            stream_fill(stream)
+
+        span = max(now - (t_measure_start or 0.0), 1e-9)
+        return ArrayResults(
+            iops=float(measured.sum() / span),
+            per_ssd_iops=measured / span,
+            read_iops=measured_reads / span,
+            write_iops=measured_writes / span,
+            util=np.array([s.busy_time / span for s in self.ssds]),
+            sim_time=span,
+            gc_pause_frac=np.array([s.gc_time / span for s in self.ssds]),
+            mean_latency=lat_sum / max(lat_n, 1),
+        )
+
+
+def single_ssd_write_iops(occupancy: float, *, params: SSDParams = SSDParams(),
+                          measure_ops: int = 60000, w_total: int = 128,
+                          seed: int = 0) -> float:
+    """Paper Table 1 cell: steady 4 KB random-write IOPS at an occupancy."""
+    sim = ArraySim(1, params, occupancy,
+                   Workload(read_frac=0.0, w_total=w_total, qd_per_ssd=w_total), seed)
+    return sim.run(measure_ops).iops
+
+
+def fresh_ssd_write_iops(params: SSDParams = SSDParams(), measure_ops: int = 30000) -> float:
+    """Paper Table 1 'maximal' column: no GC (tiny occupancy never trips it)."""
+    sim = ArraySim(1, params, 0.05, Workload(w_total=128, qd_per_ssd=128))
+    return sim.run(measure_ops).iops

@@ -1,0 +1,207 @@
+"""Set-associative cache (SA-cache, paper §3.1) as a functional JAX state machine.
+
+The paper's SA-cache groups pages into many small page sets to eliminate global
+locking. On TPU the analogous win is *vectorization*: every policy decision
+(GClock eviction, flush scoring) is an elementwise/argmin computation over a
+``(num_sets, set_size)`` array — one fused kernel instead of a locked list walk.
+
+Key identity used throughout (this is why the paper's flush score works): a
+GClock sweep starting at the hand visits slot ``p`` (forward distance ``d``)
+with hit count ``h`` and evicts it at sweep-time ``t = h * set_size + d`` — the
+paper's ``distance_score``. Hence the sweep victim is simply
+``argmin(distance_score)`` over eligible slots, which makes eviction analytic
+(O(set_size), branch-free) instead of an unbounded loop: TPU-native GClock.
+
+All ops are pure ``state -> state`` functions over a :class:`CacheState`
+pytree, jit/vmap-friendly, and property-tested against ``policies.py``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_HITS = 15          # saturation cap on GClock reference counts
+EMPTY = jnp.int32(-1)  # tag value for an empty slot
+
+
+class CacheState(NamedTuple):
+    """Bookkeeping for a set-associative page cache (no payload storage).
+
+    The payload (KV pages, checkpoint chunks, ...) lives elsewhere (e.g. the
+    HBM page pool); this state maps tags -> slots and drives the policies.
+    """
+
+    tags: jax.Array    # (num_sets, set_size) int32, EMPTY = free slot
+    hits: jax.Array    # (num_sets, set_size) int32 GClock counts
+    dirty: jax.Array   # (num_sets, set_size) bool
+    clock: jax.Array   # (num_sets,) int32 hand position
+
+    @property
+    def num_sets(self) -> int:
+        return self.tags.shape[0]
+
+    @property
+    def set_size(self) -> int:
+        return self.tags.shape[1]
+
+
+def make_cache(num_sets: int, set_size: int) -> CacheState:
+    return CacheState(
+        tags=jnp.full((num_sets, set_size), EMPTY, dtype=jnp.int32),
+        hits=jnp.zeros((num_sets, set_size), dtype=jnp.int32),
+        dirty=jnp.zeros((num_sets, set_size), dtype=jnp.bool_),
+        clock=jnp.zeros((num_sets,), dtype=jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scoring (paper §3.3.1) — vectorized over all sets.
+# ---------------------------------------------------------------------------
+
+def distance_scores(state: CacheState) -> jax.Array:
+    """(num_sets, set_size) distance_score = hits * set_size + distance."""
+    s = state.set_size
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    dist = jnp.mod(pos - state.clock[:, None], s)
+    return state.hits.astype(jnp.int32) * s + dist
+
+
+def flush_scores(state: CacheState) -> jax.Array:
+    """Rank-based flush scores; invalid slots get -1. Matches policies.flush_scores."""
+    s = state.set_size
+    valid = state.tags != EMPTY
+    d = jnp.where(valid, distance_scores(state), jnp.iinfo(jnp.int32).max)
+    # rank of each slot in ascending (d, slot) order, computed by pairwise
+    # comparison — set_size is tiny (paper: 12) so O(s^2) beats a sort.
+    di = d[..., :, None]
+    dj = d[..., None, :]
+    idx = jnp.arange(s, dtype=jnp.int32)
+    lt = (dj < di) | ((dj == di) & (idx[None, None, :] < idx[None, :, None]))
+    rank = lt.sum(axis=-1).astype(jnp.int32)
+    fs = s - 1 - rank
+    return jnp.where(valid, fs, -1)
+
+
+def dirty_counts(state: CacheState) -> jax.Array:
+    return (state.dirty & (state.tags != EMPTY)).sum(axis=-1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Per-set primitive ops (compose with vmap for batches).
+# ---------------------------------------------------------------------------
+
+def _touch_row(hits_row: jax.Array, slot: jax.Array) -> jax.Array:
+    return hits_row.at[slot].set(jnp.minimum(hits_row[slot] + 1, MAX_HITS))
+
+
+def lookup(state: CacheState, set_idx: jax.Array, tag: jax.Array):
+    """Probe one set for ``tag``; bump GClock hits on a hit.
+
+    Returns (hit: bool[], slot: int32[], new_state).
+    """
+    row = state.tags[set_idx]
+    matches = row == tag
+    hit = matches.any()
+    slot = jnp.argmax(matches).astype(jnp.int32)
+    new_hits_row = jnp.where(hit, _touch_row(state.hits[set_idx], slot), state.hits[set_idx])
+    return hit, slot, state._replace(hits=state.hits.at[set_idx].set(new_hits_row))
+
+
+def _evict_analytic(hits_row, clock, valid, dirty, clean_first: bool):
+    """Analytic GClock sweep over one set. Returns (victim_slot, new_hits, new_clock).
+
+    Mirrors policies.gclock_evict exactly, including empty-slot fast path and
+    decrement bookkeeping of the simulated sweep.
+    """
+    s = hits_row.shape[0]
+    pos = jnp.arange(s, dtype=jnp.int32)
+    dist = jnp.mod(pos - clock, s)
+    score = hits_row.astype(jnp.int32) * s + dist
+
+    empty = ~valid
+    has_empty = empty.any()
+    first_empty = jnp.argmax(empty).astype(jnp.int32)
+
+    clean = valid & ~dirty
+    use_clean = jnp.logical_and(clean_first, clean.any())
+    eligible = jnp.where(use_clean, clean, valid)
+
+    big = jnp.iinfo(jnp.int32).max
+    masked = jnp.where(eligible, score, big)
+    victim = jnp.argmin(masked).astype(jnp.int32)
+    t_evict = masked[victim]
+
+    # Sweep decrements for eligible non-victim slots: slots with dist < dist_v
+    # are visited h_v + 1 times before eviction, others h_v times.
+    h_v = hits_row[victim]
+    visits = jnp.where(dist < dist[victim], h_v + 1, h_v)
+    dec_hits = jnp.maximum(hits_row - jnp.where(eligible, visits, 0), 0)
+    dec_hits = dec_hits.at[victim].set(0)
+    new_clock = jnp.mod(pos[victim] + 1, s)
+
+    victim = jnp.where(has_empty, first_empty, victim)
+    new_hits = jnp.where(has_empty, hits_row, dec_hits)
+    new_clock = jnp.where(has_empty, clock, new_clock)
+    del t_evict
+    return victim, new_hits, new_clock
+
+
+def insert(state: CacheState, set_idx: jax.Array, tag: jax.Array, dirty: jax.Array,
+           clean_first: bool = True):
+    """Insert ``tag`` into ``set_idx`` (caller guarantees it is absent).
+
+    Returns (victim_tag, victim_dirty, slot, new_state). victim_tag == EMPTY
+    when a free slot was claimed; victim_dirty indicates a required writeback
+    (the stall the flusher exists to prevent).
+    """
+    hits_row = state.hits[set_idx]
+    tags_row = state.tags[set_idx]
+    dirty_row = state.dirty[set_idx]
+    valid = tags_row != EMPTY
+    slot, new_hits_row, new_clock = _evict_analytic(
+        hits_row, state.clock[set_idx], valid, dirty_row, clean_first)
+    victim_tag = tags_row[slot]
+    victim_dirty = jnp.logical_and(victim_tag != EMPTY, dirty_row[slot])
+    new_state = CacheState(
+        tags=state.tags.at[set_idx, slot].set(tag),
+        hits=state.hits.at[set_idx].set(new_hits_row.at[slot].set(0)),
+        dirty=state.dirty.at[set_idx, slot].set(dirty),
+        clock=state.clock.at[set_idx].set(new_clock),
+    )
+    return victim_tag, victim_dirty, slot, new_state
+
+
+def mark_dirty(state: CacheState, set_idx, slot, value=True) -> CacheState:
+    return state._replace(dirty=state.dirty.at[set_idx, slot].set(value))
+
+
+def clean_slot(state: CacheState, set_idx, slot, expect_tag) -> CacheState:
+    """Flush completion: clear dirty iff the slot still holds ``expect_tag``
+    (paper §3.3.2 staleness rule (i): the page may have been evicted)."""
+    ok = state.tags[set_idx, slot] == expect_tag
+    return state._replace(
+        dirty=state.dirty.at[set_idx, slot].set(jnp.logical_and(state.dirty[set_idx, slot], ~ok)))
+
+
+# ---------------------------------------------------------------------------
+# Flush candidate selection (paper §3.3) — all sets at once.
+# ---------------------------------------------------------------------------
+
+def select_flush_candidates(state: CacheState, trigger: int, per_set: int):
+    """For every set with > ``trigger`` dirty pages, pick the ``per_set`` dirty
+    pages with the highest flush scores.
+
+    Returns (set_mask (num_sets,), slots (num_sets, per_set) int32 with -1
+    padding, scores (num_sets, per_set)). Vectorized: this is the computation
+    the ``flush_score`` Pallas kernel accelerates for very large caches.
+    """
+    fs = flush_scores(state)
+    eligible = state.dirty & (state.tags != EMPTY)
+    masked = jnp.where(eligible, fs, -1)
+    scores, slots = jax.lax.top_k(masked, per_set)
+    slots = jnp.where(scores >= 0, slots.astype(jnp.int32), -1)
+    set_mask = dirty_counts(state) > trigger
+    slots = jnp.where(set_mask[:, None], slots, -1)
+    return set_mask, slots, scores

@@ -1,0 +1,461 @@
+"""End-to-end SAFS simulation (paper §3/§4.2): SA-cache + dirty-page flusher +
+dual-priority queues in front of the GC-afflicted SSD array of ``gc_sim``.
+
+One event loop, three layers:
+
+  app ops --(CPU pool)--> SA-cache --(miss/writeback)--> DualQueue --> SSDServer
+                              |                              ^
+                              +---- DirtyPageFlusher --------+   (low priority)
+
+The ``flusher=False`` baseline is the paper's "cached I/O without the dirty
+page flusher": identical cache and queues, but dirty pages are written back
+only on demand (dirty-victim eviction), on the high-priority queue, with the
+application blocked — exactly the configuration Figures 3-5 compare against.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import policies
+from .flusher import DirtyPageFlusher, FlushRequest, StalenessChecker
+from .gc_sim import SSDParams, SSDServer, ZipfSampler, _mix64
+from .io_queues import HIGH, LOW, DualQueue, IORequest
+
+
+# ---------------------------------------------------------------------------
+# Numpy SA-cache (paper §3.1) — the CacheView the flusher drives.
+# ---------------------------------------------------------------------------
+
+class NumpySACache:
+    """Pure-python SA-cache tuned for the DES hot path (sets are 12-wide, so
+    python lists beat numpy's per-call overhead by ~10x). Semantics are
+    identical to ``policies.py`` — property-tested in tests/test_policies.py.
+    """
+
+    def __init__(self, num_sets: int, set_size: int = policies.SET_SIZE,
+                 n_devices: int = 1, clean_first: bool = True):
+        self.num_sets, self.set_size = num_sets, set_size
+        self.n_devices = n_devices
+        self.clean_first = clean_first
+        self.tags = [[-1] * set_size for _ in range(num_sets)]
+        self.hits = [[0] * set_size for _ in range(num_sets)]
+        self.dirty = [[False] * set_size for _ in range(num_sets)]
+        self.clock = [0] * num_sets
+        self._dirty_n = [0] * num_sets
+        self.lookups = 0
+        self.hit_count = 0
+
+    def set_of(self, tag: int) -> int:
+        return _mix64(tag * 2 + 1) % self.num_sets
+
+    # -- basic ops ----------------------------------------------------------
+    def lookup(self, tag: int, touch: bool = True):
+        s = self.set_of(tag)
+        self.lookups += 1
+        try:
+            slot = self.tags[s].index(tag)
+        except ValueError:
+            return s, -1
+        self.hit_count += 1
+        if touch:
+            h = self.hits[s][slot]
+            if h < 15:
+                self.hits[s][slot] = h + 1
+        return s, slot
+
+    def _victim(self, s: int):
+        """Analytic GClock sweep (clean-first): victim = argmin distance
+        score among eligible slots; decrement swept hit counts."""
+        tags, hits, dirty = self.tags[s], self.hits[s], self.dirty[s]
+        ss, hand = self.set_size, self.clock[s]
+        for slot in range(ss):
+            if tags[slot] == -1:
+                return slot
+        eligible = None
+        if self.clean_first:
+            eligible = [i for i in range(ss) if not dirty[i]]
+            if not eligible:
+                eligible = None
+        idxs = eligible if eligible is not None else range(ss)
+        best, best_score, best_dist = -1, 1 << 60, 0
+        for i in idxs:
+            d = (i - hand) % ss
+            sc = hits[i] * ss + d
+            if sc < best_score:
+                best, best_score, best_dist = i, sc, d
+        hv = hits[best]
+        for i in idxs:
+            d = (i - hand) % ss
+            visits = hv + 1 if d < best_dist else hv
+            if visits:
+                hits[i] = max(hits[i] - visits, 0)
+        hits[best] = 0
+        self.clock[s] = (best + 1) % ss
+        return best
+
+    def insert(self, tag: int, dirty: bool):
+        """Returns (set, slot, victim_tag, victim_dirty)."""
+        s = self.set_of(tag)
+        slot = self._victim(s)
+        victim_tag = self.tags[s][slot]
+        victim_dirty = victim_tag != -1 and self.dirty[s][slot]
+        if victim_dirty:
+            self._dirty_n[s] -= 1
+        self.tags[s][slot] = tag
+        self.hits[s][slot] = 0
+        self.dirty[s][slot] = dirty
+        if dirty:
+            self._dirty_n[s] += 1
+        return s, slot, victim_tag, victim_dirty
+
+    def mark_dirty(self, s: int, slot: int, value: bool = True):
+        if self.dirty[s][slot] != value:
+            self._dirty_n[s] += 1 if value else -1
+            self.dirty[s][slot] = value
+
+    # -- scoring (paper §3.3.1) ----------------------------------------------
+    def _flush_scores(self, s: int) -> list[int]:
+        tags, hits = self.tags[s], self.hits[s]
+        ss, hand = self.set_size, self.clock[s]
+        scored = []
+        for i in range(ss):
+            if tags[i] == -1:
+                continue
+            scored.append((hits[i] * ss + ((i - hand) % ss), i))
+        scored.sort()
+        fs = [-1] * ss
+        for rank, (_, i) in enumerate(scored):
+            fs[i] = ss - 1 - rank
+        return fs
+
+    # -- CacheView protocol (flusher) ----------------------------------------
+    def dirty_count(self, set_idx: int) -> int:
+        return self._dirty_n[set_idx]
+
+    def flush_candidates(self, set_idx: int):
+        if not self._dirty_n[set_idx]:
+            return []
+        fs = self._flush_scores(set_idx)
+        dirty, tags = self.dirty[set_idx], self.tags[set_idx]
+        out = [(slot, tags[slot], fs[slot]) for slot in range(self.set_size)
+               if dirty[slot] and tags[slot] != -1]
+        out.sort(key=lambda t: -t[2])
+        return out
+
+    def device_of(self, tag: int) -> int:
+        return tag % self.n_devices
+
+    def flush_score_of(self, set_idx: int, slot: int) -> int:
+        return self._flush_scores(set_idx)[slot]
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hit_count / max(self.lookups, 1)
+
+
+# ---------------------------------------------------------------------------
+# SAFS workload / results
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SAFSWorkload:
+    read_frac: float = 0.0
+    dist: str = "uniform"          # "uniform" | "zipf"
+    zipf_s: float = 0.99
+    unaligned: bool = False        # 128 B writes: read-update-write on miss
+    concurrency: int = 576         # in-flight app ops (async: 32 x n_ssds)
+    virtual_scale: int = 512
+
+
+@dataclass
+class SAFSResults:
+    app_iops: float
+    hit_rate: float
+    ssd_page_writes: int           # programs actually issued to SSDs
+    flush_writes: int
+    demand_writes: int             # dirty-victim (application-blocking)
+    ssd_reads: int
+    stale_discards: int
+    app_ops: int
+    mean_latency: float
+    sim_time: float
+    util: np.ndarray
+
+
+_CPU_DONE, _SSD_DONE = 0, 1
+
+
+class _Device:
+    """SSDServer + DualQueue + NCQ admission for the SAFS loop."""
+
+    def __init__(self, server: SSDServer, queue: DualQueue):
+        self.server = server
+        self.queue = queue
+        self.admitted: list[IORequest] = []
+        self.pending_writes: dict[int, int] = {}
+
+
+class SAFSSim:
+    def __init__(self, n_ssds: int = 18, ssd: SSDParams = SSDParams(),
+                 occupancy: float = 0.8, workload: SAFSWorkload = SAFSWorkload(),
+                 cache_frac: float = 0.1, use_flusher: bool = True,
+                 clean_first: bool = True, score_threshold: int = 2,
+                 t_cpu: float = 10e-6, n_cpu: int = 16, seed: int = 0,
+                 reserved_slots: int = policies.RESERVED_SLOTS):
+        self.n = n_ssds
+        self.p = ssd
+        self.wl = workload
+        self.rng = np.random.default_rng(seed)
+        self.t_cpu, self.n_cpu = t_cpu, n_cpu
+        self.use_flusher = use_flusher
+
+        self.devices = [
+            _Device(SSDServer(ssd, occupancy, self.rng),
+                    DualQueue(max_inflight=ssd.device_slots, reserved=reserved_slots))
+            for _ in range(n_ssds)
+        ]
+        live_per_ssd = self.devices[0].server.ftl.live_lbas
+        self.n_live = live_per_ssd * n_ssds
+        cache_pages = int(self.n_live * cache_frac)
+        num_sets = max(cache_pages // policies.SET_SIZE, 8)
+        self.cache = NumpySACache(num_sets, policies.SET_SIZE, n_ssds, clean_first)
+        # Paper cap is 2048 x n_devices, sized for a production cache (hundreds
+        # of GB). Scale it with our scaled-down cache so queue residence time
+        # stays well below cache residence time (otherwise flushes race their
+        # own page's eviction, which the real system never does).
+        flush_cap = min(policies.MAX_PENDING_FLUSH_PER_DEV,
+                        max(cache_pages // (8 * n_ssds), 64))
+        self.flusher = (DirtyPageFlusher(self.cache, n_ssds,
+                                         max_pending_per_dev=flush_cap)
+                        if use_flusher else None)
+        self.checker = StalenessChecker(
+            is_evicted=lambda r: int(self.cache.tags[r.set_idx][r.slot]) != r.tag,
+            is_clean=lambda r: not bool(self.cache.dirty[r.set_idx][r.slot]),
+            current_score=lambda r: self.cache.flush_score_of(r.set_idx, r.slot),
+            score_threshold=score_threshold,
+        )
+        if workload.dist == "zipf":
+            self._zipf = ZipfSampler(self.n_live * workload.virtual_scale,
+                                     workload.zipf_s, self.rng)
+
+        # counters
+        self.flush_writes = 0
+        self.demand_writes = 0
+        self.ssd_reads = 0
+        self.app_completed = 0
+        self.now = 0.0
+        self._heap: list = []
+        self._seq = 0
+        self._cpu_free = [0.0] * n_cpu
+
+    # -- workload -------------------------------------------------------------
+    def _sample_tag(self) -> int:
+        if self.wl.dist == "zipf":
+            return _mix64(self._zipf.sample()) % self.n_live
+        return int(self.rng.integers(self.n_live))
+
+    # -- event helpers ----------------------------------------------------------
+    def _push(self, t: float, kind: int, arg) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, arg))
+        self._seq += 1
+
+    def _schedule_cpu(self, fn) -> None:
+        i = min(range(self.n_cpu), key=lambda j: self._cpu_free[j])
+        start = max(self.now, self._cpu_free[i])
+        self._cpu_free[i] = start + self.t_cpu
+        self._push(start + self.t_cpu, _CPU_DONE, fn)
+
+    # -- device helpers ----------------------------------------------------------
+    def _submit(self, dev_i: int, req: IORequest) -> None:
+        d = self.devices[dev_i]
+        payload = req.payload
+        if payload["op"] == "write":
+            lba = payload["lba"]
+            payload["coal"] = d.pending_writes.get(lba, 0) > 0
+            d.pending_writes[lba] = d.pending_writes.get(lba, 0) + 1
+        d.queue.submit(req)
+        self._kick(dev_i)
+
+    def _kick(self, dev_i: int) -> None:
+        """Admit queued requests into the NCQ and start service / GC."""
+        d = self.devices[dev_i]
+        s = d.server
+        while (req := d.queue.pop_next()) is not None:
+            d.admitted.append(req)
+        if s.busy:
+            return
+        if s.ftl.need_gc():
+            dt = s.gc_episode_time()
+            s.busy = True
+            s.in_gc = True
+            s.gc_time += dt
+            s.busy_time += dt
+            self._push(self.now + dt, _SSD_DONE, dev_i)
+            return
+        if d.admitted:
+            head = d.admitted[0].payload
+            if head["op"] == "write":
+                dt = self.p.t_coalesce if head.get("coal") else s.service_time(False)
+            else:
+                dt = s.service_time(True)
+            s.busy = True
+            s.busy_time += dt
+            self._push(self.now + dt, _SSD_DONE, dev_i)
+
+    def _on_ssd_done(self, dev_i: int) -> None:
+        d = self.devices[dev_i]
+        s = d.server
+        s.busy = False
+        if s.in_gc:
+            s.in_gc = False
+            self._kick(dev_i)
+            return
+        req = d.admitted.pop(0)
+        payload = req.payload
+        if payload["op"] == "write":
+            lba = payload["lba"]
+            c = d.pending_writes[lba] - 1
+            if c:
+                d.pending_writes[lba] = c
+            else:
+                del d.pending_writes[lba]
+            if not payload.get("coal"):
+                s.ftl.user_write(lba)
+            s.served_writes += 1
+        else:
+            s.served_reads += 1
+            self.ssd_reads += 1
+        d.queue.complete(req)
+        self._kick(dev_i)
+
+    # -- cache/flusher plumbing ---------------------------------------------
+    def _pump_flusher(self, budget: int = 8) -> None:
+        if not self.flusher:
+            return
+        for fr in self.flusher.make_requests(budget, max_visits=8):
+            dev = fr.device
+            req = IORequest(
+                payload={"op": "write", "lba": fr.tag // self.n, "flush": fr},
+                priority=LOW,
+                is_stale=lambda p, fr=fr: self.checker(fr),
+                on_complete=lambda p, fr=fr: self._on_flush_complete(fr),
+                on_discard=lambda p, fr=fr: self.flusher.note_flush_discarded(fr),
+            )
+            self._submit(dev, req)
+
+    def _on_flush_complete(self, fr: FlushRequest) -> None:
+        self.flush_writes += 1
+        if int(self.cache.tags[fr.set_idx][fr.slot]) == fr.tag:
+            self.cache.mark_dirty(fr.set_idx, fr.slot, False)
+        self.flusher.note_flush_done(fr)
+        self._pump_flusher(budget=2)
+
+    def _note_write(self, set_idx: int) -> None:
+        if self.flusher:
+            self.flusher.note_write(set_idx)
+            if not self.flusher.saturated():
+                self._pump_flusher(budget=4)
+
+    # -- app op state machine ---------------------------------------------------
+    def _complete_op(self, t_start: float) -> None:
+        self.app_completed += 1
+        if self._measuring:
+            self._m_ops += 1
+            self._m_lat += self.now - t_start
+        self._spawn_op()
+
+    def _spawn_op(self) -> None:
+        tag = self._sample_tag()
+        is_read = bool(self.rng.random() < self.wl.read_frac)
+        t0 = self.now
+        self._schedule_cpu(lambda: self._process_op(tag, is_read, t0))
+
+    def _process_op(self, tag: int, is_read: bool, t0: float) -> None:
+        s, slot = self.cache.lookup(tag)
+        if slot >= 0:
+            if not is_read:
+                already = self.cache.dirty[s][slot]
+                self.cache.mark_dirty(s, slot)
+                if not already:
+                    self._note_write(s)
+            self._complete_op(t0)
+            return
+        # miss: allocate a frame (clean-first GClock)
+        needs_fill = is_read or self.wl.unaligned
+        s, slot, victim_tag, victim_dirty = self.cache.insert(tag, dirty=not needs_fill and not is_read)
+        dev = tag % self.n
+
+        def after_fill(_=None):
+            if not is_read:
+                self.cache.mark_dirty(s, slot)
+                self._note_write(s)
+            self._complete_op(t0)
+
+        def do_fill(_=None):
+            if needs_fill:
+                self._submit(dev, IORequest(
+                    payload={"op": "read", "lba": tag // self.n},
+                    priority=HIGH, on_complete=after_fill))
+            else:
+                if not is_read:
+                    self._note_write(s)
+                self._complete_op(t0)
+
+        if victim_dirty:
+            # demand writeback: the application op blocks on it (paper §3.3)
+            self.demand_writes += 1
+            vdev = victim_tag % self.n
+            self._submit(vdev, IORequest(
+                payload={"op": "write", "lba": victim_tag // self.n},
+                priority=HIGH, on_complete=do_fill))
+        else:
+            do_fill()
+
+    # -- main loop -------------------------------------------------------------
+    def run(self, measure_ops: int, warmup_ops: int | None = None) -> SAFSResults:
+        if warmup_ops is None:
+            warmup_ops = measure_ops // 2
+        self._measuring = False
+        self._m_ops = 0
+        self._m_lat = 0.0
+        total = warmup_ops + measure_ops
+        for _ in range(self.wl.concurrency):
+            self._spawn_op()
+        t_measure_start = 0.0
+        wr0 = rd0 = fl0 = dm0 = st0 = 0
+        hits0 = lk0 = 0
+        while self.app_completed < total and self._heap:
+            self.now, _, kind, arg = heapq.heappop(self._heap)
+            if kind == _CPU_DONE:
+                arg()
+            else:
+                self._on_ssd_done(arg)
+            if not self._measuring and self.app_completed >= warmup_ops:
+                self._measuring = True
+                t_measure_start = self.now
+                wr0 = sum(d.server.ftl.writes for d in self.devices)
+                rd0 = self.ssd_reads
+                fl0 = self.flush_writes
+                dm0 = self.demand_writes
+                st0 = sum(d.queue.stats.discarded_stale for d in self.devices)
+                hits0, lk0 = self.cache.hit_count, self.cache.lookups
+                for d in self.devices:
+                    d.server.busy_time = 0.0
+                    d.server.gc_time = 0.0
+        span = max(self.now - t_measure_start, 1e-9)
+        return SAFSResults(
+            app_iops=self._m_ops / span,
+            hit_rate=(self.cache.hit_count - hits0) / max(self.cache.lookups - lk0, 1),
+            ssd_page_writes=sum(d.server.ftl.writes for d in self.devices) - wr0,
+            flush_writes=self.flush_writes - fl0,
+            demand_writes=self.demand_writes - dm0,
+            ssd_reads=self.ssd_reads - rd0,
+            stale_discards=sum(d.queue.stats.discarded_stale for d in self.devices) - st0,
+            app_ops=self._m_ops,
+            mean_latency=self._m_lat / max(self._m_ops, 1),
+            sim_time=span,
+            util=np.array([d.server.busy_time / span for d in self.devices]),
+        )

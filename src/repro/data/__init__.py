@@ -1,0 +1,3 @@
+from .pipeline import Prefetcher, SyntheticLM, make_global_batch
+
+__all__ = ["Prefetcher", "SyntheticLM", "make_global_batch"]

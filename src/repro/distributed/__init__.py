@@ -1,0 +1,8 @@
+from .sharding import (MeshAxes, cache_specs, data_spec, param_specs,
+                       shape_shardings)
+from .collectives import (CompressionState, cross_pod_grad_reduce,
+                          init_compression)
+
+__all__ = ["MeshAxes", "cache_specs", "data_spec", "param_specs",
+           "shape_shardings", "CompressionState", "compressed_psum",
+           "init_compression"]

@@ -1,0 +1,90 @@
+"""Distributed-optimization tricks: compressed cross-pod gradient reduction.
+
+At 1000+ node scale the inter-pod links (DCN or long ICI hops) are the
+gradient-allreduce bottleneck: the intra-pod reduction runs at full ICI
+bandwidth while the pod axis crawls. The standard trick — int8 gradient
+compression with error feedback — is applied ONLY to the pod axis:
+
+    within-pod: full-precision psum over ("data",)        (fast links)
+    cross-pod:  quantize int8 (per-row scale) + error feedback,
+                all_gather over "pod" + local dequant-sum  (slow links)
+
+Bytes on the slow links drop ~2x for bf16 grads (int8 payload + f16-scale
+sidecar vs a bf16 ring all-reduce) and 4x vs f32, at a quantization error
+that error feedback folds into the next step (Seide et al., 1-bit SGD
+lineage). Used by ``launch/train.py`` under ``--compress-grads``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+
+class CompressionState(NamedTuple):
+    """Error-feedback residual, one leaf per gradient leaf."""
+
+    residual: Any
+
+
+def init_compression(grads: Any) -> CompressionState:
+    return CompressionState(
+        residual=jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads))
+
+
+def _quantize(x: jax.Array):
+    """Symmetric per-tensor-row int8. x: f32 (..., d)."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def _ef_leaf(g: jax.Array, res: jax.Array, axis: str):
+    """Error-feedback compressed psum of one leaf over ``axis``."""
+    x = g.astype(jnp.float32) + res
+    flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+    q, scale = _quantize(flat)
+    new_res = (flat - _dequantize(q, scale)).reshape(x.shape)
+    # all_gather int8 + local dequant-sum == lossless-after-quantization AR
+    qg = jax.lax.all_gather(q, axis)                 # (pods, rows, d)
+    sg = jax.lax.all_gather(scale, axis)
+    summed = (qg.astype(jnp.float32) * sg).sum(axis=0)
+    return summed.reshape(x.shape).astype(g.dtype), new_res
+
+
+def cross_pod_grad_reduce(grads: Any, state: CompressionState, mesh: Mesh,
+                          *, data_axis: str = "data", pod_axis: str = "pod",
+                          compress: bool = True):
+    """Mean-reduce grads over (pod, data): full precision within a pod,
+    int8 + error feedback across pods. Returns (grads, new_state).
+
+    Call inside shard_map (or any SPMD context) where grads are replicated
+    per (pod, data) shard — i.e. after jax.grad over the local batch.
+    """
+    n_pod = mesh.shape.get(pod_axis, 1)
+    n_data = mesh.shape.get(data_axis, 1)
+
+    def leaf(g, r):
+        g = jax.lax.psum(g, data_axis)
+        if n_pod == 1:
+            return g / n_data, r
+        if not compress:
+            return jax.lax.psum(g, pod_axis) / (n_data * n_pod), r
+        s, new_r = _ef_leaf(g, r, pod_axis)
+        return s / (n_data * n_pod), new_r
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(state.residual)
+    outs = [leaf(g, r) for g, r in zip(flat_g, flat_r)]
+    new_grads = treedef.unflatten([o[0] for o in outs])
+    new_res = treedef.unflatten([o[1] for o in outs])
+    return new_grads, CompressionState(residual=new_res)

@@ -1,0 +1,206 @@
+"""Sharding rules: parameter/cache pytrees -> PartitionSpec trees.
+
+Strategy (DESIGN.md §4):
+  * FSDP (ZeRO-3) over the ``data`` axis — and over ``("pod", "data")`` on the
+    multi-pod mesh — on the *non*-TP dimension of every matmul weight;
+  * tensor parallelism over ``model``: attention heads / d_ff / d_inner /
+    vocab;
+  * MoE expert dim over ``data`` (EP), d_ff over ``model`` — matching the
+    shard_map specs inside ``moe_ffn``;
+  * small vectors (norms, biases, A_log, ...) replicated.
+
+Rules are path-based so they survive arbitrary nesting (stacked blocks add a
+leading ``n_blocks`` dim -> every spec gets a ``None`` prepended when the
+leaf has one more dim than its rule).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """Logical roles of mesh axes. fsdp may span several physical axes."""
+
+    fsdp: tuple[str, ...] = ("data",)
+    tp: str = "model"
+    ep: str = "data"
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh) -> "MeshAxes":
+        if "pod" in mesh.shape:
+            return cls(fsdp=("pod", "data"))
+        return cls()
+
+
+# (path regex, spec builder). First match wins. ``F`` = fsdp axes, ``T`` = tp.
+def _rules(ax: MeshAxes):
+    F, T = ax.fsdp, ax.tp
+    E = ax.ep
+    return [
+        (r"embed$", P(T, F)),                     # (V, D): vocab over TP
+        (r"lm_head$", P(F, T)),
+        (r"\b(wq|wk|wv)$", P(F, T)),              # (D, H*hd)
+        (r"\bwo$", P(T, F)),                      # (H*hd, D)
+        (r"\b(w_gate|w_up)$", P(F, T)),           # dense mlp (D, F)
+        (r"\bw_down$", P(T, F)),                  # (F, D)
+        (r"moe/router$", P()),                    # (D, E) small
+        (r"moe/(w_gate|w_up)$", P(E, None, T)),   # (E, D, F)
+        (r"moe/w_down$", P(E, T, None)),          # (E, F, D)
+        (r"\b(in_x|in_z|in_dt)$", P(F, T)),       # mamba: d_inner/heads over TP
+        (r"\bin_bc$", P(F, None)),                # shared B/C: replicated cols
+        (r"\bconv_x_w$", P(None, T)),
+        (r"\bconv_x_b$", P(T)),
+        (r"\bout_proj$", P(T, F)),                # (d_inner, D)
+        (r"", P()),                               # norms, scalars, the rest
+    ]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(k.name)
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path_s: str, ndim: int, rules) -> P:
+    for pat, spec in rules:
+        if re.search(pat, path_s):
+            if len(spec) > ndim:      # rule for a 2D weight hit a 1D leaf etc.
+                spec = P(*spec[-ndim:]) if ndim else P()
+            pad = ndim - len(spec)
+            return P(*([None] * pad), *spec) if pad else spec
+    return P()
+
+
+def _fix_divisibility(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
+    """Drop (or shrink) axis assignments that don't divide the dim evenly
+    (e.g. whisper's vocab 51865 can't shard 16 ways)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        size = 1
+        for a in axes:
+            n = mesh.shape[a]
+            if shape[i] % (size * n) == 0:
+                kept.append(a)
+                size *= n
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def param_specs(params: Any, mesh: Mesh, *, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree for a model parameter pytree.
+
+    ``fsdp=False`` (serving layout): weights stay TP-sharded over ``model``
+    but REPLICATED over the data axes — no per-step weight all-gather on the
+    decode critical path (§Perf: 6.5 GB/token saved on gemma2 decode_32k).
+    Training keeps ZeRO-3 FSDP (weights resident 1/(data*pod), gathered per
+    layer inside the scan)."""
+    ax = MeshAxes.for_mesh(mesh)
+    rules = _rules(ax)
+
+    def leaf_spec(path, leaf):
+        spec = _spec_for(_path_str(path), leaf.ndim, rules)
+        if not fsdp:
+            spec = P(*[None if entry is not None and
+                       set(entry if isinstance(entry, tuple) else (entry,))
+                       <= set(ax.fsdp) else entry
+                       for entry in spec])
+        return _fix_divisibility(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def data_spec(mesh: Mesh, batch: int) -> P:
+    """Token batch spec: batch over every data-parallel axis that divides."""
+    ax = MeshAxes.for_mesh(mesh)
+    dp = [a for a in ax.fsdp]
+    size = 1
+    for a in dp:
+        size *= mesh.shape[a]
+    if batch % size == 0 and size > 1:
+        return P(tuple(dp))
+    if batch % mesh.shape[dp[-1]] == 0:
+        return P(dp[-1])
+    return P()
+
+
+def cache_specs(cache: Any, mesh: Mesh, batch: int) -> Any:
+    """Decode-cache specs. Rank-based rules over stacked leaves:
+
+      (nb, B, S, KV, hd)  attn KV      -> batch over dp, seq over tp
+      (nb, B, S)          kpos         -> same
+      (nb, B, H, N, hd)   ssm state    -> batch over dp, heads over tp
+      (nb, B, cw-1, C)    conv state   -> batch over dp, channels over tp
+      (B,)                lengths      -> replicated
+
+    For global_batch == 1 (long_500k) the KV sequence dim takes every mesh
+    axis instead — all 256/512 chips cooperate on one sequence
+    (flash-decoding-style sequence parallelism, GSPMD inserts the combine).
+    """
+    ax = MeshAxes.for_mesh(mesh)
+    dp = tuple(ax.fsdp)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    tp = ax.tp
+    tp_size = mesh.shape[tp]
+    batch_ax = dp if (batch % dp_size == 0 and dp_size > 1) else None
+
+    def leaf_spec(path, leaf):
+        name = _path_str(path)
+        nd = leaf.ndim
+        if name.endswith("lengths"):
+            return P()
+        seq_ax: Any = tp
+        if batch_ax is None:
+            seq_ax = (*dp, tp)
+        if re.search(r"(^|/)(k|v)$", name) and nd == 5:
+            s = leaf.shape[2]
+            if s % (tp_size if batch_ax is not None else dp_size * tp_size) == 0:
+                return P(None, batch_ax, seq_ax, None, None)
+            return P(None, batch_ax, None, None, None)
+        if name.endswith("kpos") and nd == 3:
+            s = leaf.shape[2]
+            if s % (tp_size if batch_ax is not None else dp_size * tp_size) == 0:
+                return P(None, batch_ax, seq_ax)
+            return P(None, batch_ax, None)
+        if name.endswith("ssm") and nd == 5:
+            h = leaf.shape[2]
+            return P(None, batch_ax, tp if h % tp_size == 0 else None, None, None)
+        if name.endswith("conv_x") and nd == 4:
+            c = leaf.shape[3]
+            return P(None, batch_ax, None, tp if c % tp_size == 0 else None)
+        if name.endswith("conv_bc") and nd == 4:
+            return P(None, batch_ax, None, None)
+        if re.search(r"cross", name) and nd == 5:
+            return P(None, batch_ax, None, None, None)
+        # fallback: batch over dp when a dim matches
+        return P(*[batch_ax if leaf.shape[i] == batch and i < 2 else None
+                   for i in range(nd)])
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def shape_shardings(specs: Any, mesh: Mesh) -> Any:
+    """Attach NamedShardings to a spec tree."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

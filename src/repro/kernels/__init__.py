@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Three kernels, each with the required triple:
+  <name>.py  -- pl.pallas_call + explicit BlockSpec VMEM tiling
+  ops.py     -- jit'd public wrappers (interpret=True on CPU backends)
+  ref.py     -- pure-jnp oracles the tests allclose against
+
+flash_attention  train/prefill attention (causal/SWA/softcap/GQA) -- removes
+                 the S^2 logits HBM round-trip that dominates the baseline
+                 roofline memory term.
+paged_attention  decode attention over the SA-cache-managed paged KV pool
+                 (scalar-prefetched page table -- the serving engine's data
+                 plane).
+flush_score      the paper's SS3.3.1 GClock distance-score + rank over page
+                 sets, vectorized sets-to-sublanes (the host-side hot loop of
+                 SAFS adapted to the TPU VPU).
+"""

@@ -1,0 +1,139 @@
+"""Flash attention (TPU Pallas): VMEM-tiled online-softmax attention.
+
+Block decomposition: grid = (batch, q_heads, Sq/block_q, Skv/block_kv), the
+kv axis innermost ("arbitrary" semantics — sequential accumulation), with
+f32 scratch accumulators (m, l, acc) living in VMEM across kv steps.
+
+VMEM working set per grid step (defaults block_q = block_kv = 512, hd = 128):
+  q (512x128 bf16)  128 KiB      k,v (512x128 bf16)  2x128 KiB
+  acc (512x128 f32) 256 KiB      m,l (512) ~4 KiB    s/p (512x512 f32) 1 MiB
+≈ 1.7 MiB — comfortably under the ~16 MiB/core VMEM budget, MXU-aligned
+(every matmul dim a multiple of 128).
+
+GQA never replicates K/V in HBM: the BlockSpec index_map folds the
+q-head -> kv-head mapping (h // group) so each kv head is streamed once per
+group. Causal/sliding-window masking is positional, computed in-kernel; fully
+masked kv blocks still run (documented; the hillclimbed serve path skips them
+by shrinking the kv grid — see ops.flash_attention's `kv_upper` bound).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, window: int, softcap: float,
+                  block_q: int, block_kv: int, kv_len: int, q_offset: int,
+                  num_kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                     # (bkv, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) \
+        + q_offset
+    kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = kpos < kv_len
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                                     # (bq,)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    # rows with every key masked: exp(NEG_INF - NEG_INF) = 1 — zero them
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finish():
+        l = l_scr[...]
+        o_ref[0, 0] = (acc_scr[...] /
+                         jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "block_q", "block_kv",
+                     "q_offset", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 512,
+                    block_kv: int = 512, q_offset: int = 0,
+                    interpret: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Skv, KV, hd) -> (B, Sq, H, hd).
+
+    H must be a multiple of KV (GQA group size). Sequence lengths are padded
+    to the block sizes internally; padded keys are masked out.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    assert h % kvh == 0
+    group = h // kvh
+    block_q = min(block_q, max(sq, 16))
+    block_kv = min(block_kv, max(skv, 16))
+    pad_q = (-sq) % block_q
+    pad_kv = (-skv) % block_kv
+    qt = jnp.moveaxis(q, 2, 1)                          # (B, H, Sq, hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    if pad_q:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_kv:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    nq = (sq + pad_q) // block_q
+    nkv = (skv + pad_kv) // block_kv
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=hd ** -0.5, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_kv=block_kv, kv_len=skv,
+        q_offset=q_offset, num_kv_blocks=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda bi, hi, qi, ki, g=group: (bi, hi // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = jnp.moveaxis(out, 1, 2)                       # (B, Sq+pad, H, hd)
+    return out[:, :sq]

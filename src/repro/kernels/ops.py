@@ -1,0 +1,32 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On CPU backends (this container) every kernel runs in interpret mode — the
+kernel body executes in Python op-by-op, validating the exact TPU program
+against the ref.py oracles. On TPU the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .flush_score import flush_scores as _flush_scores
+from .paged_attention import paged_attention as _paged
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash(q, k, v, **kw)
+
+
+def paged_attention(q, k_pages, v_pages, page_table, lengths, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _paged(q, k_pages, v_pages, page_table, lengths, **kw)
+
+
+def flush_scores(hits, clock, valid, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flush_scores(hits, clock, valid, **kw)

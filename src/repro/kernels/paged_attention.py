@@ -1,0 +1,108 @@
+"""Paged decode attention (TPU Pallas): one new token per sequence attends
+over its KV pages scattered through the SA-cache-managed HBM pool.
+
+The page table is a SCALAR-PREFETCH operand (pltpu.PrefetchScalarGridSpec):
+the index_map dereferences ``page_table[b, p]`` so the DMA engine streams
+exactly the pages this sequence owns — no gather materialization in HBM,
+which is the whole point of paged attention (the pool never has to be
+contiguous per sequence; the paper's set-associative placement stays).
+
+Grid = (B, max_pages), pages innermost (sequential online-softmax
+accumulation in VMEM scratch). VMEM per step (page = 256 tokens, KV = 16
+heads, hd = 128): k,v 2 x 1 MiB (bf16) + q/acc (H x hd f32) — ~3 MiB.
+Sequences shorter than max_pages x page mask the tail; whole pages past
+``lengths[b]`` are a skipped (early-exit ``pl.when``) DMA-only cost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(lengths_ref, table_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page: int, softcap: float,
+                  sm_scale: float, num_pages: int, group: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+    # pages fully past the sequence end contribute nothing — skip the math
+    @pl.when(p * page < length)
+    def _work():
+        q = q_ref[0].astype(jnp.float32) * sm_scale       # (H, hd)
+        k = k_ref[0].astype(jnp.float32)                  # (page, KV, hd)
+        v = v_ref[0].astype(jnp.float32)
+        h, hd = q.shape
+        kvh = k.shape[1]
+        qg = q.reshape(kvh, group, hd)
+        s = jnp.einsum("grd,pgd->grp", qg, k)             # (KV, group, page)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = p * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        mask = kpos < length
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_scr[...]                               # (KV, group)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        pr = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + pr.sum(axis=-1)
+        acc_scr[...] = (acc_scr[...] * corr[..., None]
+                        + jnp.einsum("grp,pgd->grd", pr, v))
+        m_scr[...] = m_new
+
+    @pl.when(p == num_pages - 1)
+    def _finish():
+        h, hd = q_ref.shape[1], q_ref.shape[2]
+        out = acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = out.reshape(h, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("softcap", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_table, lengths, *,
+                    softcap: float = 0.0, interpret: bool = False):
+    """q: (B, H, hd); k/v_pages: (P, page, KV, hd);
+    page_table: (B, max_pages) int32; lengths: (B,) -> (B, H, hd)."""
+    b, h, hd = q.shape
+    n_pool, page, kvh, _ = k_pages.shape
+    max_pages = page_table.shape[1]
+    group = h // kvh
+
+    kernel = functools.partial(
+        _paged_kernel, page=page, softcap=softcap, sm_scale=hd ** -0.5,
+        num_pages=max_pages, group=group)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # lengths, page_table
+        grid=(b, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, hd), lambda bi, pi, lens, tab: (bi, 0, 0)),
+            pl.BlockSpec((1, page, kvh, hd),
+                         lambda bi, pi, lens, tab: (tab[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, page, kvh, hd),
+                         lambda bi, pi, lens, tab: (tab[bi, pi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, hd), lambda bi, pi, lens, tab: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((kvh, group), jnp.float32),
+            pltpu.VMEM((kvh, group), jnp.float32),
+            pltpu.VMEM((kvh, group, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, hd), q.dtype),
+        interpret=interpret,
+    )(lengths, page_table, q, k_pages, v_pages)

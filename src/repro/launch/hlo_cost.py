@@ -1,0 +1,318 @@
+"""Loop-aware cost extraction from post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — a scan over
+80 layers reports 1/80th of the real FLOPs — and the CPU backend's
+"bytes accessed" reflects CPU fusion decisions, not TPU ones. The dry-run
+needs structural truth, so we parse the partitioned HLO ourselves:
+
+  * computation graph (ENTRY, while bodies/conditions, fusion calls),
+  * per-while trip counts (the `constant(N)` in the condition region —
+    jax scans always lower to 0..N counted loops),
+  * multiplicity roll-up: cost(instr) x prod(trip counts of enclosing loops),
+  * FLOPs from `dot` ops: 2 x |output| x prod(contracting dims)   (MXU work;
+    elementwise VPU flops are intentionally excluded, documented),
+  * collective bytes from all-reduce/all-gather/reduce-scatter/all-to-all/
+    collective-permute payload (per-device operand bytes in the partitioned
+    module — the per-chip link-roofline numerator),
+  * memory-proxy bytes: every materialized tensor's output bytes + dot and
+    collective operand reads (fusion bodies count once via the fusion's
+    output) — an upper-bound proxy for HBM traffic that is backend-fusion
+    independent *at the granularity XLA materialized buffers*.
+
+All shapes in the partitioned module are per-device, so every total this
+module returns is per-device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(
+    r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|s4|u4|"
+    r"pred|c64|c128)\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "while", "conditional", "iota"}
+
+
+def _dims(dims_s: str) -> list[int]:
+    return [int(d) for d in dims_s.split(",") if d]
+
+
+def _shapes_bytes(type_s: str) -> int:
+    return sum(
+        (int(np_prod(_dims(dims))) * _DTYPE_BYTES[dt])
+        for dt, dims in _SHAPE_RE.findall(type_s))
+
+
+def np_prod(xs):
+    out = 1
+    for x in xs:
+        out *= x
+    return out
+
+
+@dataclass
+class Instr:
+    name: str
+    type_s: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    raw: str = ""
+
+    @property
+    def out_bytes(self) -> int:
+        return _shapes_bytes(self.type_s)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list[Instr] = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)       # instr name -> type_s
+
+    @property
+    def root(self) -> "Instr | None":
+        return self.instrs[-1] if self.instrs else None
+
+
+_INSTR_RE = re.compile(r"^(?:ROOT )?%?([\w.\-]+) = (.*)$")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{$")
+_ATTR_CALL_RE = re.compile(
+    r"(body|condition|calls|to_apply|branch_computations)=\{?%?([\w.\-]+)")
+
+
+def _split_rhs(rhs: str):
+    """rhs = '<type> <opcode>(<operands>)<attrs>' -> (type, opcode, operands, attrs)."""
+    if rhs.startswith("("):                      # tuple type: match parens
+        depth = 0
+        for i, ch in enumerate(rhs):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        type_s, rest = rhs[:i + 1], rhs[i + 2:]
+    else:
+        sp = rhs.index(" ")
+        type_s, rest = rhs[:sp], rhs[sp + 1:]
+    par = rest.index("(")
+    opcode = rest[:par]
+    depth = 0
+    for j in range(par, len(rest)):
+        depth += rest[j] == "("
+        depth -= rest[j] == ")"
+        if depth == 0:
+            break
+    operand_s, attrs = rest[par + 1:j], rest[j + 1:]
+    operands = re.findall(r"%([\w.\-]+)", operand_s)
+    return type_s, opcode, operands, attrs
+
+
+def parse_hlo(text: str):
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(2))
+                comps[cur.name] = cur
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m or " = " not in line:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        try:
+            type_s, opcode, operands, attrs = _split_rhs(rhs)
+        except ValueError:
+            continue
+        cur.instrs.append(Instr(name, type_s, opcode, operands, attrs, rhs))
+        cur.shapes[name] = type_s
+    return comps, entry
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    """Trip count of a jax-lowered counted loop: the max integer constant in
+    the condition region (the `i < N` bound of a 0-based counted scan)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.raw)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_dims = []
+    for dt, dims in _SHAPE_RE.findall(ins.type_s):
+        out_dims = _dims(dims)
+        break
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+    if not m or not ins.operands:
+        return 2.0 * np_prod(out_dims)          # degenerate dot
+    lhs_shape_s = comp.shapes.get(ins.operands[0], "")
+    lhs_dims = []
+    for dt, dims in _SHAPE_RE.findall(lhs_shape_s):
+        lhs_dims = _dims(dims)
+        break
+    contract = 1
+    for d in _dims(m.group(1)):
+        if d < len(lhs_dims):
+            contract *= lhs_dims[d]
+    return 2.0 * np_prod(out_dims) * contract
+
+
+def _conv_flops(ins: Instr, comp: Computation) -> float:
+    """convolution: 2 x |out| x prod(kernel spatial) x in_channels/groups."""
+    out_dims = []
+    for dt, dims in _SHAPE_RE.findall(ins.type_s):
+        out_dims = _dims(dims)
+        break
+    if len(ins.operands) < 2:
+        return 2.0 * np_prod(out_dims)
+    rhs_shape_s = comp.shapes.get(ins.operands[1], "")
+    k_dims = []
+    for dt, dims in _SHAPE_RE.findall(rhs_shape_s):
+        k_dims = _dims(dims)
+        break
+    groups = 1
+    mg = re.search(r"feature_group_count=(\d+)", ins.attrs)
+    if mg:
+        groups = int(mg.group(1))
+    return 2.0 * np_prod(out_dims) * np_prod(k_dims[:-1]) / max(groups, 1) \
+        if k_dims else 2.0 * np_prod(out_dims)
+
+
+def analyze(text: str) -> dict:
+    """Returns per-device totals: flops, collective bytes (by op), memory
+    proxy bytes, loop info."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    # ---- multiplicity roll-up over the call graph -------------------------
+    mult: dict[str, float] = defaultdict(float)
+    fusion_called: set[str] = set()
+    loops: list[tuple[str, int]] = []
+
+    def visit(name: str, m: float):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        mult[name] += m
+        for ins in comp.instrs:
+            if ins.opcode == "while":
+                refs = dict(_ATTR_CALL_RE.findall(ins.attrs))
+                trip = _trip_count(comps, refs.get("condition", ""))
+                loops.append((ins.name, trip))
+                if "body" in refs:
+                    visit(refs["body"], m * trip)
+                if "condition" in refs:
+                    visit(refs["condition"], m * trip)
+            else:
+                for kind, ref in _ATTR_CALL_RE.findall(ins.attrs):
+                    if kind in ("calls", "to_apply", "branch_computations"):
+                        fusion_called.add(ref)
+                        visit(ref, m)
+
+    visit(entry, 1.0)
+
+    def _inplace_update_bytes(opn: Instr, c: Computation) -> float | None:
+        """In-place buffer updates write only their slice: DUS writes the
+        update operand; scatter writes the updates operand."""
+        if opn.opcode == "dynamic-update-slice" and len(opn.operands) >= 2:
+            return _shapes_bytes(c.shapes.get(opn.operands[1], ""))
+        if opn.opcode == "scatter" and len(opn.operands) >= 3:
+            return _shapes_bytes(c.shapes.get(opn.operands[2], ""))
+        return None
+
+    def _materialized_bytes(ins: Instr, comp: Computation) -> float:
+        """Output bytes an op physically WRITES on TPU. dynamic-update-slice
+        and scatter (scan residual stacking, KV-cache updates) write only
+        the update slice in place — including fusions whose root is a
+        convert/bitcast/copy chain over one (the CPU backend's bf16
+        emulation interposes a whole-buffer convert that TPU never does)."""
+        direct = _inplace_update_bytes(ins, comp)
+        if direct is not None:
+            return direct
+        if ins.opcode == "fusion":
+            refs = dict(_ATTR_CALL_RE.findall(ins.attrs))
+            called = comps.get(refs.get("calls", ""))
+            if called and called.root is not None:
+                r = called.root
+                hops = 0
+                while r is not None and hops < 4 and \
+                        r.opcode in ("convert", "bitcast", "copy"):
+                    nxt = None
+                    if r.operands:
+                        for cand in called.instrs:
+                            if cand.name == r.operands[0]:
+                                nxt = cand
+                                break
+                    r = nxt
+                    hops += 1
+                if r is not None:
+                    b = _inplace_update_bytes(r, called)
+                    if b is not None:
+                        return b
+        return float(ins.out_bytes)
+
+    flops = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_n = {k: 0 for k in _COLLECTIVES}
+    mem = 0.0
+    for name, comp in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                flops += m * _dot_flops(ins, comp)
+            elif ins.opcode == "convolution":
+                flops += m * _conv_flops(ins, comp)
+            base = ins.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not ins.opcode.endswith("-done"):
+                b = ins.out_bytes
+                # all-gather output already includes the gather factor;
+                # all-reduce payload = operand size (== output size).
+                coll[base] += m * b
+                coll_n[base] += int(m)
+                mem += m * b
+            if name in fusion_called:
+                continue                      # fusion bodies: count fusion out
+            if ins.opcode in _SKIP_BYTES_OPS:
+                continue
+            mem += m * _materialized_bytes(ins, comp)
+            if ins.opcode == "dot":           # matmul reads both operands
+                for op in ins.operands[:2]:
+                    mem += m * _shapes_bytes(comp.shapes.get(op, ""))
+
+    return {
+        "flops": flops,
+        "collective_bytes": {k: int(v) for k, v in coll.items()},
+        "collective_counts": coll_n,
+        "collective_total": int(sum(coll.values())),
+        "memory_bytes": mem,
+        "loops": loops,
+        "n_computations": len(comps),
+    }

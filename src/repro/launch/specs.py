@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run feed.
+
+``input_specs(arch, shape)`` returns (kwargs for the step fn, batch specs)
+without allocating anything. Modality frontends are STUBS per the assignment:
+whisper gets precomputed conv frames, qwen2-vl gets precomputed patch
+embeddings + (t, h, w) M-RoPE position ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeConfig, get_config
+from repro.configs.base import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": SDS((b, s), jnp.int32),
+        "labels": SDS((b, s), jnp.int32),
+        "mask": SDS((b, s), jnp.float32),
+    }
+    if cfg.encoder_layers:
+        out["enc_frames"] = SDS((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.vis_tokens:
+        out["vis_embeds"] = SDS((b, cfg.vis_tokens, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+        out["positions"] = SDS((b, 3, s), jnp.int32)
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.encoder_layers:
+        out["enc_frames"] = SDS((b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.vis_tokens:
+        out["vis_embeds"] = SDS((b, cfg.vis_tokens, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+        out["positions"] = SDS((b, 3, s), jnp.int32)
+    return out
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    out = {"tokens": SDS((b, 1), jnp.int32)}
+    if cfg.mrope_sections:
+        out["positions"] = SDS((b, 3, 1), jnp.int32)
+    return out
+
+
+def params_specs(cfg: ModelConfig):
+    """eval_shape of init_params — no allocation."""
+    from repro.models.transformer import init_params
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def cache_specs_struct(cfg: ModelConfig, batch: int, max_seq: int):
+    from repro.models.transformer import init_decode_cache
+    return jax.eval_shape(lambda: init_decode_cache(cfg, batch, max_seq))
+
+
+def input_specs(arch: str, shape: ShapeConfig) -> dict:
+    """All step-fn inputs for one (arch x shape) cell, as ShapeDtypeStructs."""
+    cfg = get_config(arch)
+    if shape.mode == "train":
+        return {"params": params_specs(cfg),
+                "batch": train_batch_specs(cfg, shape)}
+    if shape.mode == "prefill":
+        return {"params": params_specs(cfg),
+                "batch": prefill_batch_specs(cfg, shape)}
+    return {"params": params_specs(cfg),
+            "cache": cache_specs_struct(cfg, shape.global_batch, shape.seq_len),
+            "batch": decode_batch_specs(cfg, shape)}

@@ -1,0 +1,103 @@
+"""Step functions (train / prefill / decode) bound to a config + mesh.
+
+These are the units the dry-run lowers and the drivers jit. Everything is
+pure; distribution comes from in/out shardings (see distributed/sharding.py)
+plus the shard_map inside ``moe_ffn``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.optim import adamw_update, cosine_schedule
+
+LB_COEF = 0.01       # MoE load-balance aux weight (switch-transformer default)
+Z_COEF = 1e-3        # router z-loss weight
+
+
+def make_loss_fn(cfg: ModelConfig, mesh=None, remat: bool = True):
+    def loss_fn(params, batch):
+        hidden, aux = T.forward(
+            params, batch["tokens"], cfg,
+            positions=batch.get("positions"),
+            enc_frames=batch.get("enc_frames"),
+            vis_embeds=batch.get("vis_embeds"),
+            mesh=mesh, remat=remat)
+        ce = T.lm_loss(params, cfg, hidden, batch["labels"],
+                       batch.get("mask"), mesh=mesh)
+        total = ce + LB_COEF * aux["lb"] + Z_COEF * aux["z"]
+        return total, {"ce": ce, "lb": aux["lb"], "z": aux["z"]}
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, mesh=None, *, remat: bool = True,
+                    peak_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10_000, weight_decay: float = 0.1,
+                    microbatches: int = 1):
+    """``microbatches`` > 1 scans gradient accumulation over batch slices:
+    the per-slice activation stash shrinks by the same factor (the HBM-fit
+    lever for the biggest train cells — see EXPERIMENTS.md §Perf), wire
+    bytes and FLOPs are unchanged."""
+    loss_fn = make_loss_fn(cfg, mesh, remat)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                return x.reshape(microbatches, x.shape[0] // microbatches,
+                                 *x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, m_acc = carry
+                (_, metrics), g = grads_of(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                m_acc = jax.tree.map(jnp.add, m_acc, metrics)
+                return (g_acc, m_acc), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"ce": jnp.zeros((), jnp.float32),
+                  "lb": jnp.zeros((), jnp.float32),
+                  "z": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m / microbatches, metrics)
+        else:
+            (_, metrics), grads = grads_of(params, batch)
+        lr = cosine_schedule(opt_state.step, peak_lr=peak_lr, warmup=warmup,
+                             total=total_steps)
+        params, opt_state, opt_metrics = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: int, mesh=None):
+    def prefill_step(params, batch):
+        return T.prefill(params, batch["tokens"], cfg, max_seq,
+                         positions=batch.get("positions"),
+                         enc_frames=batch.get("enc_frames"),
+                         vis_embeds=batch.get("vis_embeds"), mesh=mesh)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, mesh=None, *, sample: bool = False,
+                     temperature: float = 1.0):
+    def decode_step(params, cache, batch):
+        logits, cache = T.decode_step(params, batch["tokens"], cache, cfg,
+                                      positions=batch.get("positions"),
+                                      mesh=mesh)
+        if sample:
+            tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return tok[:, None], cache
+        return logits, cache
+    return decode_step

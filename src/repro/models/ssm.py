@@ -1,0 +1,188 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked-scan training form and
+O(1)-state decode form. [arXiv:2405.21060]
+
+Shapes follow the paper: d_inner = expand * d_model, H = d_inner / head_dim
+SSM heads, shared (n_groups = 1) B/C of size N = ssm_state.
+
+Training/prefill uses the block decomposition of the SSD paper: the sequence
+is split into chunks of length L; within a chunk the quadratic "attention
+form" is used; across chunks a recurrent state (B, H, hd, N) is carried with
+``lax.scan``. Numerically everything decays through exp(segsum(log a)).
+
+Sharding note (DESIGN.md §4): the input projection is SPLIT by component —
+``in_x``/``in_z``/``in_dt`` shard their output (d_inner / heads) over the
+model axis while ``in_bc`` (shared across heads, n_groups=1) stays
+replicated. A packed in_proj would force the whole projection to be
+replicated; the split is what makes Mamba TP-shardable on TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from .layers import rmsnorm
+
+
+def init_mamba(rng, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = jax.random.split(rng, 6)
+    dt = jnp.dtype(cfg.dtype)
+    s = d ** -0.5
+    return {
+        "in_x": (jax.random.normal(k[0], (d, di)) * s).astype(dt),
+        "in_z": (jax.random.normal(k[1], (d, di)) * s).astype(dt),
+        "in_bc": (jax.random.normal(k[2], (d, 2 * n)) * s).astype(dt),
+        "in_dt": (jax.random.normal(k[3], (d, h)) * s).astype(dt),
+        "conv_x_w": (jax.random.normal(k[4], (cfg.ssm_conv, di)) * 0.2).astype(dt),
+        "conv_x_b": jnp.zeros((di,), dt),
+        "conv_bc_w": (jax.random.normal(k[5], (cfg.ssm_conv, 2 * n)) * 0.2).astype(dt),
+        "conv_bc_b": jnp.zeros((2 * n,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": (jax.random.normal(rng, (di, d)) * (di ** -0.5)).astype(dt),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., L). Returns (..., L, L) with out[i, j] = sum_{k=j+1..i} x_k
+    for i >= j, -inf below the causal diagonal."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(L)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _causal_conv(x, w, b, s):
+    """Depthwise causal conv. x: (B, S, C); w: (cw, C)."""
+    cw = w.shape[0]
+    padded = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(padded[:, i:i + s, :] * w[i][None, None, :] for i in range(cw))
+    return jax.nn.silu(out + b)
+
+
+def mamba_chunked(x, params, cfg: ModelConfig, chunk: int = 256,
+                  initial_state=None, return_state: bool = False):
+    """x: (B, S, d_model) -> (B, S, d_model). Training / prefill form."""
+    b, s, _ = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    xr = x @ params["in_x"]
+    z = x @ params["in_z"]
+    bc = x @ params["in_bc"]
+    dt_raw = x @ params["in_dt"]
+
+    xs = _causal_conv(xr, params["conv_x_w"], params["conv_x_b"], s)
+    bc = _causal_conv(bc, params["conv_bc_w"], params["conv_bc_b"], s)
+    Bmat, Cmat = bc[..., :n], bc[..., n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                          # (H,)
+    dA = dt * A                                                            # (B,S,H) log-decay
+
+    L = min(chunk, s)
+    assert s % L == 0, f"seq {s} not divisible by ssd chunk {L}"
+    nc = s // L
+
+    def resh(t, last):
+        return t.reshape(b, nc, L, *last)
+
+    xs = resh(xs, (h, hd)).astype(jnp.float32)       # (B,C,L,H,hd)
+    Bc = resh(Bmat, (n,)).astype(jnp.float32)        # (B,C,L,N)
+    Cc = resh(Cmat, (n,)).astype(jnp.float32)
+    dtc = resh(dt, (h,))                             # (B,C,L,H)
+    dAc = resh(dA, (h,))
+
+    # intra-chunk (quadratic "attention" form)
+    seg = _segsum(dAc.transpose(0, 1, 3, 2))         # (B,C,H,L,L)
+    decay = jnp.exp(seg)
+    scores = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)   # (B,C,L,L)
+    y_intra = jnp.einsum("bclm,bchlm,bcmh,bcmhp->bclhp",
+                         scores, decay, dtc, xs)
+
+    # chunk summaries -> recurrent state pass
+    dA_cum = jnp.cumsum(dAc, axis=2)                 # (B,C,L,H)
+    dA_tot = dA_cum[:, :, -1, :]                     # (B,C,H)
+    # state contribution of each chunk: sum_m exp(dA_tot - dA_cum_m) dt_m B_m x_m
+    w_in = jnp.exp(dA_tot[:, :, None, :] - dA_cum) * dtc      # (B,C,L,H)
+    chunk_states = jnp.einsum("bclh,bcln,bclhp->bchnp", w_in, Bc, xs)  # (B,C,H,N,hd)
+
+    def scan_fn(hprev, inp):
+        st, tot = inp                                 # (B,H,N,hd), (B,H)
+        hnew = hprev * jnp.exp(tot)[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, h, n, hd), jnp.float32))
+    hlast, hprevs = jax.lax.scan(
+        scan_fn, h0,
+        (chunk_states.transpose(1, 0, 2, 3, 4), dA_tot.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)          # (B,C,H,N,hd) state at chunk start
+
+    # inter-chunk: y += C_l . exp(dA_cum_l) h_prev
+    y_inter = jnp.einsum("bcln,bclh,bchnp->bclhp",
+                         Cc, jnp.exp(dA_cum), hprevs)
+
+    y = (y_intra + y_inter).reshape(b, s, h, hd)
+    y = y + params["D"][None, None, :, None] * xs.reshape(b, s, h, hd)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    if return_state:
+        return out, hlast
+    return out
+
+
+def mamba_decode_step(x, state, params, cfg: ModelConfig):
+    """Single-token decode. x: (B, 1, d_model).
+
+    state = {"conv_x": (B, conv_w-1, di), "conv_bc": (B, conv_w-1, 2N),
+    "ssm": (B, H, N, hd)} carried across steps — the O(1) "page" of a
+    sequence (DESIGN.md §5: managed by the serving cache as a pinned page).
+    """
+    b = x.shape[0]
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    x0 = x[:, 0, :]
+    xr = x0 @ params["in_x"]
+    z = x0 @ params["in_z"]
+    bc = x0 @ params["in_bc"]
+    dt_raw = x0 @ params["in_dt"]
+
+    hist_x = jnp.concatenate([state["conv_x"], xr[:, None, :]], axis=1)
+    hist_bc = jnp.concatenate([state["conv_bc"], bc[:, None, :]], axis=1)
+    conv_x = jax.nn.silu((hist_x * params["conv_x_w"][None]).sum(axis=1)
+                         + params["conv_x_b"])
+    conv_bc = jax.nn.silu((hist_bc * params["conv_bc_w"][None]).sum(axis=1)
+                          + params["conv_bc_b"])
+
+    xs = conv_x.reshape(b, h, hd).astype(jnp.float32)
+    Bv = conv_bc[:, :n].astype(jnp.float32)            # (B,N)
+    Cv = conv_bc[:, n:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    dA = jnp.exp(dt * A)                               # (B,H)
+
+    hs = state["ssm"] * dA[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bv, xs)
+    y = jnp.einsum("bn,bhnp->bhp", Cv, hs)
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32))[:, None, :].astype(x.dtype),
+                params["norm"], cfg.norm_eps)
+    new_state = {"conv_x": hist_x[:, 1:, :], "conv_bc": hist_bc[:, 1:, :], "ssm": hs}
+    return y @ params["out_proj"], new_state
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dt),
+        "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state), dt),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+                         dtype),
+    }

@@ -1,0 +1,83 @@
+"""AdamW with global-norm clipping, cosine schedule, optional f32 master copy.
+
+Pure JAX, pytree-shaped like the params; optimizer state inherits the params'
+shardings (same tree structure -> same PartitionSpecs), so FSDP shards the
+moments automatically (ZeRO-style).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Optional[Any] = None     # f32 weights when params are bf16
+
+
+def adamw_init(params: Any, master_fp32: bool = True) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    master = None
+    if master_fp32 and any(p.dtype != jnp.float32 for p in jax.tree.leaves(params)):
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      master=master)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def cosine_schedule(step: jax.Array, *, peak_lr: float, warmup: int,
+                    total: int, floor: float = 0.1) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup, warm, cos)
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, *,
+                 lr: jax.Array | float, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1,
+                 clip_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p, pm):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m + (1 - b1) * g
+        v_new = b2 * v + (1 - b2) * jnp.square(g)
+        update = (m_new / b1c) / (jnp.sqrt(v_new / b2c) + eps)
+        base = pm if pm is not None else p.astype(jnp.float32)
+        decay = weight_decay if p.ndim >= 2 else 0.0   # no decay on norms
+        new_master = base - lr * (update + decay * base)
+        return m_new, v_new, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(params)
+    flat_pm = (treedef.flatten_up_to(state.master)
+               if state.master is not None else [None] * len(flat_p))
+    out = [upd(g, m, v, p, pm)
+           for g, m, v, p, pm in zip(flat_g, flat_m, flat_v, flat_p, flat_pm)]
+    new_m = treedef.unflatten([o[0] for o in out])
+    new_v = treedef.unflatten([o[1] for o in out])
+    new_masters = treedef.unflatten([o[2] for o in out])
+    new_params = jax.tree.map(lambda nm, p: nm.astype(p.dtype),
+                              new_masters, params)
+    new_master = new_masters if state.master is not None else None
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, AdamWState(step, new_m, new_v, new_master), metrics

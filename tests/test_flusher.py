@@ -1,0 +1,97 @@
+"""Dirty-page flusher policy tests (paper §3.3)."""
+from collections import defaultdict
+
+import pytest
+
+from repro.core.flusher import DirtyPageFlusher, FlushRequest, StalenessChecker
+
+
+class FakeCache:
+    """Scripted CacheView."""
+
+    def __init__(self, n_devices=2):
+        self.sets = defaultdict(list)   # set_idx -> [(slot, tag, score)]
+        self.n_devices = n_devices
+
+    def dirty_count(self, s):
+        return len(self.sets[s])
+
+    def flush_candidates(self, s):
+        return sorted(self.sets[s], key=lambda t: -t[2])
+
+    def device_of(self, tag):
+        return tag % self.n_devices
+
+
+def test_trigger_threshold():
+    c = FakeCache()
+    f = DirtyPageFlusher(c, 2, trigger=6, per_visit=2)
+    c.sets[0] = [(i, i, i) for i in range(6)]
+    f.note_write(0)                       # 6 dirty: NOT > trigger
+    assert f.make_requests() == []
+    c.sets[0].append((6, 6, 6))
+    f.note_write(0)                       # 7 > 6: triggers
+    out = f.make_requests(budget=1)
+    assert len(out) == 1
+    assert out[0].score_at_issue == 6     # highest score first
+
+
+def test_round_robin_is_fair_but_biased_to_writers():
+    c = FakeCache(n_devices=1)
+    f = DirtyPageFlusher(c, 1, trigger=0, per_visit=1)
+    c.sets[0] = [(i, i * 10, i) for i in range(4)]
+    c.sets[1] = [(i, i * 10 + 1, i) for i in range(2)]
+    f.note_write(0)
+    f.note_write(1)
+    reqs = f.make_requests(budget=6)
+    by_set = [r.set_idx for r in reqs]
+    # alternates 0,1,0,1 then drains 0 (set 0 has more dirty pages)
+    assert by_set == [0, 1, 0, 1, 0, 0]
+
+
+def test_per_device_pending_cap():
+    c = FakeCache(n_devices=2)
+    f = DirtyPageFlusher(c, 2, trigger=0, per_visit=8, max_pending_per_dev=2)
+    c.sets[0] = [(i, i * 2, i) for i in range(8)]      # all device 0
+    f.note_write(0)
+    out = f.make_requests(budget=100)
+    assert len(out) == 2                  # capped
+    f.note_flush_done(out[0])
+    out2 = f.make_requests(budget=100)
+    assert len(out2) == 1                 # one slot freed
+
+
+def test_no_double_flush_of_inflight_page():
+    c = FakeCache(n_devices=1)
+    f = DirtyPageFlusher(c, 1, trigger=0, per_visit=4)
+    c.sets[0] = [(0, 0, 3), (1, 1, 2)]
+    f.note_write(0)
+    out1 = f.make_requests(budget=10)
+    assert len(out1) == 2
+    f.note_write(0)                       # set still dirty (not yet completed)
+    assert f.make_requests(budget=10) == []
+
+
+def test_staleness_checker_rules():
+    chk = StalenessChecker(
+        is_evicted=lambda r: r.tag == 1,
+        is_clean=lambda r: r.tag == 2,
+        current_score=lambda r: 5 if r.tag == 3 else 0,
+        score_threshold=3,
+    )
+    mk = lambda tag: FlushRequest(tag=tag, set_idx=0, slot=0, device=0,
+                                  score_at_issue=9)
+    assert chk(mk(1))         # evicted
+    assert chk(mk(2))         # cleaned
+    assert not chk(mk(3))     # score 5 >= 3
+    assert chk(mk(4))         # score 0 < 3
+
+
+def test_saturated_gate():
+    c = FakeCache(n_devices=1)
+    f = DirtyPageFlusher(c, 1, trigger=0, per_visit=4, max_pending_per_dev=4)
+    c.sets[0] = [(i, i, i) for i in range(4)]
+    f.note_write(0)
+    assert not f.saturated()
+    f.make_requests(budget=100)
+    assert f.saturated()

@@ -1,0 +1,69 @@
+"""Cost-model regression tests: in-place-update crediting + dtype notes."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_cost import analyze
+
+
+def test_dus_credited_as_slice_not_buffer():
+    """A scan that updates one row of a big buffer per step must charge
+    row-bytes x trips, not buffer-bytes x trips."""
+    n, rows, d = 64, 512, 256
+
+    def f(buf, xs):
+        def body(b, i):
+            return jax.lax.dynamic_update_slice(
+                b, xs[i][None], (i, jnp.int32(0))), None
+        out, _ = jax.lax.scan(body, buf, jnp.arange(n))
+        return out
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((rows, d), jnp.float32),
+        jax.ShapeDtypeStruct((n, d), jnp.float32)).compile()
+    res = analyze(c.as_text())
+    buffer_bytes = rows * d * 4
+    slice_bytes = d * 4
+    # full-buffer charging would be >= n * buffer_bytes = 33.5 MB
+    assert res["memory_bytes"] < 0.2 * n * buffer_bytes, res["memory_bytes"]
+    assert res["memory_bytes"] >= n * slice_bytes
+
+
+def test_scatter_credited_as_updates():
+    """The scatter itself must charge update bytes; the only buffer-sized
+    cost left is XLA's defensive copy (real without donation — with
+    donate_argnums it disappears on device)."""
+    def f(buf, idx, upd):
+        return buf.at[idx].set(upd)
+
+    buf_bytes = 4096 * 128 * 4
+    c = jax.jit(f, donate_argnums=(0,)).lower(
+        jax.ShapeDtypeStruct((4096, 128), jnp.float32),
+        jax.ShapeDtypeStruct((8,), jnp.int32),
+        jax.ShapeDtypeStruct((8, 128), jnp.float32)).compile()
+    res = analyze(c.as_text())
+    # un-credited accounting would be >= 2x buffer (copy + full scatter out)
+    assert res["memory_bytes"] < 1.5 * buf_bytes, res["memory_bytes"]
+
+
+def test_flops_exclude_elementwise():
+    c = jax.jit(lambda x: jnp.tanh(x) * 2 + 1).lower(
+        jax.ShapeDtypeStruct((1024, 1024), jnp.float32)).compile()
+    res = analyze(c.as_text())
+    assert res["flops"] == 0.0
+
+
+def test_nested_loop_multiplicity():
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return jnp.tanh(ci @ ci), None
+            ci, _ = jax.lax.scan(inner, c, None, length=3)
+            return ci, None
+        out, _ = jax.lax.scan(outer, x, None, length=4)
+        return out
+
+    c = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()
+    res = analyze(c.as_text())
+    assert res["flops"] == pytest.approx(12 * 2 * 128 ** 3, rel=0.01)

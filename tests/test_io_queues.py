@@ -1,0 +1,99 @@
+"""Dual-priority queue invariants (paper §3.2) + executor behaviour."""
+import threading
+import time
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.io_queues import (HIGH, LOW, DualQueue, IOExecutor, IORequest,
+                                  next_action)
+
+
+@given(st.integers(0, 100), st.integers(0, 10000), st.integers(0, 32),
+       st.integers(0, 32), st.integers(1, 64), st.integers(0, 16))
+@settings(max_examples=300, deadline=None)
+def test_next_action_invariants(hi, lo, infh, infl, maxi, res):
+    if res >= maxi:
+        res = maxi - 1
+    act = next_action(hi, lo, infh, infl, maxi, res)
+    inflight = infh + infl
+    if act == HIGH:
+        assert hi > 0 and inflight < maxi
+    elif act == LOW:
+        # low only when no high waits AND reserved slots stay free
+        assert lo > 0 and hi == 0 and inflight < maxi - res
+    else:
+        assert (hi == 0 or inflight >= maxi) and \
+               (lo == 0 or hi > 0 or inflight >= maxi - res)
+
+
+def test_high_priority_overtakes_low():
+    q = DualQueue(max_inflight=4, reserved=2)
+    for i in range(10):
+        q.submit(IORequest(payload=("low", i), priority=LOW))
+    q.submit(IORequest(payload=("high", 0), priority=HIGH))
+    first = q.pop_next()
+    assert first.payload[0] == "high"
+
+
+def test_reserved_slots_block_low():
+    q = DualQueue(max_inflight=4, reserved=2)
+    for i in range(10):
+        q.submit(IORequest(payload=i, priority=LOW))
+    issued = []
+    while (r := q.pop_next()) is not None:
+        issued.append(r)
+    assert len(issued) == 2          # 4 - 2 reserved
+    # a HIGH request still goes through
+    q.submit(IORequest(payload="h", priority=HIGH))
+    assert q.pop_next().payload == "h"
+
+
+def test_stale_discard_and_refill_callback():
+    q = DualQueue(max_inflight=4, reserved=1)
+    refills = []
+    q.refill = lambda: refills.append(1)
+    stale = {0: True, 1: True, 2: False}
+    discarded = []
+    for i in range(3):
+        q.submit(IORequest(payload=i, priority=LOW,
+                           is_stale=lambda p: stale[p],
+                           on_discard=lambda p: discarded.append(p)))
+    r = q.pop_next()
+    assert r.payload == 2
+    assert discarded == [0, 1]
+    assert q.stats.discarded_stale == 2
+    assert refills            # executor asked the cache for more work
+
+
+def test_executor_runs_and_completes():
+    done = []
+    ex = IOExecutor(2, lambda dev, payload: done.append((dev, payload)),
+                    max_inflight=2, reserved=1)
+    for i in range(20):
+        assert ex.submit(i % 2, IORequest(payload=i, priority=LOW))
+    assert ex.drain(10.0)
+    ex.shutdown()
+    assert sorted(p for _, p in done) == list(range(20))
+
+
+def test_executor_high_beats_backlog():
+    order = []
+    gate = threading.Event()
+
+    def fn(dev, payload):
+        if payload == "slow":
+            gate.wait(5.0)
+        order.append(payload)
+
+    ex = IOExecutor(1, fn, max_inflight=1, reserved=0)
+    ex.submit(0, IORequest(payload="slow", priority=LOW))
+    time.sleep(0.05)
+    for i in range(5):
+        ex.submit(0, IORequest(payload=("low", i), priority=LOW))
+    ex.submit(0, IORequest(payload="high", priority=HIGH))
+    gate.set()
+    assert ex.drain(10.0)
+    ex.shutdown()
+    # the high request ran before every queued low request
+    assert order.index("high") == 1

@@ -1,0 +1,135 @@
+"""Property tests: the paper's policies (numpy oracle) vs the JAX SA-cache twin."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import policies, sa_cache
+
+SET = st.integers(min_value=2, max_value=16)
+
+
+@st.composite
+def set_state(draw):
+    ss = draw(SET)
+    hits = draw(st.lists(st.integers(0, 15), min_size=ss, max_size=ss))
+    clock = draw(st.integers(0, ss - 1))
+    valid = draw(st.lists(st.booleans(), min_size=ss, max_size=ss))
+    dirty = draw(st.lists(st.booleans(), min_size=ss, max_size=ss))
+    return (np.array(hits, np.int64), clock, np.array(valid),
+            np.array(dirty) & np.array(valid))
+
+
+@given(set_state())
+@settings(max_examples=200, deadline=None)
+def test_flush_scores_match_jax_twin(state):
+    hits, clock, valid, dirty = state
+    ss = hits.shape[0]
+    ref = policies.flush_scores(hits, clock, valid=valid)
+    cache = sa_cache.CacheState(
+        tags=jnp.where(jnp.asarray(valid), jnp.arange(ss, dtype=jnp.int32),
+                       sa_cache.EMPTY)[None],
+        hits=jnp.asarray(hits, jnp.int32)[None],
+        dirty=jnp.asarray(dirty)[None],
+        clock=jnp.asarray([clock], jnp.int32))
+    got = np.asarray(sa_cache.flush_scores(cache))[0]
+    np.testing.assert_array_equal(got, ref)
+
+
+@given(set_state())
+@settings(max_examples=200, deadline=None)
+def test_flush_score_is_permutation_of_valid_slots(state):
+    hits, clock, valid, _ = state
+    fs = policies.flush_scores(hits, clock, valid=valid)
+    n = int(valid.sum())
+    got = sorted(fs[valid])
+    # top-n scores, each exactly once; invalid slots -1
+    assert got == list(range(hits.shape[0] - n, hits.shape[0]))
+    assert (fs[~valid] == -1).all()
+
+
+@given(set_state())
+@settings(max_examples=200, deadline=None)
+def test_gclock_evict_matches_argmin_distance_score(state):
+    hits, clock, valid, dirty = state
+    if not valid.any():
+        return
+    victim, new_hits, new_clock = policies.gclock_evict(
+        hits, clock, valid, dirty, clean_first=False)
+    if not valid.all():          # empty slot fast path
+        assert not valid[victim]
+        return
+    ss = hits.shape[0]
+    d = policies.distance_scores(hits, clock, ss)
+    # sweep victim = argmin of distance score among valid (ties: first swept)
+    assert d[victim] == d[valid].min()
+    assert new_hits[victim] == 0
+    assert new_clock == (victim + 1) % ss
+
+
+@given(set_state())
+@settings(max_examples=200, deadline=None)
+def test_clean_first_prefers_clean_page(state):
+    hits, clock, valid, dirty = state
+    if not valid.any():
+        return
+    victim, _, _ = policies.gclock_evict(hits, clock, valid, dirty,
+                                         clean_first=True)
+    clean = valid & ~dirty
+    if valid.all() and clean.any():
+        assert clean[victim], "clean-first must never evict dirty when clean exists"
+
+
+@given(set_state())
+@settings(max_examples=150, deadline=None)
+def test_jax_insert_victim_matches_oracle(state):
+    hits, clock, valid, dirty = state
+    ss = hits.shape[0]
+    ref_victim, ref_hits, ref_clock = policies.gclock_evict(
+        hits, clock, valid, dirty, clean_first=True)
+    cache = sa_cache.CacheState(
+        tags=jnp.where(jnp.asarray(valid), jnp.arange(ss, dtype=jnp.int32),
+                       sa_cache.EMPTY)[None],
+        hits=jnp.asarray(hits, jnp.int32)[None],
+        dirty=jnp.asarray(dirty)[None],
+        clock=jnp.asarray([clock], jnp.int32))
+    _, _, slot, new_state = sa_cache.insert(
+        cache, jnp.int32(0), jnp.int32(1000), jnp.bool_(False))
+    assert int(slot) == ref_victim
+    assert int(new_state.clock[0]) == ref_clock
+    got_hits = np.asarray(new_state.hits[0])
+    ref_after = ref_hits.copy()
+    ref_after[ref_victim] = 0
+    np.testing.assert_array_equal(got_hits, ref_after)
+
+
+@given(st.integers(0, 1), st.integers(0, 1), st.integers(-1, 15),
+       st.integers(0, 12))
+@settings(max_examples=100, deadline=None)
+def test_staleness_rules(evicted, cleaned, score, thresh):
+    stale = policies.is_stale(evicted=bool(evicted), cleaned=bool(cleaned),
+                              current_flush_score=score,
+                              score_threshold=thresh)
+    assert stale == (bool(evicted) or bool(cleaned) or score < thresh)
+
+
+def test_lookup_bumps_hits_saturating():
+    cache = sa_cache.make_cache(2, 4)
+    _, _, slot, cache = sa_cache.insert(cache, jnp.int32(0), jnp.int32(7),
+                                        jnp.bool_(False))
+    for _ in range(20):
+        hit, s2, cache = sa_cache.lookup(cache, jnp.int32(0), jnp.int32(7))
+        assert bool(hit) and int(s2) == int(slot)
+    assert int(cache.hits[0, slot]) == sa_cache.MAX_HITS
+
+
+def test_clean_slot_ignores_reused_slot():
+    cache = sa_cache.make_cache(1, 4)
+    _, _, slot, cache = sa_cache.insert(cache, jnp.int32(0), jnp.int32(5),
+                                        jnp.bool_(True))
+    # tag replaced before the flush completion arrives
+    cache = cache._replace(tags=cache.tags.at[0, slot].set(9))
+    cache = sa_cache.clean_slot(cache, 0, slot, expect_tag=5)
+    assert bool(cache.dirty[0, slot])     # stays dirty: flush was stale
