@@ -1,0 +1,210 @@
+"""Shared discrete-event engine for the SSD-array simulators.
+
+One heap-based event loop (``EventLoop``) and one queue-aware device service
+model (``DeviceModel``) replace the two near-duplicate loops that used to live
+in ``gc_sim.ArraySim.run`` and ``safs_sim.SAFSSim``.
+
+The modeling change that matters: an SSD is **not** a fluid single server.
+``DeviceModel`` admits up to ``device_slots`` requests into the NCQ and
+services up to ``channels`` of them *concurrently*, each occupying one channel
+for its full ``t_op``. Peak throughput is still ``channels / t_op`` (the
+calibration target is unchanged) but now it is only reached when the host
+keeps enough requests outstanding — queue depth becomes a real experimental
+variable, which is the paper's central lever: long per-SSD queues hide
+unsynchronized GC pauses.
+
+GC keeps strict priority: once the free-block watermark trips, the device
+stops starting new service, lets in-flight channel operations drain, then runs
+the whole GC episode with every channel preempted.
+"""
+from __future__ import annotations
+
+import heapq
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+
+class EventLoop:
+    """Minimal heap-based discrete-event loop: schedule callbacks, run them
+    in time order. Ties are broken by insertion order (FIFO), so causally
+    ordered same-time events stay ordered."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = 0
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + delay, fn)
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (time, self._seq, fn))
+        self._seq += 1
+
+    def step(self) -> bool:
+        """Run the next event; False when no events remain."""
+        if not self._heap:
+            return False
+        self.now, _, fn = heapq.heappop(self._heap)
+        fn()
+        return True
+
+    def run_while(self, cond: Callable[[], bool]) -> None:
+        while cond() and self.step():
+            pass
+
+
+@dataclass
+class LatencySummary:
+    mean: float
+    p50: float
+    p95: float
+    p99: float
+    n: int
+
+    @staticmethod
+    def empty() -> "LatencySummary":
+        return LatencySummary(0.0, 0.0, 0.0, 0.0, 0)
+
+
+class LatencyRecorder:
+    """Per-request latency samples -> mean/p50/p95/p99."""
+
+    def __init__(self) -> None:
+        self._samples: list[float] = []
+
+    def record(self, latency: float) -> None:
+        self._samples.append(latency)
+
+    def reset(self) -> None:
+        self._samples.clear()
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def summary(self) -> LatencySummary:
+        if not self._samples:
+            return LatencySummary.empty()
+        a = np.asarray(self._samples)
+        p50, p95, p99 = np.percentile(a, [50.0, 95.0, 99.0])
+        return LatencySummary(mean=float(a.mean()), p50=float(p50),
+                              p95=float(p95), p99=float(p99), n=a.size)
+
+
+class MeasurementWindow:
+    """Warmup-gated measurement shared by both simulators.
+
+    Counts completions; at the warmup boundary it latches ``t0``, fires
+    ``on_begin`` (the simulator's counter snapshot/reset hook), and starts
+    recording per-request latency. The completion that crosses the boundary
+    is NOT measured — its latency spans the warmup, which would skew the
+    percentiles."""
+
+    def __init__(self, loop: EventLoop, warmup: int,
+                 on_begin: Callable[[], None]) -> None:
+        self.loop = loop
+        self.warmup = warmup
+        self.on_begin = on_begin
+        self.completed = 0
+        self.measuring = False
+        self.t0 = 0.0
+        self.latency = LatencyRecorder()
+
+    def note_completion(self, t_issue: float) -> bool:
+        """Record one completion; True iff it falls inside the window."""
+        self.completed += 1
+        if self.measuring:
+            self.latency.record(self.loop.now - t_issue)
+            return True
+        if self.completed >= self.warmup:
+            self.measuring = True
+            self.t0 = self.loop.now
+            self.on_begin()
+        return False
+
+    @property
+    def span(self) -> float:
+        return max(self.loop.now - self.t0, 1e-9)
+
+
+class DeviceModel:
+    """Multi-slot NCQ service on top of an ``SSDServer``.
+
+    * ``pull()`` supplies the next host-side request to admit (or None) —
+      this is where each simulator plugs its own queue discipline (plain
+      bounded FIFO for ``ArraySim``, dual-priority ``DualQueue`` for SAFS).
+    * ``service_time(req)`` gives the per-request channel occupancy.
+    * ``on_done(req)`` fires at completion, *before* the next kick, so the
+      callback may submit follow-on work.
+
+    Admission: NCQ holds at most ``device_slots`` requests (waiting + in
+    service). Service: up to ``channels`` admitted requests run concurrently,
+    FIFO from the NCQ. GC: when ``ftl.need_gc()`` trips, no new service
+    starts; once the channels drain the full episode runs with the device
+    (all channels) preempted, exactly once per trip.
+
+    ``server.busy_time`` accumulates channel-seconds (a request of duration
+    ``dt`` adds ``dt``; a GC episode adds ``dt * channels``), so utilization
+    is ``busy_time / (span * channels)``.
+    """
+
+    def __init__(self, loop: EventLoop, server: Any,
+                 pull: Callable[[], Optional[Any]],
+                 service_time: Callable[[Any], float],
+                 on_done: Callable[[Any], None]) -> None:
+        self.loop = loop
+        self.server = server
+        self.pull = pull
+        self.service_time = service_time
+        self.on_done = on_done
+        self.admitted: deque = deque()
+        self.in_service = 0
+        self.in_gc = False
+
+    @property
+    def occupancy(self) -> int:
+        """Requests inside the device (NCQ waiting + in service)."""
+        return len(self.admitted) + self.in_service
+
+    def kick(self) -> None:
+        """Admit from the host queue and start service / GC episodes."""
+        p = self.server.p
+        while self.occupancy < p.device_slots:
+            req = self.pull()
+            if req is None:
+                break
+            self.admitted.append(req)
+        if self.in_gc:
+            return
+        if self.server.ftl.need_gc():
+            if self.in_service == 0:
+                self._start_gc()
+            return  # drain channels first; completion re-kicks
+        while self.in_service < p.channels and self.admitted:
+            req = self.admitted.popleft()
+            dt = self.service_time(req)
+            self.in_service += 1
+            self.server.busy_time += dt
+            self.loop.schedule(dt, lambda req=req: self._complete(req))
+
+    def _start_gc(self) -> None:
+        s = self.server
+        dt = s.gc_episode_time()
+        self.in_gc = True
+        s.in_gc = True
+        s.gc_time += dt
+        s.busy_time += dt * s.p.channels
+        self.loop.schedule(dt, self._gc_done)
+
+    def _gc_done(self) -> None:
+        self.in_gc = False
+        self.server.in_gc = False
+        self.kick()
+
+    def _complete(self, req: Any) -> None:
+        self.in_service -= 1
+        self.on_done(req)
+        self.kick()

@@ -11,6 +11,7 @@ set visit, a FIFO of triggered sets visited round-robin, and a global cap of
 """
 from __future__ import annotations
 
+import threading
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Iterable, Protocol
@@ -29,17 +30,25 @@ class CacheView(Protocol):
     def device_of(self, tag: int) -> int:
         """Which device the page belongs to (for per-device pending caps)."""
 
+    # Optional: caches that version their dirty bits also expose
+    #   dirty_epoch_of(set_idx, slot) -> int
+    # (see NumpySACache); the flusher stamps it into FlushRequest.dirty_epoch.
+
 
 @dataclass(frozen=True)
 class FlushRequest:
     """A queued low-priority writeback. ``score_at_issue`` is recorded so the
-    staleness check (§3.3.2 rule iii) can compare against the *current* score."""
+    staleness check (§3.3.2 rule iii) can compare against the *current* score.
+    ``dirty_epoch`` captures the slot's dirty version at issue time: the
+    completion may clean the slot only while the epoch is unchanged, so a
+    write that re-dirties the slot after the flush was issued is never lost."""
 
     tag: int
     set_idx: int
     slot: int
     device: int
     score_at_issue: int
+    dirty_epoch: int = 0
 
 
 @dataclass
@@ -58,6 +67,11 @@ class DirtyPageFlusher:
     _inflight: set = field(default_factory=set)
     _total_pending: int = 0
     issued: int = 0
+    # IOExecutor workers call note_flush_done/discarded concurrently (one
+    # thread pool per device); the counters are read-modify-write. Reentrant:
+    # note_flush_discarded delegates to note_flush_done. Uncontended in the
+    # single-threaded simulators.
+    _mu: threading.RLock = field(default_factory=threading.RLock)
 
     def saturated(self, frac: float = 0.95) -> bool:
         """Cheap gate: skip pumping when the global pending pool is ~full."""
@@ -66,23 +80,26 @@ class DirtyPageFlusher:
     # -- cache-side notifications ------------------------------------------
     def note_write(self, set_idx: int) -> None:
         """Called after a page in ``set_idx`` becomes dirty."""
-        if set_idx not in self._queued_sets and self.cache.dirty_count(set_idx) > self.trigger:
-            self._queued_sets.add(set_idx)
-            self._fifo.append(set_idx)
+        with self._mu:
+            if set_idx not in self._queued_sets and self.cache.dirty_count(set_idx) > self.trigger:
+                self._queued_sets.add(set_idx)
+                self._fifo.append(set_idx)
 
     # -- executor-side notifications ---------------------------------------
     def note_flush_done(self, req: FlushRequest) -> None:
-        self._pending_per_dev[req.device] = self._pending_per_dev.get(req.device, 0) - 1
-        self._total_pending -= 1
-        self._inflight.discard((req.set_idx, req.slot, req.tag))
+        with self._mu:
+            self._pending_per_dev[req.device] = self._pending_per_dev.get(req.device, 0) - 1
+            self._total_pending -= 1
+            self._inflight.discard((req.set_idx, req.slot, req.tag))
 
     def note_flush_discarded(self, req: FlushRequest) -> None:
         self.note_flush_done(req)
 
     def pending(self, device: int | None = None) -> int:
-        if device is not None:
-            return self._pending_per_dev.get(device, 0)
-        return sum(self._pending_per_dev.values())
+        with self._mu:
+            if device is not None:
+                return self._pending_per_dev.get(device, 0)
+            return sum(self._pending_per_dev.values())
 
     # -- request generation --------------------------------------------------
     def make_requests(self, budget: int | None = None,
@@ -94,8 +111,13 @@ class DirtyPageFlusher:
         full FIFO walk would be O(#sets) for nothing — visited sets keep their
         FIFO position and are retried on the next pump instead.
         """
+        with self._mu:
+            return self._make_requests_locked(budget, max_visits)
+
+    def _make_requests_locked(self, budget, max_visits) -> list[FlushRequest]:
         out: list[FlushRequest] = []
         stalled: list[int] = []  # sets skipped only due to device caps
+        epoch_of = getattr(self.cache, "dirty_epoch_of", None)
         if budget is None:
             budget = 1 << 30
         if max_visits is None:
@@ -126,8 +148,10 @@ class DirtyPageFlusher:
                 self._pending_per_dev[dev] = self._pending_per_dev.get(dev, 0) + 1
                 self._total_pending += 1
                 self._inflight.add((set_idx, slot, tag))
-                out.append(FlushRequest(tag=tag, set_idx=set_idx, slot=slot,
-                                        device=dev, score_at_issue=score))
+                out.append(FlushRequest(
+                    tag=tag, set_idx=set_idx, slot=slot, device=dev,
+                    score_at_issue=score,
+                    dirty_epoch=epoch_of(set_idx, slot) if epoch_of else 0))
                 took += 1
             if len(cands) > took:
                 # still has flushable pages: keep in FIFO (re-append = round robin)

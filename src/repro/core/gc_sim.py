@@ -8,9 +8,12 @@ class SSDs behind HBAs, raw 4 KB random I/O. Three coupled models:
    an SSD reclaims several blocks back-to-back, pausing user I/O for
    milliseconds. Across an array these pauses are unsynchronized — the
    phenomenon the paper attacks.
-2. ``SSDSim`` — fluid single-server service model: ``channels`` internal
-   parallel units give per-op service time ``t_op / channels``; GC copies and
-   erases occupy the same server (strict priority during a GC episode).
+2. ``SSDServer`` — FTL + service-time parameters. Service itself is modeled
+   by ``engine.DeviceModel``: up to ``device_slots`` admitted (NCQ) requests,
+   up to ``channels`` serviced concurrently, each occupying one channel for
+   its full ``t_op``; GC episodes preempt every channel. Saturation
+   throughput is ``channels / t_op`` (the Table-1 calibration), but reaching
+   it requires real queue depth — the paper's central lever.
 3. ``ArraySim`` — host with a bounded total outstanding window W and bounded
    per-SSD queues. Tokens regenerate only on completion, so a GC-paused SSD
    accumulates an ever larger share of W while fast SSDs starve — exactly the
@@ -22,10 +25,19 @@ then *emerges* from the FTL (write amplification), it is not programmed in.
 """
 from __future__ import annotations
 
-import heapq
+from collections import deque
 from dataclasses import dataclass, field
 
 import numpy as np
+
+from .engine import DeviceModel, EventLoop, MeasurementWindow
+from .workloads import Op, OpSource, ZipfSampler, _mix64, source_for
+
+__all__ = [
+    "ArrayResults", "ArraySim", "FTL", "SSDParams", "SSDServer", "SealFifo",
+    "Workload", "ZipfSampler", "_mix64", "fresh_ssd_write_iops",
+    "single_ssd_write_iops",
+]
 
 # Paper Table 1 calibration target.
 FRESH_WRITE_IOPS = 60928.0
@@ -57,9 +69,10 @@ class SSDParams:
                                          # oldest-sealed window (wear-leveling-
                                          # constrained controllers; raises WA)
     gc_sample: int = 2                   # 0 = full scan; else min-valid over a
-                                         # random sample of sealed blocks
-                                         # (d-choices, as firmware actually does).
-                                         # Calibrated (with op_frac) to Table 1.
+                                         # distinct random sample of sealed
+                                         # blocks (d-choices, as firmware
+                                         # actually does). Calibrated (with
+                                         # op_frac) to Table 1.
 
     @property
     def phys_pages(self) -> int:
@@ -71,8 +84,79 @@ class SSDParams:
         return self.phys_pages // self.pages_per_block
 
 
+class SealFifo:
+    """Seal-ordered block FIFO with O(1) removal and O(d) distinct sampling.
+
+    Replaces a plain list whose ``.remove()`` was O(n) on the GC hot path.
+    Tombstoned backing array, compacted when more than half dead, so the
+    live fraction is always >= 1/2 (bounding rejection sampling)."""
+
+    __slots__ = ("_items", "_pos", "_dead")
+
+    def __init__(self) -> None:
+        self._items: list[int] = []   # seal order; -1 = tombstone
+        self._pos: dict[int, int] = {}
+        self._dead = 0
+
+    def __len__(self) -> int:
+        return len(self._items) - self._dead
+
+    def __contains__(self, block: int) -> bool:
+        return block in self._pos
+
+    def __iter__(self):
+        return (b for b in self._items if b >= 0)
+
+    def append(self, block: int) -> None:
+        self._pos[block] = len(self._items)
+        self._items.append(block)
+
+    def remove(self, block: int) -> None:
+        i = self._pos.pop(block)
+        self._items[i] = -1
+        self._dead += 1
+        if self._dead * 2 > len(self._items):
+            self._compact()
+
+    def _compact(self) -> None:
+        self._items = [b for b in self._items if b >= 0]
+        self._pos = {b: i for i, b in enumerate(self._items)}
+        self._dead = 0
+
+    def head_window(self, k: int) -> list[int]:
+        """First ``k`` live blocks in seal order."""
+        out: list[int] = []
+        for b in self._items:
+            if b >= 0:
+                out.append(b)
+                if len(out) == k:
+                    break
+        return out
+
+    def sample_distinct(self, rng: np.random.Generator, k: int) -> list[int]:
+        """``k`` distinct live blocks, uniform without replacement — proper
+        d-choices (sampling the same index twice degenerated to 1-choice)."""
+        n_live = len(self)
+        if k >= n_live:
+            return list(self)
+        out: list[int] = []
+        seen: set[int] = set()
+        m = len(self._items)
+        while len(out) < k:
+            for i in rng.integers(0, m, size=4 * k):
+                b = self._items[int(i)]
+                if b >= 0 and b not in seen:
+                    seen.add(b)
+                    out.append(b)
+                    if len(out) == k:
+                        break
+        return out
+
+
 class FTL:
-    """Page-mapped FTL with greedy GC. All state in numpy for speed."""
+    """Page-mapped FTL with greedy GC. All state in numpy for speed; the
+    prefill/churn and GC-copy paths program whole batches of pages at once
+    instead of one python call per page."""
 
     def __init__(self, params: SSDParams, rng: np.random.Generator):
         self.p = params
@@ -82,8 +166,10 @@ class FTL:
         self.lba_loc = np.full(params.capacity_pages, -1, dtype=np.int64)
         self.valid_count = np.zeros(n_blocks, dtype=np.int32)
         self.sealed = np.zeros(n_blocks, dtype=bool)
-        self.seal_fifo: list[int] = []   # blocks in seal order (gc_window policy)
-        self.free_blocks: list[int] = list(range(n_blocks - 1, 0, -1))
+        self.seal_fifo = SealFifo()   # blocks in seal order (gc_window policy)
+        # FIFO free list: allocate from the left, return reclaimed blocks on
+        # the right (a freed block is not reused before the active moves on).
+        self.free_blocks: deque[int] = deque(range(1, n_blocks))
         self.active = 0
         self.active_off = 0
         self.writes = 0          # user page programs
@@ -99,7 +185,7 @@ class FTL:
         if self.active_off == self.p.pages_per_block:
             self.sealed[self.active] = True
             self.seal_fifo.append(self.active)
-            self.active = self.free_blocks.pop()
+            self.active = self.free_blocks.popleft()
             self.active_off = 0
 
     def _program(self, lba: int) -> None:
@@ -115,20 +201,81 @@ class FTL:
         self.lba_loc[lba] = phys
         self.valid_count[self.active] += 1
 
+    def _program_chunk(self, lbas: np.ndarray) -> None:
+        """Program a batch of (possibly duplicate) LBAs into the active block.
+        Caller guarantees the batch fits: len(lbas) <= pages_per_block -
+        active_off. The last occurrence of a duplicated LBA wins; earlier
+        occurrences land dead-on-arrival (exactly what sequential scalar
+        programs would produce)."""
+        k = len(lbas)
+        if k == 0:
+            return
+        lbas = np.asarray(lbas, dtype=np.int64)
+        ppb = self.p.pages_per_block
+        phys = self.active * ppb + self.active_off + np.arange(k)
+        rev_uniq, rev_idx = np.unique(lbas[::-1], return_index=True)
+        last_idx = k - 1 - rev_idx
+        old = self.lba_loc[rev_uniq]
+        ext = old[old >= 0]
+        self.page_lba[ext] = -1
+        np.subtract.at(self.valid_count, ext // ppb, 1)
+        self.page_lba[phys] = lbas
+        dead = np.ones(k, dtype=bool)
+        dead[last_idx] = False
+        self.page_lba[phys[dead]] = -1
+        self.lba_loc[rev_uniq] = phys[last_idx]
+        self.valid_count[self.active] += rev_uniq.size
+        self.active_off += k
+
+    def _program_batch(self, lbas: np.ndarray) -> None:
+        """Program a batch spanning block boundaries (chunks per active block)."""
+        i, n = 0, len(lbas)
+        while i < n:
+            self._advance_active()
+            room = self.p.pages_per_block - self.active_off
+            take = min(room, n - i)
+            self._program_chunk(lbas[i:i + take])
+            i += take
+
     # -- public ----------------------------------------------------------------
     def prefill(self, occupancy: float, churn: bool = True) -> None:
         """Sequentially write ``occupancy`` of the LBA space (paper's pre-
         conditioning), then churn random overwrites (with GC interleaved,
         charging no simulated time) until the drive reaches GC steady state."""
         live = int(self.p.capacity_pages * occupancy)
-        for lba in range(live):
-            self._program(lba)
         self.live_lbas = live
+        if live:
+            # Vectorized sequential fill: blocks are allocated in index order
+            # from a fresh drive, so LBA i lands on physical page i.
+            ppb = self.p.pages_per_block
+            q, r = divmod(live, ppb)
+            seq = np.arange(live, dtype=np.int64)
+            self.page_lba[:live] = seq
+            self.lba_loc[:live] = seq
+            self.valid_count[:q] = ppb
+            if r:
+                self.valid_count[q] = r
+            # a block seals only when the *next* program arrives, so an
+            # exactly-full trailing block stays active (matches _program)
+            n_sealed = q if r else q - 1
+            self.sealed[:n_sealed] = True
+            for b in range(n_sealed):
+                self.seal_fifo.append(b)
+            self.active = n_sealed
+            self.active_off = r if r else ppb
+            self.free_blocks = deque(range(n_sealed + 1, self.p.n_blocks))
         if churn:
             spare = self.p.phys_pages - live
             lbas = self.rng.integers(0, live, size=3 * spare)
-            for lba in lbas:
-                self._program(int(lba))
+            i, n = 0, len(lbas)
+            while i < n:
+                # free-block count only changes at block boundaries, so GC
+                # trigger points are preserved under block-sized chunking
+                self._advance_active()
+                room = self.p.pages_per_block - self.active_off
+                take = min(room, n - i)
+                self._program_chunk(lbas[i:i + take])
+                i += take
                 while self.need_gc() and not self.gc_satisfied():
                     self.gc_reclaim_one()
             # reset counters so WA statistics reflect steady state only
@@ -151,75 +298,26 @@ class FTL:
         ``gc_window`` > 0). Returns the number of page copies performed
         (caller charges time)."""
         if self.p.gc_window > 0:
-            window = self.seal_fifo[: self.p.gc_window]
+            window = self.seal_fifo.head_window(self.p.gc_window)
             victim = min(window, key=lambda b: self.valid_count[b])
         elif self.p.gc_sample > 0 and len(self.seal_fifo) > self.p.gc_sample:
-            idx = self.rng.integers(0, len(self.seal_fifo), size=self.p.gc_sample)
-            victim = min((self.seal_fifo[i] for i in idx),
-                         key=lambda b: self.valid_count[b])
+            cand = self.seal_fifo.sample_distinct(self.rng, self.p.gc_sample)
+            victim = min(cand, key=lambda b: self.valid_count[b])
         else:
             cand = np.where(self.sealed)[0]
             victim = int(cand[np.argmin(self.valid_count[cand])])
         self.seal_fifo.remove(victim)
-        moved = 0
         base = victim * self.p.pages_per_block
-        for off in range(self.p.pages_per_block):
-            lba = self.page_lba[base + off]
-            if lba >= 0:
-                self._program(int(lba))
-                moved += 1
+        page = self.page_lba[base:base + self.p.pages_per_block]
+        live = page[page >= 0]          # fancy indexing: already a copy
+        self._program_batch(live)
+        moved = int(live.size)
         self.sealed[victim] = False
         self.valid_count[victim] = 0
-        self.free_blocks.insert(0, victim)  # tail: not reused before active moves on
+        self.free_blocks.append(victim)  # tail: not reused before active moves on
         self.gc_copies += moved
         self.erases += 1
         return moved
-
-
-def _mix64(x: int) -> int:
-    """splitmix64 finalizer — cheap stateless permutation-ish hash."""
-    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
-    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
-    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
-    return x ^ (x >> 31)
-
-
-class ZipfSampler:
-    """Bounded Zipf(s) over ranks 1..N: exact CDF for the head, continuous
-    generalized-harmonic inverse for the tail. O(1) memory in N."""
-
-    HEAD = 4096
-
-    def __init__(self, n: int, s: float, rng: np.random.Generator):
-        self.n, self.s, self.rng = n, s, rng
-        head = min(self.HEAD, n)
-        ranks = np.arange(1, head + 1, dtype=np.float64)
-        head_w = ranks ** (-s)
-        self._head_cum = np.cumsum(head_w)
-        h_head = float(self._head_cum[-1])
-        if n > head:
-            # integral_{head+.5}^{n+.5} x^-s dx
-            if abs(s - 1.0) < 1e-9:
-                tail = np.log((n + 0.5) / (head + 0.5))
-            else:
-                tail = ((n + 0.5) ** (1 - s) - (head + 0.5) ** (1 - s)) / (1 - s)
-        else:
-            tail = 0.0
-        self._h_head, self._h_total = h_head, h_head + tail
-        self._p_head = h_head / self._h_total
-
-    def sample(self) -> int:
-        u = self.rng.random()
-        if u < self._p_head or self.n <= self.HEAD:
-            t = u * self._h_total
-            return int(np.searchsorted(self._head_cum, t) + 1)
-        rem = u * self._h_total - self._h_head
-        head, s = min(self.HEAD, self.n), self.s
-        if abs(s - 1.0) < 1e-9:
-            k = (head + 0.5) * np.exp(rem)
-        else:
-            k = ((head + 0.5) ** (1 - s) + rem * (1 - s)) ** (1.0 / (1 - s))
-        return int(min(max(k, head + 1), self.n))
 
 
 @dataclass(frozen=True)
@@ -241,6 +339,13 @@ class Workload:
                                      # below one SSD's fair share, as at real
                                      # scale, instead of a scale-artifact
                                      # hotspot.
+    # -- scenario layer (core/workloads.py) ---------------------------------
+    scenario: str = "random"         # "random" | "sequential" | "bursty" |
+                                     # "mixed" | "trace"
+    seq_streams: int = 4             # sequential cursors for "sequential"
+    burst_on: float = 2e-3           # ON window seconds for "bursty"
+    burst_off: float = 2e-3          # OFF window seconds for "bursty"
+    writer_frac: float = 0.5         # writer-tenant share for "mixed"
 
 
 @dataclass
@@ -249,38 +354,39 @@ class ArrayResults:
     per_ssd_iops: np.ndarray
     read_iops: float
     write_iops: float
-    util: np.ndarray                 # busy fraction per SSD during measurement
+    util: np.ndarray                 # mean busy channel fraction per SSD
     sim_time: float
     gc_pause_frac: np.ndarray        # fraction of time in GC episodes
     mean_latency: float
-
-
-_ARRIVE, _SSD_DONE = 0, 1
+    p50_latency: float = 0.0
+    p95_latency: float = 0.0
+    p99_latency: float = 0.0
 
 
 class SSDServer:
-    """Fluid single-server SSD with GC episodes (wraps an FTL)."""
+    """One SSD: FTL + service-time parameters + accounting. Actual service
+    scheduling (NCQ slots, concurrent channels, GC preemption) lives in
+    ``engine.DeviceModel``."""
 
     def __init__(self, params: SSDParams, occupancy: float, rng: np.random.Generator):
         self.p = params
         self.ftl = FTL(params, rng)
         self.ftl.prefill(occupancy)
-        self.busy = False
         self.in_gc = False
-        self.queue: list = []        # admitted (tok, stream, lba, is_read, coal)
-        self.host_queue: list = []   # waiting for device slots
         self.pending_writes: dict[int, int] = {}  # lba -> pending write count
         self.gc_time = 0.0
-        self.busy_time = 0.0
+        self.busy_time = 0.0         # channel-seconds (see DeviceModel)
         self.served_reads = 0
         self.served_writes = 0
 
     def service_time(self, is_read: bool) -> float:
-        t = self.p.t_read if is_read else self.p.t_prog
-        return t / self.p.channels
+        """Full per-op time on ONE channel; concurrency across channels is
+        modeled explicitly by DeviceModel, not divided out fluidly."""
+        return self.p.t_read if is_read else self.p.t_prog
 
     def gc_episode_time(self) -> float:
-        """Reclaim blocks until the high watermark; return total busy time."""
+        """Reclaim blocks until the high watermark; return wall time of the
+        episode (copies/erases spread across all channels)."""
         t = 0.0
         while not self.ftl.gc_satisfied():
             copies = self.ftl.gc_reclaim_one()
@@ -290,11 +396,13 @@ class SSDServer:
 
 
 class ArraySim:
-    """Host + n SSDs. Global LBAs stripe across SSDs page-granularly."""
+    """Host + n SSDs on the shared event engine. Global LBAs stripe across
+    SSDs page-granularly; each SSD is a multi-slot NCQ device."""
 
     def __init__(self, n_ssds: int, ssd: SSDParams = SSDParams(),
                  occupancy: float = 0.6, workload: Workload = Workload(),
-                 seed: int = 0):
+                 seed: int = 0, source: OpSource | None = None,
+                 trace: np.ndarray | None = None):
         self.n = n_ssds
         self.p = ssd
         self.wl = workload
@@ -302,21 +410,8 @@ class ArraySim:
         self.ssds = [SSDServer(ssd, occupancy, self.rng) for _ in range(n_ssds)]
         self.live_per_ssd = self.ssds[0].ftl.live_lbas
         self.n_live = self.live_per_ssd * n_ssds
-        if workload.dist == "zipf":
-            self._zipf = ZipfSampler(self.n_live * workload.virtual_scale,
-                                     workload.zipf_s, self.rng)
-
-    # -- workload ------------------------------------------------------------
-    def _sample_lba(self) -> int:
-        if self.wl.dist == "zipf":
-            v = self._zipf.sample()
-            return _mix64(v) % self.n_live
-        return int(self.rng.integers(self.n_live))
-
-    def _sample_op(self) -> tuple[int, int, bool]:
-        lba = self._sample_lba()
-        is_read = bool(self.rng.random() < self.wl.read_frac)
-        return lba % self.n, lba // self.n, is_read
+        self.source = source or source_for(workload, self.n_live, self.rng,
+                                           trace=trace)
 
     # -- main loop -------------------------------------------------------------
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
@@ -324,84 +419,119 @@ class ArraySim:
         if warmup_ops is None:
             warmup_ops = measure_ops // 2
         total_ops = warmup_ops + measure_ops
-        now = 0.0
-        seq = 0
-        heap: list[tuple[float, int, int, int]] = []  # (time, seq, kind, ssd)
-        completions = 0
-        t_measure_start = None
-        measured = np.zeros(n, dtype=np.int64)
-        measured_reads = 0
-        measured_writes = 0
-        lat_sum, lat_n = 0.0, 0
-        issue_time: dict[int, float] = {}
-        token_id = 0
+        loop = EventLoop()
 
         # Submitter streams: each has a window of w_total/n_streams tokens and
         # a single submission sequence. A full target queue parks the whole
-        # stream (AIO io_submit head-of-line behaviour).
+        # stream (AIO io_submit head-of-line behaviour); an open-loop lull
+        # (Op.at in the future) puts it to sleep until that time.
         n_streams = max(1, wl.n_streams)
         window = max(1, wl.w_total // n_streams)
         outstanding = [0] * n_streams
         parked: list[tuple[int, int, bool] | None] = [None] * n_streams
+        sleeping = [False] * n_streams
         waiters: list[list[int]] = [[] for _ in range(n)]  # streams parked per SSD
+        host_queues: list[deque] = [deque() for _ in range(n)]
 
-        def push(t, kind, ssd):
-            nonlocal seq
-            heapq.heappush(heap, (t, seq, kind, ssd))
-            seq += 1
+        measured = np.zeros(n, dtype=np.int64)
+        measured_reads = 0
+        measured_writes = 0
 
-        def try_start(ssd_i: int):
-            """Admit host-queue -> device and start service / GC episodes."""
-            s = self.ssds[ssd_i]
-            if s.busy:
-                return
-            # GC has strict priority once the watermark trips.
-            if s.ftl.need_gc():
-                dt = s.gc_episode_time()
-                s.busy = True
-                s.in_gc = True
-                s.gc_time += dt
-                s.busy_time += dt
-                push(now + dt, _SSD_DONE, ssd_i)
-                return
-            while len(s.queue) < self.p.device_slots and s.host_queue:
-                s.queue.append(s.host_queue.pop(0))
-            if s.queue:
-                _, _, _, is_read, coal = s.queue[0]
-                dt = self.p.t_coalesce if coal else s.service_time(is_read)
-                s.busy = True
-                s.busy_time += dt
-                push(now + dt, _SSD_DONE, ssd_i)
+        def begin_measure():
+            nonlocal measured_reads, measured_writes
+            measured[:] = 0
+            measured_reads = measured_writes = 0
+            for ss in self.ssds:
+                ss.busy_time = 0.0
+                ss.gc_time = 0.0
+
+        mw = MeasurementWindow(loop, warmup_ops, begin_measure)
+
+        # requests are (stream, lba, is_read, coal, t_issue)
+        def make_pull(i: int):
+            hq = host_queues[i]
+            return lambda: hq.popleft() if hq else None
+
+        def make_service_time(i: int):
+            s = self.ssds[i]
+
+            def service_time(req):
+                _, _, is_read, coal, _ = req
+                return self.p.t_coalesce if coal else s.service_time(is_read)
+            return service_time
+
+        def make_on_done(i: int):
+            def on_done(req):
+                nonlocal measured_reads, measured_writes
+                stream, lba, is_read, coal, t_issue = req
+                s = self.ssds[i]
+                outstanding[stream] -= 1
+                if is_read:
+                    s.served_reads += 1
+                else:
+                    s.served_writes += 1
+                    c = s.pending_writes[lba] - 1
+                    if c:
+                        s.pending_writes[lba] = c
+                    else:
+                        del s.pending_writes[lba]
+                    if not coal:
+                        s.ftl.user_write(lba)
+                if mw.note_completion(t_issue):
+                    measured[i] += 1
+                    if is_read:
+                        measured_reads += 1
+                    else:
+                        measured_writes += 1
+                unpark(i)
+                stream_fill(stream)
+            return on_done
+
+        devices = [DeviceModel(loop, self.ssds[i], make_pull(i),
+                               make_service_time(i), make_on_done(i))
+                   for i in range(n)]
 
         def room(ssd_i: int) -> bool:
-            s = self.ssds[ssd_i]
-            return len(s.host_queue) + len(s.queue) < wl.qd_per_ssd
+            return len(host_queues[ssd_i]) + devices[ssd_i].occupancy < wl.qd_per_ssd
 
         def enqueue(stream: int, ssd_i: int, lba: int, is_read: bool):
-            nonlocal token_id
-            tok = token_id
-            token_id += 1
-            issue_time[tok] = now
             s = self.ssds[ssd_i]
             coal = False
             if not is_read:
                 coal = s.pending_writes.get(lba, 0) > 0
                 s.pending_writes[lba] = s.pending_writes.get(lba, 0) + 1
-            s.host_queue.append((tok, stream, lba, is_read, coal))
+            host_queues[ssd_i].append((stream, lba, is_read, coal, loop.now))
             outstanding[stream] += 1
-            try_start(ssd_i)
+            devices[ssd_i].kick()
+
+        def place(stream: int, ssd_i: int, lba: int, is_read: bool) -> bool:
+            """Enqueue or park; True if the stream may keep submitting."""
+            if room(ssd_i):
+                enqueue(stream, ssd_i, lba, is_read)
+                return True
+            parked[stream] = (ssd_i, lba, is_read)
+            waiters[ssd_i].append(stream)
+            return False
 
         def stream_fill(stream: int):
-            """Submit until the stream's window is full or it parks."""
-            if parked[stream] is not None:
+            """Submit until the stream's window is full, it parks, or the
+            source's next arrival lies in the future."""
+            if parked[stream] is not None or sleeping[stream]:
                 return
             while outstanding[stream] < window:
-                ssd_i, lba, is_read = self._sample_op()
-                if room(ssd_i):
-                    enqueue(stream, ssd_i, lba, is_read)
-                else:
-                    parked[stream] = (ssd_i, lba, is_read)
-                    waiters[ssd_i].append(stream)
+                op = self.source.next_op(loop.now)
+                ssd_i, lba = op.lba % n, op.lba // n
+                if op.at > loop.now:
+                    sleeping[stream] = True
+
+                    def wake(stream=stream, ssd_i=ssd_i, lba=lba,
+                             is_read=op.is_read):
+                        sleeping[stream] = False
+                        if place(stream, ssd_i, lba, is_read):
+                            stream_fill(stream)
+                    loop.at(op.at, wake)
+                    return
+                if not place(stream, ssd_i, lba, op.is_read):
                     return
 
         def unpark(ssd_i: int):
@@ -415,61 +545,23 @@ class ArraySim:
         for si in range(n_streams):
             stream_fill(si)
 
-        while completions < total_ops and heap:
-            now, _, kind, ssd_i = heapq.heappop(heap)
-            s = self.ssds[ssd_i]
-            s.busy = False
-            if s.in_gc:
-                s.in_gc = False
-                try_start(ssd_i)
-                unpark(ssd_i)
-                continue
-            tok, stream, lba, is_read, coal = s.queue.pop(0)
-            outstanding[stream] -= 1
-            if is_read:
-                s.served_reads += 1
-            else:
-                s.served_writes += 1
-                c = s.pending_writes[lba] - 1
-                if c:
-                    s.pending_writes[lba] = c
-                else:
-                    del s.pending_writes[lba]
-                if not coal:
-                    s.ftl.user_write(lba)
-            completions += 1
-            if t_measure_start is None and completions >= warmup_ops:
-                t_measure_start = now
-                measured[:] = 0
-                measured_reads = measured_writes = 0
-                lat_sum, lat_n = 0.0, 0
-                for ss in self.ssds:
-                    ss.busy_time = 0.0
-                    ss.gc_time = 0.0
-            if t_measure_start is not None:
-                measured[ssd_i] += 1
-                if is_read:
-                    measured_reads += 1
-                else:
-                    measured_writes += 1
-                lat_sum += now - issue_time.pop(tok, now)
-                lat_n += 1
-            else:
-                issue_time.pop(tok, None)
-            try_start(ssd_i)
-            unpark(ssd_i)
-            stream_fill(stream)
+        loop.run_while(lambda: mw.completed < total_ops)
 
-        span = max(now - (t_measure_start or 0.0), 1e-9)
+        span = mw.span
+        summ = mw.latency.summary()
         return ArrayResults(
             iops=float(measured.sum() / span),
             per_ssd_iops=measured / span,
             read_iops=measured_reads / span,
             write_iops=measured_writes / span,
-            util=np.array([s.busy_time / span for s in self.ssds]),
+            util=np.array([s.busy_time / (span * self.p.channels)
+                           for s in self.ssds]),
             sim_time=span,
             gc_pause_frac=np.array([s.gc_time / span for s in self.ssds]),
-            mean_latency=lat_sum / max(lat_n, 1),
+            mean_latency=summ.mean,
+            p50_latency=summ.p50,
+            p95_latency=summ.p95,
+            p99_latency=summ.p99,
         )
 
 

@@ -146,6 +146,11 @@ class IOExecutor:
                         for _ in range(n_devices)]
         self._locks = [threading.Lock() for _ in range(n_devices)]
         self._cvs = [threading.Condition(lock) for lock in self._locks]
+        self._refill_fns: dict[int, Callable[[], None]] = {}
+        self._refill_pending = [False] * n_devices
+        # completion callbacks run outside the device lock; drain() must not
+        # report quiescence while one is still pending
+        self._cb_outstanding = [0] * n_devices
         self._stop = False
         self._threads = []
         for dev in range(n_devices):
@@ -163,7 +168,19 @@ class IOExecutor:
             return ok
 
     def set_refill(self, device: int, fn: Callable[[], None]) -> None:
-        self._queues[device].refill = fn
+        """Register the refill callback (the flusher's "give me more work").
+
+        ``DualQueue.pop_next`` fires ``refill`` inline, but workers call
+        ``pop_next`` while holding the device condition lock — a callback
+        that re-enters ``submit`` on the same device would self-deadlock on
+        the non-reentrant lock. So the queue only *records* the request here
+        and the worker invokes ``fn`` after releasing the lock."""
+        self._refill_fns[device] = fn
+        q = self._queues[device]
+
+        def mark(dev: int = device) -> None:   # runs under the device lock
+            self._refill_pending[dev] = True
+        q.refill = mark
 
     def stats(self, device: int) -> IOStats:
         return self._queues[device].stats
@@ -175,7 +192,8 @@ class IOExecutor:
             with_work = False
             for dev, q in enumerate(self._queues):
                 with self._locks[dev]:
-                    if q.high or q.low or q.inflight_high or q.inflight_low:
+                    if (q.high or q.low or q.inflight_high or q.inflight_low
+                            or self._cb_outstanding[dev]):
                         with_work = True
                         break
             if not with_work:
@@ -191,18 +209,46 @@ class IOExecutor:
         for t in self._threads:
             t.join(timeout=5.0)
 
+    def _run_pending_refill(self, dev: int, run_refill: bool) -> None:
+        if run_refill:
+            fn = self._refill_fns.get(dev)
+            if fn is not None:
+                fn()
+
     def _worker(self, dev: int) -> None:
         q, cv = self._queues[dev], self._cvs[dev]
         while True:
+            run_refill = False
             with cv:
-                req = None
-                while not self._stop and (req := q.pop_next()) is None:
+                req = q.pop_next()
+                if self._refill_pending[dev]:
+                    self._refill_pending[dev] = False
+                    run_refill = True
+                if req is None and not run_refill and not self._stop:
                     cv.wait(timeout=0.2)
-                if self._stop and req is None:
+            # deferred refill: outside the lock, so it may submit() freely
+            self._run_pending_refill(dev, run_refill)
+            if req is None:
+                if self._stop:
                     return
+                continue
+            # completion callback also runs outside the lock (it may submit
+            # follow-on work to this same device); the outstanding count is
+            # raised in the same critical section that retires the request so
+            # drain() never sees a gap between the two
+            cb, req.on_complete = req.on_complete, None
             try:
                 self._device_fn(dev, req.payload)
             finally:
                 with cv:
                     q.complete(req)
+                    if cb is not None:
+                        self._cb_outstanding[dev] += 1
                     cv.notify_all()
+            if cb is not None:
+                try:
+                    cb(req.payload)
+                finally:
+                    with cv:
+                        self._cb_outstanding[dev] -= 1
+                        cv.notify_all()

@@ -31,12 +31,19 @@ class CacheState(NamedTuple):
 
     The payload (KV pages, checkpoint chunks, ...) lives elsewhere (e.g. the
     HBM page pool); this state maps tags -> slots and drives the policies.
+
+    ``epoch`` versions each slot's dirty content: it is bumped on every
+    ``mark_dirty`` and on every ``insert``, and :func:`clean_slot` may clear
+    the dirty bit only while the epoch it captured is still current (the
+    flush-completion lost-write race). ``None`` (legacy states built without
+    the field) disables the check.
     """
 
     tags: jax.Array    # (num_sets, set_size) int32, EMPTY = free slot
     hits: jax.Array    # (num_sets, set_size) int32 GClock counts
     dirty: jax.Array   # (num_sets, set_size) bool
     clock: jax.Array   # (num_sets,) int32 hand position
+    epoch: jax.Array | None = None  # (num_sets, set_size) int32 dirty version
 
     @property
     def num_sets(self) -> int:
@@ -53,6 +60,7 @@ def make_cache(num_sets: int, set_size: int) -> CacheState:
         hits=jnp.zeros((num_sets, set_size), dtype=jnp.int32),
         dirty=jnp.zeros((num_sets, set_size), dtype=jnp.bool_),
         clock=jnp.zeros((num_sets,), dtype=jnp.int32),
+        epoch=jnp.zeros((num_sets, set_size), dtype=jnp.int32),
     )
 
 
@@ -164,23 +172,46 @@ def insert(state: CacheState, set_idx: jax.Array, tag: jax.Array, dirty: jax.Arr
         hits_row, state.clock[set_idx], valid, dirty_row, clean_first)
     victim_tag = tags_row[slot]
     victim_dirty = jnp.logical_and(victim_tag != EMPTY, dirty_row[slot])
-    new_state = CacheState(
+    new_state = state._replace(
         tags=state.tags.at[set_idx, slot].set(tag),
         hits=state.hits.at[set_idx].set(new_hits_row.at[slot].set(0)),
         dirty=state.dirty.at[set_idx, slot].set(dirty),
         clock=state.clock.at[set_idx].set(new_clock),
     )
+    if state.epoch is not None:
+        # new occupant: in-flight flushes for the old content are dead, even
+        # if the same tag is later re-inserted into this slot
+        new_state = new_state._replace(
+            epoch=state.epoch.at[set_idx, slot].add(1))
     return victim_tag, victim_dirty, slot, new_state
 
 
 def mark_dirty(state: CacheState, set_idx, slot, value=True) -> CacheState:
-    return state._replace(dirty=state.dirty.at[set_idx, slot].set(value))
+    new_state = state._replace(dirty=state.dirty.at[set_idx, slot].set(value))
+    if state.epoch is not None:
+        # every write is a new dirty version; a no-op when cleaning
+        inc = jnp.asarray(value).astype(jnp.int32)
+        new_state = new_state._replace(
+            epoch=state.epoch.at[set_idx, slot].add(inc))
+    return new_state
 
 
-def clean_slot(state: CacheState, set_idx, slot, expect_tag) -> CacheState:
+def dirty_epoch_of(state: CacheState, set_idx, slot) -> jax.Array:
+    """Dirty version to stamp into a FlushRequest at issue time."""
+    assert state.epoch is not None, "cache built without epoch tracking"
+    return state.epoch[set_idx, slot]
+
+
+def clean_slot(state: CacheState, set_idx, slot, expect_tag,
+               expect_epoch=None) -> CacheState:
     """Flush completion: clear dirty iff the slot still holds ``expect_tag``
-    (paper §3.3.2 staleness rule (i): the page may have been evicted)."""
+    (paper §3.3.2 staleness rule (i): the page may have been evicted) AND —
+    when ``expect_epoch`` is given — no write re-dirtied the slot since the
+    flush was issued. Without the epoch check a write that lands after the
+    flush is issued but before it completes would be silently dropped."""
     ok = state.tags[set_idx, slot] == expect_tag
+    if expect_epoch is not None and state.epoch is not None:
+        ok = jnp.logical_and(ok, state.epoch[set_idx, slot] == expect_epoch)
     return state._replace(
         dirty=state.dirty.at[set_idx, slot].set(jnp.logical_and(state.dirty[set_idx, slot], ~ok)))
 

@@ -1,11 +1,16 @@
 """End-to-end SAFS simulation (paper §3/§4.2): SA-cache + dirty-page flusher +
 dual-priority queues in front of the GC-afflicted SSD array of ``gc_sim``.
 
-One event loop, three layers:
+One event loop (``engine.EventLoop``), three layers:
 
-  app ops --(CPU pool)--> SA-cache --(miss/writeback)--> DualQueue --> SSDServer
+  app ops --(CPU pool)--> SA-cache --(miss/writeback)--> DualQueue --> DeviceModel
                               |                              ^
                               +---- DirtyPageFlusher --------+   (low priority)
+
+Device service is the shared multi-slot NCQ model (``engine.DeviceModel``):
+the DualQueue is the host-side discipline, its ``pop_next`` the admission
+source, and up to ``channels`` admitted requests are serviced concurrently,
+with GC episodes preempting all channels.
 
 The ``flusher=False`` baseline is the paper's "cached I/O without the dirty
 page flusher": identical cache and queues, but dirty pages are written back
@@ -14,15 +19,16 @@ application blocked — exactly the configuration Figures 3-5 compare against.
 """
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass
 
 import numpy as np
 
 from . import policies
+from .engine import DeviceModel, EventLoop, MeasurementWindow
 from .flusher import DirtyPageFlusher, FlushRequest, StalenessChecker
-from .gc_sim import SSDParams, SSDServer, ZipfSampler, _mix64
+from .gc_sim import SSDParams, SSDServer
 from .io_queues import HIGH, LOW, DualQueue, IORequest
+from .workloads import OpSource, _mix64, source_for
 
 
 # ---------------------------------------------------------------------------
@@ -33,6 +39,11 @@ class NumpySACache:
     """Pure-python SA-cache tuned for the DES hot path (sets are 12-wide, so
     python lists beat numpy's per-call overhead by ~10x). Semantics are
     identical to ``policies.py`` — property-tested in tests/test_policies.py.
+
+    Each slot carries a *dirty epoch*, bumped on every ``mark_dirty`` (and on
+    every insert): a flush completion may clean the slot only if the epoch it
+    captured at issue is still current, otherwise a write that re-dirtied the
+    slot after the flush was issued would be silently dropped.
     """
 
     def __init__(self, num_sets: int, set_size: int = policies.SET_SIZE,
@@ -43,6 +54,7 @@ class NumpySACache:
         self.tags = [[-1] * set_size for _ in range(num_sets)]
         self.hits = [[0] * set_size for _ in range(num_sets)]
         self.dirty = [[False] * set_size for _ in range(num_sets)]
+        self.epoch = [[0] * set_size for _ in range(num_sets)]
         self.clock = [0] * num_sets
         self._dirty_n = [0] * num_sets
         self.lookups = 0
@@ -107,11 +119,16 @@ class NumpySACache:
         self.tags[s][slot] = tag
         self.hits[s][slot] = 0
         self.dirty[s][slot] = dirty
+        # new occupant: any in-flight flush for this slot is now for a dead
+        # version, even if the same tag is re-inserted later
+        self.epoch[s][slot] += 1
         if dirty:
             self._dirty_n[s] += 1
         return s, slot, victim_tag, victim_dirty
 
     def mark_dirty(self, s: int, slot: int, value: bool = True):
+        if value:
+            self.epoch[s][slot] += 1   # every write is a new dirty version
         if self.dirty[s][slot] != value:
             self._dirty_n[s] += 1 if value else -1
             self.dirty[s][slot] = value
@@ -148,6 +165,9 @@ class NumpySACache:
     def device_of(self, tag: int) -> int:
         return tag % self.n_devices
 
+    def dirty_epoch_of(self, set_idx: int, slot: int) -> int:
+        return self.epoch[set_idx][slot]
+
     def flush_score_of(self, set_idx: int, slot: int) -> int:
         return self._flush_scores(set_idx)[slot]
 
@@ -168,6 +188,13 @@ class SAFSWorkload:
     unaligned: bool = False        # 128 B writes: read-update-write on miss
     concurrency: int = 576         # in-flight app ops (async: 32 x n_ssds)
     virtual_scale: int = 512
+    # -- scenario layer (core/workloads.py) ---------------------------------
+    scenario: str = "random"       # "random" | "sequential" | "bursty" |
+                                   # "mixed" | "trace"
+    seq_streams: int = 4
+    burst_on: float = 2e-3
+    burst_off: float = 2e-3
+    writer_frac: float = 0.5
 
 
 @dataclass
@@ -183,19 +210,20 @@ class SAFSResults:
     mean_latency: float
     sim_time: float
     util: np.ndarray
-
-
-_CPU_DONE, _SSD_DONE = 0, 1
+    p50_latency: float = 0.0
+    p95_latency: float = 0.0
+    p99_latency: float = 0.0
 
 
 class _Device:
-    """SSDServer + DualQueue + NCQ admission for the SAFS loop."""
+    """DualQueue discipline + shared multi-slot service model for one SSD."""
 
-    def __init__(self, server: SSDServer, queue: DualQueue):
+    def __init__(self, loop: EventLoop, server: SSDServer, queue: DualQueue,
+                 service_time, on_done):
         self.server = server
         self.queue = queue
-        self.admitted: list[IORequest] = []
-        self.pending_writes: dict[int, int] = {}
+        self.model = DeviceModel(loop, server, queue.pop_next,
+                                 service_time, on_done)
 
 
 class SAFSSim:
@@ -204,18 +232,23 @@ class SAFSSim:
                  cache_frac: float = 0.1, use_flusher: bool = True,
                  clean_first: bool = True, score_threshold: int = 2,
                  t_cpu: float = 10e-6, n_cpu: int = 16, seed: int = 0,
-                 reserved_slots: int = policies.RESERVED_SLOTS):
+                 reserved_slots: int = policies.RESERVED_SLOTS,
+                 source: OpSource | None = None,
+                 trace: np.ndarray | None = None):
         self.n = n_ssds
         self.p = ssd
         self.wl = workload
         self.rng = np.random.default_rng(seed)
         self.t_cpu, self.n_cpu = t_cpu, n_cpu
         self.use_flusher = use_flusher
+        self.loop = EventLoop()
 
         self.devices = [
-            _Device(SSDServer(ssd, occupancy, self.rng),
-                    DualQueue(max_inflight=ssd.device_slots, reserved=reserved_slots))
-            for _ in range(n_ssds)
+            _Device(self.loop, SSDServer(ssd, occupancy, self.rng),
+                    DualQueue(max_inflight=ssd.device_slots,
+                              reserved=reserved_slots),
+                    self._service_time_for(i), self._on_done_for(i))
+            for i in range(n_ssds)
         ]
         live_per_ssd = self.devices[0].server.ftl.live_lbas
         self.n_live = live_per_ssd * n_ssds
@@ -237,99 +270,74 @@ class SAFSSim:
             current_score=lambda r: self.cache.flush_score_of(r.set_idx, r.slot),
             score_threshold=score_threshold,
         )
-        if workload.dist == "zipf":
-            self._zipf = ZipfSampler(self.n_live * workload.virtual_scale,
-                                     workload.zipf_s, self.rng)
+        self.source = source or source_for(workload, self.n_live, self.rng,
+                                           trace=trace)
 
         # counters
         self.flush_writes = 0
         self.demand_writes = 0
         self.ssd_reads = 0
-        self.app_completed = 0
-        self.now = 0.0
-        self._heap: list = []
-        self._seq = 0
         self._cpu_free = [0.0] * n_cpu
+        self._mw: MeasurementWindow | None = None
+        self._base = dict(wr=0, rd=0, fl=0, dm=0, st=0, hits=0, lk=0)
 
-    # -- workload -------------------------------------------------------------
-    def _sample_tag(self) -> int:
-        if self.wl.dist == "zipf":
-            return _mix64(self._zipf.sample()) % self.n_live
-        return int(self.rng.integers(self.n_live))
+    @property
+    def now(self) -> float:
+        return self.loop.now
 
-    # -- event helpers ----------------------------------------------------------
-    def _push(self, t: float, kind: int, arg) -> None:
-        heapq.heappush(self._heap, (t, self._seq, kind, arg))
-        self._seq += 1
+    @property
+    def app_completed(self) -> int:
+        return self._mw.completed if self._mw else 0
 
-    def _schedule_cpu(self, fn) -> None:
-        i = min(range(self.n_cpu), key=lambda j: self._cpu_free[j])
-        start = max(self.now, self._cpu_free[i])
-        self._cpu_free[i] = start + self.t_cpu
-        self._push(start + self.t_cpu, _CPU_DONE, fn)
+    # -- device plumbing -----------------------------------------------------
+    def _service_time_for(self, dev_i: int):
+        def service_time(req: IORequest) -> float:
+            s = self.devices[dev_i].server
+            payload = req.payload
+            if payload["op"] == "write":
+                return self.p.t_coalesce if payload.get("coal") \
+                    else s.service_time(False)
+            return s.service_time(True)
+        return service_time
 
-    # -- device helpers ----------------------------------------------------------
+    def _on_done_for(self, dev_i: int):
+        def on_done(req: IORequest) -> None:
+            d = self.devices[dev_i]
+            s = d.server
+            payload = req.payload
+            if payload["op"] == "write":
+                lba = payload["lba"]
+                c = s.pending_writes[lba] - 1
+                if c:
+                    s.pending_writes[lba] = c
+                else:
+                    del s.pending_writes[lba]
+                if not payload.get("coal"):
+                    s.ftl.user_write(lba)
+                s.served_writes += 1
+            else:
+                s.served_reads += 1
+                self.ssd_reads += 1
+            d.queue.complete(req)
+        return on_done
+
     def _submit(self, dev_i: int, req: IORequest) -> None:
         d = self.devices[dev_i]
         payload = req.payload
         if payload["op"] == "write":
             lba = payload["lba"]
-            payload["coal"] = d.pending_writes.get(lba, 0) > 0
-            d.pending_writes[lba] = d.pending_writes.get(lba, 0) + 1
+            s = d.server
+            payload["coal"] = s.pending_writes.get(lba, 0) > 0
+            s.pending_writes[lba] = s.pending_writes.get(lba, 0) + 1
         d.queue.submit(req)
-        self._kick(dev_i)
+        d.model.kick()
 
-    def _kick(self, dev_i: int) -> None:
-        """Admit queued requests into the NCQ and start service / GC."""
-        d = self.devices[dev_i]
-        s = d.server
-        while (req := d.queue.pop_next()) is not None:
-            d.admitted.append(req)
-        if s.busy:
-            return
-        if s.ftl.need_gc():
-            dt = s.gc_episode_time()
-            s.busy = True
-            s.in_gc = True
-            s.gc_time += dt
-            s.busy_time += dt
-            self._push(self.now + dt, _SSD_DONE, dev_i)
-            return
-        if d.admitted:
-            head = d.admitted[0].payload
-            if head["op"] == "write":
-                dt = self.p.t_coalesce if head.get("coal") else s.service_time(False)
-            else:
-                dt = s.service_time(True)
-            s.busy = True
-            s.busy_time += dt
-            self._push(self.now + dt, _SSD_DONE, dev_i)
-
-    def _on_ssd_done(self, dev_i: int) -> None:
-        d = self.devices[dev_i]
-        s = d.server
-        s.busy = False
-        if s.in_gc:
-            s.in_gc = False
-            self._kick(dev_i)
-            return
-        req = d.admitted.pop(0)
-        payload = req.payload
-        if payload["op"] == "write":
-            lba = payload["lba"]
-            c = d.pending_writes[lba] - 1
-            if c:
-                d.pending_writes[lba] = c
-            else:
-                del d.pending_writes[lba]
-            if not payload.get("coal"):
-                s.ftl.user_write(lba)
-            s.served_writes += 1
-        else:
-            s.served_reads += 1
-            self.ssd_reads += 1
-        d.queue.complete(req)
-        self._kick(dev_i)
+    # -- event helpers ----------------------------------------------------------
+    def _schedule_cpu(self, fn) -> None:
+        i = min(range(self.n_cpu), key=lambda j: self._cpu_free[j])
+        start = max(self.now, self._cpu_free[i])
+        self._cpu_free[i] = start + self.t_cpu
+        self.loop.at(start + self.t_cpu, fn)
 
     # -- cache/flusher plumbing ---------------------------------------------
     def _pump_flusher(self, budget: int = 8) -> None:
@@ -348,8 +356,13 @@ class SAFSSim:
 
     def _on_flush_complete(self, fr: FlushRequest) -> None:
         self.flush_writes += 1
-        if int(self.cache.tags[fr.set_idx][fr.slot]) == fr.tag:
-            self.cache.mark_dirty(fr.set_idx, fr.slot, False)
+        c = self.cache
+        # Clean only if the slot still holds the same tag AND no write
+        # re-dirtied it since the flush was issued (dirty-epoch match) —
+        # otherwise the newer version would be silently dropped.
+        if (int(c.tags[fr.set_idx][fr.slot]) == fr.tag
+                and c.epoch[fr.set_idx][fr.slot] == fr.dirty_epoch):
+            c.mark_dirty(fr.set_idx, fr.slot, False)
         self.flusher.note_flush_done(fr)
         self._pump_flusher(budget=2)
 
@@ -360,16 +373,32 @@ class SAFSSim:
                 self._pump_flusher(budget=4)
 
     # -- app op state machine ---------------------------------------------------
+    def _begin_measure(self) -> None:
+        self._base = dict(
+            wr=sum(d.server.ftl.writes for d in self.devices),
+            rd=self.ssd_reads,
+            fl=self.flush_writes,
+            dm=self.demand_writes,
+            st=sum(d.queue.stats.discarded_stale for d in self.devices),
+            hits=self.cache.hit_count,
+            lk=self.cache.lookups,
+        )
+        for d in self.devices:
+            d.server.busy_time = 0.0
+            d.server.gc_time = 0.0
+
     def _complete_op(self, t_start: float) -> None:
-        self.app_completed += 1
-        if self._measuring:
-            self._m_ops += 1
-            self._m_lat += self.now - t_start
+        self._mw.note_completion(t_start)
         self._spawn_op()
 
     def _spawn_op(self) -> None:
-        tag = self._sample_tag()
-        is_read = bool(self.rng.random() < self.wl.read_frac)
+        op = self.source.next_op(self.now)
+        if op.at > self.now:
+            self.loop.at(op.at, lambda: self._admit_op(op.lba, op.is_read))
+        else:
+            self._admit_op(op.lba, op.is_read)
+
+    def _admit_op(self, tag: int, is_read: bool) -> None:
         t0 = self.now
         self._schedule_cpu(lambda: self._process_op(tag, is_read, t0))
 
@@ -418,44 +447,31 @@ class SAFSSim:
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> SAFSResults:
         if warmup_ops is None:
             warmup_ops = measure_ops // 2
-        self._measuring = False
-        self._m_ops = 0
-        self._m_lat = 0.0
+        self._mw = mw = MeasurementWindow(self.loop, warmup_ops,
+                                          self._begin_measure)
         total = warmup_ops + measure_ops
         for _ in range(self.wl.concurrency):
             self._spawn_op()
-        t_measure_start = 0.0
-        wr0 = rd0 = fl0 = dm0 = st0 = 0
-        hits0 = lk0 = 0
-        while self.app_completed < total and self._heap:
-            self.now, _, kind, arg = heapq.heappop(self._heap)
-            if kind == _CPU_DONE:
-                arg()
-            else:
-                self._on_ssd_done(arg)
-            if not self._measuring and self.app_completed >= warmup_ops:
-                self._measuring = True
-                t_measure_start = self.now
-                wr0 = sum(d.server.ftl.writes for d in self.devices)
-                rd0 = self.ssd_reads
-                fl0 = self.flush_writes
-                dm0 = self.demand_writes
-                st0 = sum(d.queue.stats.discarded_stale for d in self.devices)
-                hits0, lk0 = self.cache.hit_count, self.cache.lookups
-                for d in self.devices:
-                    d.server.busy_time = 0.0
-                    d.server.gc_time = 0.0
-        span = max(self.now - t_measure_start, 1e-9)
+        self.loop.run_while(lambda: mw.completed < total)
+        span = mw.span
+        b = self._base
+        summ = mw.latency.summary()
         return SAFSResults(
-            app_iops=self._m_ops / span,
-            hit_rate=(self.cache.hit_count - hits0) / max(self.cache.lookups - lk0, 1),
-            ssd_page_writes=sum(d.server.ftl.writes for d in self.devices) - wr0,
-            flush_writes=self.flush_writes - fl0,
-            demand_writes=self.demand_writes - dm0,
-            ssd_reads=self.ssd_reads - rd0,
-            stale_discards=sum(d.queue.stats.discarded_stale for d in self.devices) - st0,
-            app_ops=self._m_ops,
-            mean_latency=self._m_lat / max(self._m_ops, 1),
+            app_iops=summ.n / span,
+            hit_rate=(self.cache.hit_count - b["hits"]) /
+                     max(self.cache.lookups - b["lk"], 1),
+            ssd_page_writes=sum(d.server.ftl.writes for d in self.devices) - b["wr"],
+            flush_writes=self.flush_writes - b["fl"],
+            demand_writes=self.demand_writes - b["dm"],
+            ssd_reads=self.ssd_reads - b["rd"],
+            stale_discards=sum(d.queue.stats.discarded_stale
+                               for d in self.devices) - b["st"],
+            app_ops=summ.n,
+            mean_latency=summ.mean,
             sim_time=span,
-            util=np.array([d.server.busy_time / span for d in self.devices]),
+            util=np.array([d.server.busy_time / (span * self.p.channels)
+                           for d in self.devices]),
+            p50_latency=summ.p50,
+            p95_latency=summ.p95,
+            p99_latency=summ.p99,
         )

@@ -1,0 +1,244 @@
+"""Workload scenario layer shared by both simulators and the benchmarks.
+
+Every workload is an ``OpSource``: a stateful stream of :class:`Op` records
+(LBA, read/write, earliest-issue time, tenant). The simulators pull from a
+source instead of sampling inline, so the same scenario definitions drive the
+raw-array simulator (``gc_sim.ArraySim``), the full SAFS stack
+(``safs_sim.SAFSSim``), and the benchmark sweeps.
+
+Scenarios:
+
+* ``uniform`` / ``zipf`` — the paper's 4 KB random workloads (§4).
+* ``sequential`` — N evenly spaced sequential cursors round-robined, the
+  classic multi-stream sequential writer.
+* ``bursty`` — on/off arrival gating around any base source; during OFF
+  windows ``Op.at`` jumps to the next ON window (open-loop lulls).
+* ``mixed`` — two tenants: a Zipf-hot reader tenant and a random writer
+  tenant, mixed by ``writer_frac``.
+* ``trace`` — replay of a ``(time, lba, op)`` array, looping with a time
+  offset when exhausted.
+
+Closed-loop sources emit ``at=0.0`` (issue immediately); open-loop sources
+(bursty, trace) emit a real earliest-issue time and the simulators honour it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import numpy as np
+
+# trace op codes for TraceSource arrays
+TRACE_READ = 0
+TRACE_WRITE = 1
+
+
+def _mix64(x: int) -> int:
+    """splitmix64 finalizer — cheap stateless permutation-ish hash."""
+    x = (x + 0x9E3779B97F4A7C15) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFFFFFFFFFFFFFF
+    x = ((x ^ (x >> 27)) * 0x94D049BB133111EB) & 0xFFFFFFFFFFFFFFFF
+    return x ^ (x >> 31)
+
+
+class ZipfSampler:
+    """Bounded Zipf(s) over ranks 1..N: exact CDF for the head, continuous
+    generalized-harmonic inverse for the tail. O(1) memory in N."""
+
+    HEAD = 4096
+
+    def __init__(self, n: int, s: float, rng: np.random.Generator):
+        self.n, self.s, self.rng = n, s, rng
+        head = min(self.HEAD, n)
+        ranks = np.arange(1, head + 1, dtype=np.float64)
+        head_w = ranks ** (-s)
+        self._head_cum = np.cumsum(head_w)
+        h_head = float(self._head_cum[-1])
+        if n > head:
+            # integral_{head+.5}^{n+.5} x^-s dx
+            if abs(s - 1.0) < 1e-9:
+                tail = np.log((n + 0.5) / (head + 0.5))
+            else:
+                tail = ((n + 0.5) ** (1 - s) - (head + 0.5) ** (1 - s)) / (1 - s)
+        else:
+            tail = 0.0
+        self._h_head, self._h_total = h_head, h_head + tail
+        self._p_head = h_head / self._h_total
+
+    def sample(self) -> int:
+        u = self.rng.random()
+        if u < self._p_head or self.n <= self.HEAD:
+            t = u * self._h_total
+            return int(np.searchsorted(self._head_cum, t) + 1)
+        rem = u * self._h_total - self._h_head
+        head, s = min(self.HEAD, self.n), self.s
+        if abs(s - 1.0) < 1e-9:
+            k = (head + 0.5) * np.exp(rem)
+        else:
+            k = ((head + 0.5) ** (1 - s) + rem * (1 - s)) ** (1.0 / (1 - s))
+        return int(min(max(k, head + 1), self.n))
+
+
+@dataclass(frozen=True)
+class Op:
+    """One application request. ``at`` is the earliest simulated time the op
+    may issue (0.0 = immediately, the closed-loop case)."""
+
+    lba: int
+    is_read: bool
+    at: float = 0.0
+    tenant: int = 0
+
+
+class OpSource:
+    """Stateful stream of operations."""
+
+    def next_op(self, now: float) -> Op:
+        raise NotImplementedError
+
+
+class UniformSource(OpSource):
+    def __init__(self, n_live: int, rng: np.random.Generator,
+                 read_frac: float = 0.0):
+        self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+
+    def next_op(self, now: float) -> Op:
+        return Op(int(self.rng.integers(self.n_live)),
+                  bool(self.rng.random() < self.read_frac))
+
+
+class ZipfSource(OpSource):
+    """Zipf ranks in a virtual LBA space ``virtual_scale`` times the live
+    space, hashed onto physical LBAs (keeps the head below one SSD's fair
+    share, as at real scale)."""
+
+    def __init__(self, n_live: int, rng: np.random.Generator,
+                 read_frac: float = 0.0, s: float = 0.99,
+                 virtual_scale: int = 512):
+        self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+        self._zipf = ZipfSampler(n_live * virtual_scale, s, rng)
+
+    def next_op(self, now: float) -> Op:
+        lba = _mix64(self._zipf.sample()) % self.n_live
+        return Op(lba, bool(self.rng.random() < self.read_frac))
+
+
+class SequentialSource(OpSource):
+    """``streams`` sequential cursors spaced evenly over the LBA space,
+    advanced round-robin (multi-stream sequential I/O). Wraps at the end."""
+
+    def __init__(self, n_live: int, rng: np.random.Generator,
+                 read_frac: float = 0.0, streams: int = 4):
+        streams = max(1, streams)
+        self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+        self.cursors = [(i * n_live) // streams for i in range(streams)]
+        self._next = 0
+
+    def next_op(self, now: float) -> Op:
+        i = self._next
+        self._next = (i + 1) % len(self.cursors)
+        lba = self.cursors[i]
+        self.cursors[i] = (lba + 1) % self.n_live
+        return Op(lba, bool(self.rng.random() < self.read_frac), tenant=i)
+
+
+class BurstySource(OpSource):
+    """On/off arrival gating around a base source. Time is divided into
+    ``on + off`` periods; ops requested during an OFF window are deferred
+    (``at`` = start of the next ON window)."""
+
+    def __init__(self, base: OpSource, on_time: float, off_time: float):
+        assert on_time > 0.0 and off_time >= 0.0
+        self.base = base
+        self.on, self.off = on_time, off_time
+
+    def next_op(self, now: float) -> Op:
+        op = self.base.next_op(now)
+        period = self.on + self.off
+        phase = now % period
+        if phase >= self.on:  # in an OFF window: defer to the next period
+            op = replace(op, at=max(op.at, now + (period - phase)))
+        return op
+
+
+class MixedTenantSource(OpSource):
+    """Multi-tenant mix: tenant 0 is a Zipf-hot reader, tenant 1 a random
+    writer; each op is drawn from one tenant with probability
+    ``writer_frac`` of being the writer."""
+
+    def __init__(self, reader: OpSource, writer: OpSource,
+                 rng: np.random.Generator, writer_frac: float = 0.5):
+        self.reader, self.writer = reader, writer
+        self.rng, self.writer_frac = rng, writer_frac
+
+    def next_op(self, now: float) -> Op:
+        if self.rng.random() < self.writer_frac:
+            return replace(self.writer.next_op(now), tenant=1)
+        return replace(self.reader.next_op(now), tenant=0)
+
+
+class TraceSource(OpSource):
+    """Replay a ``(time, lba, op)`` array (op: 0 = read, 1 = write).
+
+    Rows must be time-sorted. LBAs are folded onto the live space with
+    ``mod n_live``. When the trace is exhausted it loops, shifting times by
+    the trace span so arrival times stay monotone."""
+
+    def __init__(self, trace: np.ndarray, n_live: int, time_scale: float = 1.0):
+        trace = np.asarray(trace)
+        assert trace.ndim == 2 and trace.shape[1] == 3, \
+            "trace must be (n, 3): time, lba, op"
+        assert trace.shape[0] > 0, "empty trace"
+        self.times = trace[:, 0].astype(np.float64) * time_scale
+        self.lbas = trace[:, 1].astype(np.int64) % n_live
+        self.ops = trace[:, 2].astype(np.int64)
+        # loop period: span plus one mean inter-arrival gap
+        span = float(self.times[-1] - self.times[0])
+        self.period = span + max(span / max(len(self.times) - 1, 1), 1e-9)
+        self._i = 0
+        self._offset = 0.0
+
+    def next_op(self, now: float) -> Op:
+        if self._i >= len(self.times):
+            self._i = 0
+            self._offset += self.period
+        i = self._i
+        self._i += 1
+        return Op(int(self.lbas[i]), self.ops[i] == TRACE_READ,
+                  at=self._offset + float(self.times[i]))
+
+
+def source_for(wl, n_live: int, rng: np.random.Generator,
+               trace: Optional[np.ndarray] = None) -> OpSource:
+    """Build the OpSource for a workload spec (``gc_sim.Workload`` or
+    ``safs_sim.SAFSWorkload`` — anything with the scenario attributes)."""
+    scenario = getattr(wl, "scenario", "random")
+    read_frac = getattr(wl, "read_frac", 0.0)
+
+    def random_base():
+        if getattr(wl, "dist", "uniform") == "zipf":
+            return ZipfSource(n_live, rng, read_frac,
+                              s=getattr(wl, "zipf_s", 0.99),
+                              virtual_scale=getattr(wl, "virtual_scale", 512))
+        return UniformSource(n_live, rng, read_frac)
+
+    if scenario == "random":
+        return random_base()
+    if scenario == "sequential":
+        return SequentialSource(n_live, rng, read_frac,
+                                streams=getattr(wl, "seq_streams", 4))
+    if scenario == "bursty":
+        return BurstySource(random_base(),
+                            on_time=getattr(wl, "burst_on", 2e-3),
+                            off_time=getattr(wl, "burst_off", 2e-3))
+    if scenario == "mixed":
+        reader = ZipfSource(n_live, rng, read_frac=1.0,
+                            s=getattr(wl, "zipf_s", 0.99),
+                            virtual_scale=getattr(wl, "virtual_scale", 512))
+        writer = UniformSource(n_live, rng, read_frac=0.0)
+        return MixedTenantSource(reader, writer, rng,
+                                 writer_frac=getattr(wl, "writer_frac", 0.5))
+    if scenario == "trace":
+        assert trace is not None, "scenario='trace' needs a trace array"
+        return TraceSource(trace, n_live)
+    raise ValueError(f"unknown workload scenario: {scenario!r}")

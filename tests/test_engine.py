@@ -1,0 +1,154 @@
+"""Shared discrete-event engine: loop ordering, latency stats, and the
+multi-slot NCQ device model (service overlap + GC preemption)."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core.engine import DeviceModel, EventLoop, LatencyRecorder
+
+
+def test_event_loop_orders_by_time_then_fifo():
+    loop = EventLoop()
+    order = []
+    loop.at(2.0, lambda: order.append("b"))
+    loop.at(1.0, lambda: order.append("a"))
+    loop.at(2.0, lambda: order.append("c"))     # same time: FIFO
+    while loop.step():
+        pass
+    assert order == ["a", "b", "c"]
+    assert loop.now == 2.0
+
+
+def test_event_loop_schedule_is_relative():
+    loop = EventLoop()
+    times = []
+    loop.at(1.0, lambda: loop.schedule(0.5, lambda: times.append(loop.now)))
+    while loop.step():
+        pass
+    assert times == [1.5]
+
+
+def test_latency_recorder_percentiles():
+    rec = LatencyRecorder()
+    for v in range(1, 101):
+        rec.record(float(v))
+    s = rec.summary()
+    assert s.n == 100
+    assert s.mean == pytest.approx(50.5)
+    assert s.p50 == pytest.approx(50.5)
+    assert s.p95 <= s.p99 <= 100.0
+    rec.reset()
+    assert rec.summary().n == 0
+
+
+class FakeFTL:
+    def __init__(self):
+        self.gc_needed = False
+
+    def need_gc(self):
+        return self.gc_needed
+
+
+class FakeServer:
+    """Duck-typed SSDServer: params + FTL + GC episode + accounting."""
+
+    def __init__(self, channels=2, device_slots=4, gc_len=5.0):
+        self.p = SimpleNamespace(channels=channels, device_slots=device_slots)
+        self.ftl = FakeFTL()
+        self.in_gc = False
+        self.gc_time = 0.0
+        self.busy_time = 0.0
+        self._gc_len = gc_len
+
+    def gc_episode_time(self):
+        self.ftl.gc_needed = False
+        return self._gc_len
+
+
+def _device(server, reqs, dt=1.0):
+    loop = EventLoop()
+    pending = list(reqs)
+    done = []
+    dev = DeviceModel(loop, server,
+                      pull=lambda: pending.pop(0) if pending else None,
+                      service_time=lambda r: dt,
+                      on_done=lambda r: done.append((r, loop.now)))
+    return loop, dev, done
+
+
+def test_channels_service_concurrently():
+    """4 unit-time requests on 2 channels finish at t=1,1,2,2 — makespan 2,
+    not 4 (the old fluid model had no service overlap at all)."""
+    server = FakeServer(channels=2, device_slots=4)
+    loop, dev, done = _device(server, ["a", "b", "c", "d"])
+    dev.kick()
+    while loop.step():
+        pass
+    assert [t for _, t in done] == [1.0, 1.0, 2.0, 2.0]
+    assert server.busy_time == pytest.approx(4.0)   # channel-seconds
+
+
+def test_queue_depth_bounds_overlap():
+    """With only one request ever outstanding, channels cannot overlap:
+    throughput degrades to 1/t_op — queue depth is a real lever."""
+    server = FakeServer(channels=4, device_slots=8)
+    loop = EventLoop()
+    done = []
+    backlog = ["a", "b", "c"]
+    holder = []
+
+    def pull():
+        # closed loop with window 1: refill only after completion
+        if holder and backlog is not None:
+            return holder.pop()
+        return None
+
+    dev = DeviceModel(loop, server, pull=pull,
+                      service_time=lambda r: 1.0,
+                      on_done=lambda r: (done.append((r, loop.now)),
+                                         holder.append(backlog.pop(0))
+                                         if backlog else None))
+    holder.append("first")
+    dev.kick()
+    while loop.step():
+        pass
+    assert [t for _, t in done] == [1.0, 2.0, 3.0, 4.0]
+
+
+def test_ncq_admission_cap():
+    server = FakeServer(channels=1, device_slots=2)
+    loop, dev, done = _device(server, list("abcdef"))
+    dev.kick()
+    assert dev.occupancy == 2          # device_slots, not the whole backlog
+    while loop.step():
+        pass
+    assert len(done) == 6
+
+
+def test_gc_preempts_all_channels():
+    """GC waits for in-flight ops to drain, then blocks every channel for the
+    whole episode; queued requests resume afterwards."""
+    server = FakeServer(channels=2, device_slots=8, gc_len=5.0)
+    loop, dev, done = _device(server, list("abcd"))
+    dev.kick()                          # a, b in service
+    server.ftl.gc_needed = True         # trips while channels busy
+    while loop.step():
+        pass
+    times = [t for _, t in done]
+    assert times[:2] == [1.0, 1.0]      # in-flight ops drain first
+    assert times[2:] == [7.0, 7.0]      # 1 (drain) + 5 (episode) + 1 (service)
+    assert server.gc_time == pytest.approx(5.0)
+    # episode charged on all channels
+    assert server.busy_time == pytest.approx(4.0 + 5.0 * 2)
+
+
+def test_gc_runs_even_with_empty_queue():
+    server = FakeServer(channels=2, device_slots=4, gc_len=3.0)
+    server.ftl.gc_needed = True
+    loop, dev, done = _device(server, [])
+    dev.kick()
+    while loop.step():
+        pass
+    assert server.gc_time == pytest.approx(3.0)
+    assert not dev.in_gc

@@ -2,8 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core.gc_sim import (FTL, ArraySim, SSDParams, Workload, ZipfSampler,
-                               single_ssd_write_iops)
+from repro.core.gc_sim import (FTL, ArraySim, SealFifo, SSDParams, Workload,
+                               ZipfSampler, single_ssd_write_iops)
 
 SMALL = SSDParams(capacity_pages=8192)
 
@@ -66,6 +66,99 @@ def test_zipf_sampler_is_skewed_and_bounded():
     assert xs.min() >= 1 and xs.max() <= 10**9
     top = (xs <= 10).mean()
     assert top > 0.05          # heavy head
+
+
+def test_seal_fifo_order_removal_and_compaction():
+    sf = SealFifo()
+    for b in range(10):
+        sf.append(b)
+    assert len(sf) == 10 and 3 in sf
+    for b in (0, 2, 4, 6, 8, 1):          # > half dead: triggers compaction
+        sf.remove(b)
+    assert len(sf) == 4 and 0 not in sf
+    assert list(sf) == [3, 5, 7, 9]       # seal order survives compaction
+    assert sf.head_window(2) == [3, 5]
+    sf.append(42)
+    assert list(sf) == [3, 5, 7, 9, 42]
+
+
+def test_seal_fifo_sample_distinct():
+    """Sampled GC must be true d-choices: no duplicate candidates (sampling
+    the same index twice degenerated d-choices to 1-choice)."""
+    rng = np.random.default_rng(7)
+    sf = SealFifo()
+    for b in range(20):
+        sf.append(b)
+    for b in range(0, 20, 2):
+        sf.remove(b)                      # leave tombstones in the backing array
+    for _ in range(200):
+        got = sf.sample_distinct(rng, 4)
+        assert len(got) == len(set(got)) == 4
+        assert all(b % 2 == 1 for b in got)
+    # k >= live returns everything
+    assert sorted(sf.sample_distinct(rng, 50)) == list(range(1, 20, 2))
+
+
+def test_batched_prefill_matches_scalar_programs():
+    """The vectorized sequential fill must leave the FTL in exactly the state
+    the one-page-at-a-time loop produced."""
+    for occ in (0.3, 0.5):
+        fast = FTL(SMALL, np.random.default_rng(0))
+        fast.prefill(occ, churn=False)
+        slow = FTL(SMALL, np.random.default_rng(0))
+        for lba in range(int(SMALL.capacity_pages * occ)):
+            slow._program(lba)
+        np.testing.assert_array_equal(fast.page_lba, slow.page_lba)
+        np.testing.assert_array_equal(fast.lba_loc, slow.lba_loc)
+        np.testing.assert_array_equal(fast.valid_count, slow.valid_count)
+        np.testing.assert_array_equal(fast.sealed, slow.sealed)
+        assert list(fast.seal_fifo) == list(slow.seal_fifo)
+        assert (fast.active, fast.active_off) == (slow.active, slow.active_off)
+        assert list(fast.free_blocks) == list(slow.free_blocks)
+
+
+def test_program_chunk_handles_duplicates():
+    """Within-batch duplicate LBAs: last occurrence wins, earlier ones land
+    dead-on-arrival — identical to sequential scalar programs."""
+    a = FTL(SMALL, np.random.default_rng(1))
+    b = FTL(SMALL, np.random.default_rng(1))
+    a.prefill(0.4, churn=False)
+    b.prefill(0.4, churn=False)
+    lbas = np.array([5, 9, 5, 7, 9, 9, 11], dtype=np.int64)
+    a._program_chunk(lbas)
+    for lba in lbas:
+        b._program(int(lba))
+    np.testing.assert_array_equal(a.page_lba, b.page_lba)
+    np.testing.assert_array_equal(a.lba_loc, b.lba_loc)
+    np.testing.assert_array_equal(a.valid_count, b.valid_count)
+    assert (a.active, a.active_off) == (b.active, b.active_off)
+
+
+def test_queue_depth_scales_throughput_under_gc():
+    """The paper's core lever, now a real experimental variable: deeper
+    per-SSD queues monotonically raise array throughput while GC is active,
+    because NCQ slots overlap service and hide unsynchronized GC pauses."""
+    prev = 0.0
+    for qd in (1, 4, 32, 128):
+        r = ArraySim(4, SMALL, 0.6,
+                     Workload(w_total=4 * qd, qd_per_ssd=qd, n_streams=4),
+                     seed=0).run(8000)
+        assert r.iops > prev, f"qd={qd} did not improve throughput"
+        assert r.p50_latency <= r.p95_latency <= r.p99_latency
+        assert r.p99_latency > 0
+        prev = r.iops
+
+
+@pytest.mark.slow
+def test_queue_depth_sweep_18_ssd_array():
+    """Acceptance sweep at the paper's array scale (18 SSDs)."""
+    prev = 0.0
+    for qd in (1, 4, 32, 128):
+        r = ArraySim(18, SMALL, 0.6,
+                     Workload(w_total=18 * qd, qd_per_ssd=qd, n_streams=18),
+                     seed=0).run(30000)
+        assert r.iops > prev, f"qd={qd} did not improve throughput"
+        prev = r.iops
 
 
 def test_zipf_workload_coalesces_more_than_uniform():

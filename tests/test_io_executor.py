@@ -1,0 +1,72 @@
+"""Threaded IOExecutor regressions (no hypothesis needed — these must run in
+the minimal tier-1 environment).
+
+The big one: ``DualQueue.pop_next`` fires the ``refill`` callback inline, and
+workers call ``pop_next`` while holding the per-device condition lock. A
+refill callback that re-enters ``IOExecutor.submit`` on the same device used
+to self-deadlock on the non-reentrant lock; the executor now defers the
+callback until the lock is released.
+"""
+import threading
+
+from repro.core.io_queues import HIGH, LOW, IOExecutor, IORequest
+
+
+def test_refill_callback_can_resubmit_same_device():
+    """A stale discard triggers refill; the refill submits replacement work to
+    the SAME device. Pre-fix this deadlocked (drain timed out)."""
+    done = []
+    ex = IOExecutor(1, lambda dev, payload: done.append(payload),
+                    max_inflight=2, reserved=0)
+    refilled = threading.Event()
+
+    def refill():
+        if not refilled.is_set():        # one replacement is enough
+            refilled.set()
+            assert ex.submit(0, IORequest(payload="refilled", priority=LOW))
+
+    ex.set_refill(0, refill)
+    ex.submit(0, IORequest(payload="stale", priority=LOW,
+                           is_stale=lambda p: True))
+    assert refilled.wait(10.0), "refill callback never ran (deadlock?)"
+    assert ex.drain(10.0)
+    ex.shutdown()
+    assert done == ["refilled"]
+    assert ex.stats(0).discarded_stale == 1
+
+
+def test_refill_runs_even_when_queue_drains_empty():
+    """pop_next returning None after discarding stales must still trigger the
+    deferred refill (the executor cannot sit in cv.wait on work the refill
+    would produce)."""
+    done = []
+    ex = IOExecutor(1, lambda dev, payload: done.append(payload),
+                    max_inflight=1, reserved=0)
+    calls = []
+    ex.set_refill(0, lambda: calls.append(1))
+    for i in range(3):
+        ex.submit(0, IORequest(payload=i, priority=LOW, is_stale=lambda p: True))
+    assert ex.drain(10.0)
+    ex.shutdown()
+    assert done == []
+    assert calls, "refill was recorded but never invoked"
+
+
+def test_on_complete_can_resubmit_same_device():
+    """Completion callbacks run outside the device lock, so chained
+    submissions (the SAFS follow-on pattern) are safe under the executor."""
+    done = []
+    ex = IOExecutor(1, lambda dev, payload: done.append(payload),
+                    max_inflight=1, reserved=0)
+    chained = threading.Event()
+
+    def chain(_payload):
+        if not chained.is_set():
+            chained.set()
+            ex.submit(0, IORequest(payload="second", priority=HIGH))
+
+    ex.submit(0, IORequest(payload="first", priority=LOW, on_complete=chain))
+    assert chained.wait(10.0)
+    assert ex.drain(10.0)
+    ex.shutdown()
+    assert done == ["first", "second"]

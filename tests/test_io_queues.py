@@ -3,6 +3,9 @@ import threading
 import time
 
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.io_queues import (HIGH, LOW, DualQueue, IOExecutor, IORequest,

@@ -23,6 +23,7 @@ def _inputs(cfg, b, s):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_smoke_forward_and_train_step(arch):
     cfg = reduced(get_config(arch))
     params = T.init_params(RNG, cfg)
@@ -45,6 +46,7 @@ def test_smoke_forward_and_train_step(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_prefill_decode_matches_forward(arch):
     cfg = reduced(get_config(arch))
     params = T.init_params(RNG, cfg)
@@ -63,6 +65,7 @@ def test_prefill_decode_matches_forward(arch):
                                    atol=5e-3, rtol=5e-3)
 
 
+@pytest.mark.slow
 def test_sliding_window_ring_buffer_wraps():
     """danube-style SWA: decode far past the window; ring must stay correct."""
     cfg = reduced(get_config("h2o-danube-3-4b"))
@@ -86,6 +89,7 @@ def test_sliding_window_ring_buffer_wraps():
                                    atol=5e-3, rtol=5e-3)
 
 
+@pytest.mark.slow
 def test_param_count_analytics_match_actual():
     for arch in ARCH_IDS:
         cfg = reduced(get_config(arch))
@@ -109,6 +113,7 @@ def test_moe_capacity_drops_are_bounded():
     assert float(aux["lb"]) > 0
 
 
+@pytest.mark.slow
 def test_mamba_chunk_invariance():
     """SSD chunked scan must not depend on the chunk size."""
     from repro.models.ssm import init_mamba, mamba_chunked

@@ -1,6 +1,9 @@
 """Property tests: the paper's policies (numpy oracle) vs the JAX SA-cache twin."""
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax

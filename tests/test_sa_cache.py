@@ -1,0 +1,85 @@
+"""JAX SA-cache twin: dirty-epoch regressions for the flush-completion
+lost-write race (no hypothesis needed — these must run in tier-1).
+
+The race: a flush is issued for (tag, set, slot); while it is in flight a
+write re-dirties the slot; the completion then cleared the dirty bit because
+the tag still matched, silently dropping the newer version. ``clean_slot``
+now also checks the per-slot dirty epoch captured at issue time.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sa_cache
+from repro.core.sa_cache import (CacheState, clean_slot, dirty_epoch_of,
+                                 insert, lookup, make_cache, mark_dirty)
+
+
+def test_clean_slot_epoch_mismatch_keeps_dirty():
+    cache = make_cache(1, 4)
+    _, _, slot, cache = insert(cache, jnp.int32(0), jnp.int32(5),
+                               jnp.bool_(True))
+    issued = int(dirty_epoch_of(cache, 0, slot))
+    # a write re-dirties the slot while the flush is in flight
+    cache = mark_dirty(cache, 0, slot, True)
+    cache = clean_slot(cache, 0, slot, expect_tag=5, expect_epoch=issued)
+    assert bool(cache.dirty[0, slot]), "newer write must not be dropped"
+    # a flush completing with the *current* epoch does clean
+    cache = clean_slot(cache, 0, slot, expect_tag=5,
+                       expect_epoch=int(dirty_epoch_of(cache, 0, slot)))
+    assert not bool(cache.dirty[0, slot])
+
+
+def test_clean_slot_same_tag_reinserted_stays_dirty():
+    """Evict + re-insert the SAME tag into the same slot: a flush issued for
+    the first incarnation must not clean the second (tag check alone cannot
+    see this; insert bumps the epoch)."""
+    cache = make_cache(1, 1)                      # one slot: reuse guaranteed
+    _, _, slot, cache = insert(cache, jnp.int32(0), jnp.int32(5),
+                               jnp.bool_(True))
+    issued = int(dirty_epoch_of(cache, 0, slot))
+    _, _, _, cache = insert(cache, jnp.int32(0), jnp.int32(9),
+                            jnp.bool_(True))      # evicts tag 5
+    _, _, _, cache = insert(cache, jnp.int32(0), jnp.int32(5),
+                            jnp.bool_(True))      # tag 5 back, new content
+    cache = clean_slot(cache, 0, slot, expect_tag=5, expect_epoch=issued)
+    assert bool(cache.dirty[0, slot])
+
+
+def test_clean_slot_without_epoch_matches_legacy_rule():
+    cache = make_cache(1, 4)
+    _, _, slot, cache = insert(cache, jnp.int32(0), jnp.int32(5),
+                               jnp.bool_(True))
+    cache = clean_slot(cache, 0, slot, expect_tag=5)   # no epoch given
+    assert not bool(cache.dirty[0, slot])
+
+
+def test_legacy_state_without_epoch_field_still_works():
+    """States built before the epoch field (epoch=None) keep functioning:
+    lookup/insert/mark_dirty/clean_slot never touch the missing array."""
+    ss = 4
+    cache = CacheState(
+        tags=jnp.full((1, ss), sa_cache.EMPTY, dtype=jnp.int32),
+        hits=jnp.zeros((1, ss), dtype=jnp.int32),
+        dirty=jnp.zeros((1, ss), dtype=jnp.bool_),
+        clock=jnp.zeros((1,), dtype=jnp.int32))
+    assert cache.epoch is None
+    _, _, slot, cache = insert(cache, jnp.int32(0), jnp.int32(7),
+                               jnp.bool_(True))
+    assert cache.epoch is None
+    hit, s2, cache = lookup(cache, jnp.int32(0), jnp.int32(7))
+    assert bool(hit) and int(s2) == int(slot)
+    cache = mark_dirty(cache, 0, slot, True)
+    cache = clean_slot(cache, 0, slot, expect_tag=7, expect_epoch=3)
+    assert not bool(cache.dirty[0, slot])   # epoch check disabled: tag rules
+
+
+def test_epoch_bumps_on_insert_and_mark_dirty():
+    cache = make_cache(2, 4)
+    _, _, slot, cache = insert(cache, jnp.int32(1), jnp.int32(3),
+                               jnp.bool_(False))
+    e0 = int(cache.epoch[1, slot])
+    cache = mark_dirty(cache, 1, slot, True)
+    cache = mark_dirty(cache, 1, slot, True)    # every write is a new version
+    assert int(cache.epoch[1, slot]) == e0 + 2
+    cache = mark_dirty(cache, 1, slot, False)   # cleaning is not a version
+    assert int(cache.epoch[1, slot]) == e0 + 2

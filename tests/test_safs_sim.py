@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 
+from repro.core.flusher import FlushRequest
 from repro.core.gc_sim import SSDParams
 from repro.core.safs_sim import NumpySACache, SAFSSim, SAFSWorkload
 
@@ -66,6 +67,58 @@ def test_demand_writes_nearly_eliminated():
                       cache_frac=0.1, use_flusher=False, seed=2)
     r_off = sim_off.run(10000)
     assert r.demand_writes < r_off.demand_writes
+
+
+def _register_inflight(flusher, fr):
+    """Book a hand-built FlushRequest as issued (what make_requests does)."""
+    flusher._pending_per_dev[fr.device] = \
+        flusher._pending_per_dev.get(fr.device, 0) + 1
+    flusher._total_pending += 1
+    flusher._inflight.add((fr.set_idx, fr.slot, fr.tag))
+
+
+def test_flush_completion_does_not_drop_concurrent_write():
+    """Regression for the lost-write race: a write that re-dirties a slot
+    AFTER its flush was issued must survive the flush completion. The old
+    code cleaned whenever the tag still matched."""
+    sim = SAFSSim(n_ssds=1, ssd=SMALL, occupancy=0.5,
+                  workload=SAFSWorkload(concurrency=8), cache_frac=0.1,
+                  use_flusher=True, seed=0)
+    c = sim.cache
+    tag = 1234
+    s, slot, _, _ = c.insert(tag, dirty=True)
+    fr = FlushRequest(tag=tag, set_idx=s, slot=slot, device=0,
+                      score_at_issue=5, dirty_epoch=c.dirty_epoch_of(s, slot))
+    _register_inflight(sim.flusher, fr)
+    c.mark_dirty(s, slot)              # concurrent write while flush in flight
+    sim._on_flush_complete(fr)
+    assert c.dirty[s][slot], "flush completion dropped the newer write"
+    # a flush carrying the CURRENT epoch does clean
+    fr2 = FlushRequest(tag=tag, set_idx=s, slot=slot, device=0,
+                       score_at_issue=5, dirty_epoch=c.dirty_epoch_of(s, slot))
+    _register_inflight(sim.flusher, fr2)
+    sim._on_flush_complete(fr2)
+    assert not c.dirty[s][slot]
+
+
+def test_flusher_stamps_current_epoch_into_requests():
+    c = NumpySACache(num_sets=8, set_size=4, n_devices=1)
+    from repro.core.flusher import DirtyPageFlusher
+    f = DirtyPageFlusher(c, 1, trigger=0, per_visit=4)
+    s, slot, _, _ = c.insert(7, dirty=True)
+    f.note_write(s)
+    (fr,) = f.make_requests(budget=1)
+    assert (fr.set_idx, fr.slot, fr.tag) == (s, slot, 7)
+    assert fr.dirty_epoch == c.dirty_epoch_of(s, slot)
+
+
+def test_safs_results_include_latency_percentiles():
+    sim = SAFSSim(n_ssds=2, ssd=SMALL, occupancy=0.6,
+                  workload=SAFSWorkload(read_frac=0.2, concurrency=64),
+                  cache_frac=0.1, use_flusher=True, seed=4)
+    r = sim.run(5000)
+    assert 0 < r.p50_latency <= r.p95_latency <= r.p99_latency
+    assert r.mean_latency > 0
 
 
 def test_stale_discards_happen_under_churn():

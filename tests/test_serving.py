@@ -10,6 +10,8 @@ from repro.models import transformer as T
 from repro.serving import ServeEngine
 from repro.serving.kv_pool import PagedAllocator
 
+pytestmark = pytest.mark.slow  # end-to-end engine runs: nightly tier
+
 RNG = jax.random.PRNGKey(0)
 
 

@@ -4,6 +4,8 @@ import pytest
 
 from repro.launch.train import main as train_main
 
+pytestmark = pytest.mark.slow  # end-to-end train runs: nightly tier
+
 
 def test_train_loss_decreases(tmp_path):
     losses = train_main([
