@@ -15,11 +15,22 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true",
                     help="smaller op counts (CI)")
     args = ap.parse_args(argv)
-    del args
 
-    from . import paper_figs, paper_tables, roofline, serving_bench
+    # perf + scale first, before anything imports jax: ShardedArraySim's
+    # worker pool can then use the fast 'fork' start method (forking after
+    # the multithreaded JAX runtime initializes risks worker deadlock, and
+    # the fallback 'spawn' pool is slower to start)
+    from . import perf_bench, scale_sweep
 
     t0 = time.time()
+    print("=" * 72)
+    print("SSEngine perf -- events/sec + sharded 100+ SSD scale sweep")
+    print("=" * 72)
+    rc = perf_bench.main(["--smoke"] if args.fast else [])
+    rc |= scale_sweep.main(["--smoke"] if args.fast else [])
+    print()
+
+    from . import paper_figs, paper_tables, roofline, serving_bench
     print("=" * 72)
     print("SSPaper -- Table 1 / Table 2 / Figure 2 (raw array under GC)")
     print("=" * 72)
@@ -40,7 +51,9 @@ def main(argv=None):
     print("=" * 72)
     roofline.main()
     print(f"\ntotal benchmark wall time: {time.time() - t0:.0f}s")
+    return rc
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    sys.exit(main())

@@ -1,0 +1,125 @@
+"""Production-scale array sweeps via ``ShardedArraySim`` (100+ SSDs).
+
+The ROADMAP's scale-sweep item: run the paper's queue-depth dynamic at array
+sizes far beyond the paper's 18 SSDs and record how the qd lever behaves as
+the array grows. Per-device state is independent, so the array shards across
+worker processes; the host window W and measurement budget are split
+proportionally per shard (see ``core/sharded.py`` for the modeling note).
+
+For each array size the sweep reports per-SSD IOPS, tail latency, GC pause
+fraction, and aggregate simulation events/sec, and asserts the paper's
+monotone qd->throughput trend still holds at scale.
+
+Usage (relative imports — run as a module):
+    PYTHONPATH=src python -m benchmarks.scale_sweep            # 18..128 SSDs
+    PYTHONPATH=src python -m benchmarks.scale_sweep --smoke    # 8/16 SSDs, CI
+    PYTHONPATH=src python -m benchmarks.scale_sweep --sizes 64 256 --qds 4 32 128
+
+Writes ``BENCH_scale.json`` (repo root) and ``experiments/bench/``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.gc_sim import Workload
+from repro.core.sharded import ShardedArraySim
+
+from .common import SSD, save
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def sweep_size(n_ssds: int, qds, ops_per_ssd: int,
+               n_shards: int | None = None) -> dict:
+    """Queue-depth sweep at one array size. The measurement budget scales
+    with the array (ops_per_ssd per device) so per-SSD statistics keep a
+    comparable sample count at every size."""
+    measure_ops = ops_per_ssd * n_ssds
+    out = {"n_ssds": n_ssds, "measure_ops": measure_ops, "qd": [],
+           "iops": [], "per_ssd_iops": [], "p50_ms": [], "p95_ms": [],
+           "p99_ms": [], "gc_pause_frac": [], "events": [], "wall_s": []}
+    for qd in qds:
+        sim = ShardedArraySim(
+            n_ssds, SSD, 0.6,
+            Workload(w_total=n_ssds * qd, qd_per_ssd=qd, n_streams=n_ssds),
+            seed=0, n_shards=n_shards)
+        r = sim.run(measure_ops)
+        out["qd"].append(qd)
+        out["iops"].append(float(r.iops))
+        out["per_ssd_iops"].append(float(r.iops / n_ssds))
+        out["p50_ms"].append(1e3 * r.p50_latency)
+        out["p95_ms"].append(1e3 * r.p95_latency)
+        out["p99_ms"].append(1e3 * r.p99_latency)
+        out["gc_pause_frac"].append(float(np.mean(r.gc_pause_frac)))
+        out["events"].append(int(r.events))
+        out["wall_s"].append(sim.last_wall_s)
+        print(f"  n={n_ssds} qd={qd}: {r.iops:,.0f} IOPS "
+              f"({r.iops / n_ssds:,.0f}/SSD), p99 {1e3 * r.p99_latency:.2f} ms, "
+              f"{r.events / sim.last_wall_s:,.0f} ev/s, {sim.last_wall_s:.1f}s")
+    out["monotone"] = bool(np.all(np.diff(out["iops"]) > 0))
+    out["events_per_sec"] = float(sum(out["events"]) / max(sum(out["wall_s"]),
+                                                           1e-9))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes (< 1 min), for CI / tests")
+    ap.add_argument("--sizes", type=int, nargs="+", default=None)
+    ap.add_argument("--qds", type=int, nargs="+", default=None)
+    ap.add_argument("--ops-per-ssd", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=None,
+                    help="worker shard count (default: pinned per tier, NOT "
+                         "cpu_count — results are deterministic only for a "
+                         "fixed (seed, n_shards), so the monotone gate and "
+                         "BENCH_scale.json must not depend on the host)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_scale.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        sizes = args.sizes or [8, 16]
+        qds = args.qds or (4, 32)
+        ops = args.ops_per_ssd or 800
+        n_shards = args.shards or 2
+    else:
+        sizes = args.sizes or [18, 36, 64, 128]
+        qds = args.qds or (1, 4, 32, 128)
+        ops = args.ops_per_ssd or 1200
+        n_shards = args.shards or 4
+
+    t0 = time.perf_counter()
+    result = {
+        "smoke": args.smoke,
+        "cpu_count": os.cpu_count(),
+        "n_shards": n_shards,
+        "qds": list(qds),
+        "ops_per_ssd": ops,
+        "sizes": {},
+    }
+    for n in sizes:
+        print(f"n_ssds={n}:")
+        result["sizes"][str(n)] = sweep_size(n, qds, ops, n_shards=n_shards)
+    result["wall_s"] = time.perf_counter() - t0
+
+    all_monotone = all(s["monotone"] for s in result["sizes"].values())
+    result["all_monotone"] = all_monotone
+    Path(args.out).write_text(json.dumps(result, indent=1, default=float))
+    save("BENCH_scale", result)
+    biggest = result["sizes"][str(sizes[-1])]
+    print(f"scale sweep done in {result['wall_s']:.1f}s; "
+          f"qd-monotone at every size: {all_monotone}; "
+          f"largest array {sizes[-1]} SSDs @ "
+          f"{biggest['events_per_sec']:,.0f} ev/s")
+    return 0 if all_monotone else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,41 +16,141 @@ unsynchronized GC pauses.
 GC keeps strict priority: once the free-block watermark trips, the device
 stops starting new service, lets in-flight channel operations drain, then runs
 the whole GC episode with every channel preempted.
+
+Fast path (events/sec is the binding constraint on every experiment):
+
+* Events are slotted ``(time, seq, slot)`` heap entries pointing into
+  parallel ``handler`` / ``payload`` record arrays with free-list reuse —
+  scheduling a completion allocates **no** per-event lambda or closure, only
+  a heap tuple. Handlers that need arguments take them as a single payload
+  object (``call`` / ``call_at``); the zero-argument legacy API
+  (``schedule`` / ``at``) rides on the same records with a no-payload
+  sentinel.
+* ``run()`` is the inlined dispatch loop: simulators install a completion
+  target on the ``MeasurementWindow`` which calls ``EventLoop.stop()``, so
+  no per-event Python condition callback is needed (``run_while`` remains
+  for callers that want one).
+* ``LatencyRecorder`` stores samples in a preallocated, doubling float64
+  numpy buffer and caches its summary until the next ``record`` — repeated
+  ``summary()`` calls never rescan.
+
+The fast path is semantics-preserving: event ordering, RNG consumption, and
+float accumulation order are unchanged, so a fixed seed produces byte
+identical counters/IOPS before and after (goldens recorded from the pre-
+fast-path engine: ``tests/test_golden_determinism.py``).
 """
 from __future__ import annotations
 
-import heapq
 from collections import deque
 from dataclasses import dataclass
+from heapq import heappop, heappush
 from typing import Any, Callable, Optional
 
 import numpy as np
+
+_NO_PAYLOAD = object()   # sentinel: invoke the handler with no argument
 
 
 class EventLoop:
     """Minimal heap-based discrete-event loop: schedule callbacks, run them
     in time order. Ties are broken by insertion order (FIFO), so causally
-    ordered same-time events stay ordered."""
+    ordered same-time events stay ordered.
+
+    Event records live in parallel slot arrays (``_handlers``/``_payloads``)
+    recycled through a free list; the heap holds only ``(time, seq, slot)``
+    tuples. ``processed`` counts dispatched events (the events/sec metric).
+    """
+
+    __slots__ = ("now", "_heap", "_seq", "_handlers", "_payloads", "_free",
+                 "processed", "_stopped")
 
     def __init__(self) -> None:
         self.now = 0.0
-        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._heap: list[tuple[float, int, int]] = []
         self._seq = 0
+        self._handlers: list[Any] = []
+        self._payloads: list[Any] = []
+        self._free: list[int] = []
+        self.processed = 0
+        self._stopped = False
 
+    # -- scheduling ----------------------------------------------------------
+    def call_at(self, time: float, handler: Callable, payload: Any = _NO_PAYLOAD) -> None:
+        """Schedule ``handler(payload)`` (or ``handler()`` without payload)
+        at absolute ``time`` using a recycled event record."""
+        free = self._free
+        if free:
+            slot = free.pop()
+            self._handlers[slot] = handler
+            self._payloads[slot] = payload
+        else:
+            slot = len(self._handlers)
+            self._handlers.append(handler)
+            self._payloads.append(payload)
+        heappush(self._heap, (time, self._seq, slot))
+        self._seq += 1
+
+    def call(self, delay: float, handler: Callable, payload: Any = _NO_PAYLOAD) -> None:
+        self.call_at(self.now + delay, handler, payload)
+
+    # legacy zero-argument-callback API (tests, ad-hoc wakeups)
     def schedule(self, delay: float, fn: Callable[[], None]) -> None:
-        self.at(self.now + delay, fn)
+        self.call_at(self.now + delay, fn)
 
     def at(self, time: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (time, self._seq, fn))
-        self._seq += 1
+        self.call_at(time, fn)
+
+    # -- dispatch ------------------------------------------------------------
+    def stop(self) -> None:
+        """Make ``run()`` return after the current event's handler."""
+        self._stopped = True
 
     def step(self) -> bool:
         """Run the next event; False when no events remain."""
-        if not self._heap:
+        heap = self._heap
+        if not heap:
             return False
-        self.now, _, fn = heapq.heappop(self._heap)
-        fn()
+        self.now, _, slot = heappop(heap)
+        handler = self._handlers[slot]
+        payload = self._payloads[slot]
+        self._handlers[slot] = None
+        self._payloads[slot] = None
+        self._free.append(slot)
+        self.processed += 1
+        if payload is _NO_PAYLOAD:
+            handler()
+        else:
+            handler(payload)
         return True
+
+    def run(self) -> int:
+        """Dispatch until ``stop()`` or the heap drains; returns the number
+        of events processed by this call. This is the hot loop — everything
+        is bound to locals and there is no per-event condition callback."""
+        heap = self._heap
+        handlers = self._handlers
+        payloads = self._payloads
+        free_append = self._free.append
+        pop = heappop
+        no_payload = _NO_PAYLOAD
+        self._stopped = False
+        n = 0
+        try:
+            while heap and not self._stopped:
+                self.now, _, slot = pop(heap)
+                handler = handlers[slot]
+                payload = payloads[slot]
+                handlers[slot] = None
+                payloads[slot] = None
+                free_append(slot)
+                n += 1
+                if payload is no_payload:
+                    handler()
+                else:
+                    handler(payload)
+        finally:
+            self.processed += n
+        return n
 
     def run_while(self, cond: Callable[[], bool]) -> None:
         while cond() and self.step():
@@ -71,27 +171,55 @@ class LatencySummary:
 
 
 class LatencyRecorder:
-    """Per-request latency samples -> mean/p50/p95/p99."""
+    """Per-request latency samples -> mean/p50/p95/p99.
 
-    def __init__(self) -> None:
-        self._samples: list[float] = []
+    Samples live in a preallocated float64 numpy buffer that doubles when
+    full (amortized O(1) per record, no per-sample object). ``summary()`` is
+    cached until the next ``record``/``reset`` — repeated calls don't rescan
+    the buffer."""
+
+    __slots__ = ("_buf", "_n", "_summary")
+
+    def __init__(self, capacity: int = 4096) -> None:
+        self._buf = np.empty(max(int(capacity), 16), dtype=np.float64)
+        self._n = 0
+        self._summary: Optional[LatencySummary] = None
 
     def record(self, latency: float) -> None:
-        self._samples.append(latency)
+        n = self._n
+        buf = self._buf
+        if n == buf.shape[0]:
+            grown = np.empty(2 * n, dtype=np.float64)
+            grown[:n] = buf
+            self._buf = buf = grown
+        buf[n] = latency
+        self._n = n + 1
+        self._summary = None
 
     def reset(self) -> None:
-        self._samples.clear()
+        self._n = 0
+        self._summary = None
 
     def __len__(self) -> int:
-        return len(self._samples)
+        return self._n
+
+    def values(self) -> np.ndarray:
+        """Copy of the recorded samples (for cross-shard merging)."""
+        return self._buf[:self._n].copy()
 
     def summary(self) -> LatencySummary:
-        if not self._samples:
-            return LatencySummary.empty()
-        a = np.asarray(self._samples)
-        p50, p95, p99 = np.percentile(a, [50.0, 95.0, 99.0])
-        return LatencySummary(mean=float(a.mean()), p50=float(p50),
-                              p95=float(p95), p99=float(p99), n=a.size)
+        s = self._summary
+        if s is None:
+            n = self._n
+            if n == 0:
+                s = LatencySummary.empty()
+            else:
+                a = self._buf[:n]
+                p50, p95, p99 = np.percentile(a, [50.0, 95.0, 99.0])
+                s = LatencySummary(mean=float(a.mean()), p50=float(p50),
+                                   p95=float(p95), p99=float(p99), n=n)
+            self._summary = s
+        return s
 
 
 class MeasurementWindow:
@@ -101,10 +229,19 @@ class MeasurementWindow:
     ``on_begin`` (the simulator's counter snapshot/reset hook), and starts
     recording per-request latency. The completion that crosses the boundary
     is NOT measured — its latency spans the warmup, which would skew the
-    percentiles."""
+    percentiles.
+
+    With ``target`` set, the completion that reaches it calls
+    ``loop.stop()`` so the run loop needs no per-event condition callback
+    (the stopping event's handler still finishes, exactly like the legacy
+    ``run_while`` exit)."""
+
+    __slots__ = ("loop", "warmup", "on_begin", "completed", "measuring",
+                 "t0", "latency", "target")
 
     def __init__(self, loop: EventLoop, warmup: int,
-                 on_begin: Callable[[], None]) -> None:
+                 on_begin: Callable[[], None],
+                 target: Optional[int] = None) -> None:
         self.loop = loop
         self.warmup = warmup
         self.on_begin = on_begin
@@ -112,17 +249,24 @@ class MeasurementWindow:
         self.measuring = False
         self.t0 = 0.0
         self.latency = LatencyRecorder()
+        self.target = target
 
     def note_completion(self, t_issue: float) -> bool:
         """Record one completion; True iff it falls inside the window."""
-        self.completed += 1
+        completed = self.completed + 1
+        self.completed = completed
+        target = self.target
         if self.measuring:
             self.latency.record(self.loop.now - t_issue)
+            if target is not None and completed >= target:
+                self.loop.stop()
             return True
-        if self.completed >= self.warmup:
+        if completed >= self.warmup:
             self.measuring = True
             self.t0 = self.loop.now
             self.on_begin()
+            if target is not None and completed >= target:
+                self.loop.stop()
         return False
 
     @property
@@ -149,12 +293,24 @@ class DeviceModel:
     ``server.busy_time`` accumulates channel-seconds (a request of duration
     ``dt`` adds ``dt``; a GC episode adds ``dt * channels``), so utilization
     is ``busy_time / (span * channels)``.
+
+    ``kick()`` is a batch pass: it fills every free NCQ slot from ``pull``
+    and starts service on every free channel in one sweep, scheduling each
+    completion as a payload event (no per-event closure). ``offer(req)`` is
+    the zero-backlog fast path: when the host-side queue is empty a request
+    can be admitted (and its service started) directly, skipping the
+    ``pull`` indirection entirely.
     """
+
+    __slots__ = ("loop", "server", "pull", "service_time", "on_done",
+                 "admitted", "in_service", "in_gc", "_slots", "_channels",
+                 "backlog")
 
     def __init__(self, loop: EventLoop, server: Any,
                  pull: Callable[[], Optional[Any]],
                  service_time: Callable[[Any], float],
-                 on_done: Callable[[Any], None]) -> None:
+                 on_done: Callable[[Any], None],
+                 backlog: Any = None) -> None:
         self.loop = loop
         self.server = server
         self.pull = pull
@@ -163,6 +319,11 @@ class DeviceModel:
         self.admitted: deque = deque()
         self.in_service = 0
         self.in_gc = False
+        self._slots = server.p.device_slots
+        self._channels = server.p.channels
+        # optional host-side container backing ``pull``: when given and
+        # falsy (empty), kick() skips the pull loop without calling it
+        self.backlog = backlog
 
     @property
     def occupancy(self) -> int:
@@ -171,24 +332,75 @@ class DeviceModel:
 
     def kick(self) -> None:
         """Admit from the host queue and start service / GC episodes."""
-        p = self.server.p
-        while self.occupancy < p.device_slots:
-            req = self.pull()
-            if req is None:
-                break
-            self.admitted.append(req)
+        admitted = self.admitted
+        in_service = self.in_service
+        backlog = self.backlog
+        if backlog is None or backlog:
+            room = self._slots - len(admitted) - in_service
+            if room > 0:
+                pull = self.pull
+                while room:
+                    req = pull()
+                    if req is None:
+                        break
+                    admitted.append(req)
+                    room -= 1
         if self.in_gc:
             return
-        if self.server.ftl.need_gc():
-            if self.in_service == 0:
+        server = self.server
+        if server.ftl.need_gc():
+            if in_service == 0:
                 self._start_gc()
             return  # drain channels first; completion re-kicks
-        while self.in_service < p.channels and self.admitted:
-            req = self.admitted.popleft()
-            dt = self.service_time(req)
-            self.in_service += 1
-            self.server.busy_time += dt
-            self.loop.schedule(dt, lambda req=req: self._complete(req))
+        if not admitted or in_service >= self._channels:
+            return
+        loop = self.loop
+        call_at = loop.call_at
+        now = loop.now
+        service_time = self.service_time
+        complete = self._complete
+        channels = self._channels
+        while in_service < channels and admitted:
+            req = admitted.popleft()
+            dt = service_time(req)
+            in_service += 1
+            server.busy_time += dt
+            call_at(now + dt, complete, req)
+        self.in_service = in_service
+
+    def offer(self, req: Any) -> bool:
+        """Zero-backlog admission fast path: accept ``req`` straight into
+        the NCQ, starting service if a channel is free. Returns False when
+        the NCQ is full (caller keeps the request host-side). Only valid
+        when the host-side queue is empty — otherwise FIFO order would
+        break; use ``kick`` there."""
+        admitted = self.admitted
+        in_service = self.in_service
+        if len(admitted) + in_service >= self._slots:
+            return False
+        admitted.append(req)
+        if self.in_gc:
+            return True
+        server = self.server
+        if server.ftl.need_gc():
+            if in_service == 0:
+                self._start_gc()
+            return True
+        channels = self._channels
+        if in_service < channels:
+            loop = self.loop
+            call_at = loop.call_at
+            now = loop.now
+            service_time = self.service_time
+            complete = self._complete
+            while in_service < channels and admitted:
+                r = admitted.popleft()
+                dt = service_time(r)
+                in_service += 1
+                server.busy_time += dt
+                call_at(now + dt, complete, r)
+            self.in_service = in_service
+        return True
 
     def _start_gc(self) -> None:
         s = self.server

@@ -19,6 +19,7 @@ application blocked — exactly the configuration Figures 3-5 compare against.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
@@ -213,6 +214,8 @@ class SAFSResults:
     p50_latency: float = 0.0
     p95_latency: float = 0.0
     p99_latency: float = 0.0
+    events: int = 0                # engine events dispatched during run()
+    wall_s: float = 0.0            # host wall-clock seconds of run()
 
 
 class _Device:
@@ -333,11 +336,16 @@ class SAFSSim:
         d.model.kick()
 
     # -- event helpers ----------------------------------------------------------
-    def _schedule_cpu(self, fn) -> None:
-        i = min(range(self.n_cpu), key=lambda j: self._cpu_free[j])
-        start = max(self.now, self._cpu_free[i])
-        self._cpu_free[i] = start + self.t_cpu
-        self.loop.at(start + self.t_cpu, fn)
+    def _schedule_cpu(self, handler, payload) -> None:
+        """Queue ``handler(payload)`` behind the least-loaded CPU (payload
+        record — no per-op closure)."""
+        cpu_free = self._cpu_free
+        i = cpu_free.index(min(cpu_free))
+        now = self.loop.now
+        start = now if now > cpu_free[i] else cpu_free[i]
+        done = start + self.t_cpu
+        cpu_free[i] = done
+        self.loop.call_at(done, handler, payload)
 
     # -- cache/flusher plumbing ---------------------------------------------
     def _pump_flusher(self, budget: int = 8) -> None:
@@ -392,17 +400,18 @@ class SAFSSim:
         self._spawn_op()
 
     def _spawn_op(self) -> None:
-        op = self.source.next_op(self.now)
-        if op.at > self.now:
-            self.loop.at(op.at, lambda: self._admit_op(op.lba, op.is_read))
+        op = self.source.next_op(self.loop.now)
+        if op.at > self.loop.now:
+            self.loop.call_at(op.at, self._admit_deferred, (op.lba, op.is_read))
         else:
-            self._admit_op(op.lba, op.is_read)
+            self._schedule_cpu(self._process_op, (op.lba, op.is_read, self.loop.now))
 
-    def _admit_op(self, tag: int, is_read: bool) -> None:
-        t0 = self.now
-        self._schedule_cpu(lambda: self._process_op(tag, is_read, t0))
+    def _admit_deferred(self, args) -> None:
+        tag, is_read = args
+        self._schedule_cpu(self._process_op, (tag, is_read, self.loop.now))
 
-    def _process_op(self, tag: int, is_read: bool, t0: float) -> None:
+    def _process_op(self, args) -> None:
+        tag, is_read, t0 = args
         s, slot = self.cache.lookup(tag)
         if slot >= 0:
             if not is_read:
@@ -447,12 +456,15 @@ class SAFSSim:
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> SAFSResults:
         if warmup_ops is None:
             warmup_ops = measure_ops // 2
-        self._mw = mw = MeasurementWindow(self.loop, warmup_ops,
-                                          self._begin_measure)
         total = warmup_ops + measure_ops
+        self._mw = mw = MeasurementWindow(self.loop, warmup_ops,
+                                          self._begin_measure, target=total)
         for _ in range(self.wl.concurrency):
             self._spawn_op()
-        self.loop.run_while(lambda: mw.completed < total)
+        t_wall = time.perf_counter()
+        # total == 0: nothing to measure (matches the old run_while exit)
+        events = self.loop.run() if total > 0 else 0
+        wall_s = time.perf_counter() - t_wall
         span = mw.span
         b = self._base
         summ = mw.latency.summary()
@@ -474,4 +486,6 @@ class SAFSSim:
             p50_latency=summ.p50,
             p95_latency=summ.p95,
             p99_latency=summ.p99,
+            events=events,
+            wall_s=wall_s,
         )

@@ -1,0 +1,215 @@
+"""Process-sharded SSD-array simulation: 100+ SSD sweeps on multicore hosts.
+
+``ArraySim``'s per-device state (FTL, NCQ, GC) is fully independent across
+SSDs; the only cross-SSD coupling is the host window W (and the submission
+streams that carry it). ``ShardedArraySim`` exploits that: it partitions the
+array's SSDs across worker processes, giving each shard
+
+* a proportional slice of the host window ``w_total`` (and of ``n_streams``),
+* a proportional slice of the measure/warmup budget, and
+* its own decorrelated RNG seed (``_mix64`` of the base seed and shard id),
+
+then merges the per-shard ``ArrayResults``: throughput counters add, per-SSD
+arrays concatenate in shard order, and latency percentiles are computed
+EXACTLY over the concatenation of every shard's raw samples (no percentile
+averaging).
+
+Modeling note: sharding replaces ONE global window W by ``n_shards``
+independent windows of W/n_shards. Per-SSD queue bounds, NCQ service, and GC
+dynamics are untouched, but W-level coupling across shards (a GC-paused SSD
+in shard 0 starving streams that also feed shard 1) is not modeled — use one
+stream-partitioned workload (``n_streams >= n_shards``), where the
+approximation is exact in distribution, for paper-style sweeps. Results are
+deterministic for a fixed ``(seed, n_shards)`` but differ numerically from
+the unsharded ``ArraySim`` (different RNG streams).
+
+The worker pool persists across ``run()`` calls (module-level), so the
+per-worker prefill snapshot cache (``gc_sim._PREFILL_CACHE``) keeps paying
+off across the points of a sweep.
+"""
+from __future__ import annotations
+
+import atexit
+import multiprocessing as mp
+import os
+import sys
+import time
+from dataclasses import replace
+
+import numpy as np
+
+from .engine import LatencySummary
+from .gc_sim import ArrayResults, ArraySim, SSDParams, Workload
+from .workloads import _mix64
+
+__all__ = ["ShardedArraySim", "shard_sizes", "merge_results", "pool_samples",
+           "shard_seed"]
+
+
+def shard_sizes(n_ssds: int, n_shards: int) -> list[int]:
+    """Balanced partition: sizes differ by at most one, larger shards first."""
+    n_shards = max(1, min(n_shards, n_ssds))
+    base, rem = divmod(n_ssds, n_shards)
+    return [base + 1] * rem + [base] * (n_shards - rem)
+
+
+def shard_seed(seed: int, shard: int) -> int:
+    """Decorrelated per-shard seed (stable across runs and platforms). The
+    base seed is mixed before XORing the shard id so nearby (seed, shard)
+    pairs cannot collide through low-bit cancellation."""
+    return _mix64(_mix64(seed & 0xFFFFFFFFFFFFFFFF) ^ (shard + 1))
+
+
+def _split_budget(total: int, sizes: list[int], n_ssds: int) -> list[int]:
+    """Proportional integer split of an op budget (each shard gets >= 1,
+    except for a zero budget, which stays zero everywhere — run(0) must be
+    a no-op exactly like ``ArraySim.run(0)``)."""
+    if total <= 0:
+        return [0] * len(sizes)
+    return [max(1, (total * sz) // n_ssds) for sz in sizes]
+
+
+def _shard_workload(wl: Workload, sz: int, n_ssds: int) -> Workload:
+    """Scale the host-side window and stream count to the shard's share."""
+    return replace(
+        wl,
+        w_total=max(1, (wl.w_total * sz) // n_ssds),
+        n_streams=max(1, (wl.n_streams * sz) // n_ssds),
+    )
+
+
+def _run_shard(args) -> tuple[ArrayResults, np.ndarray]:
+    (sz, ssd, occupancy, wl, seed, measure_ops, warmup_ops,
+     prefill_cache) = args
+    sim = ArraySim(sz, ssd, occupancy, wl, seed=seed,
+                   prefill_cache=prefill_cache)
+    res = sim.run(measure_ops, warmup_ops)
+    return res, sim.last_latency
+
+
+def pool_samples(samples: list[np.ndarray | None]) -> np.ndarray:
+    """Concatenate the shards' latency samples (skipping empty shards)."""
+    live = [s for s in samples if s is not None and s.size]
+    return np.concatenate(live) if live else np.empty(0)
+
+
+def merge_results(parts: list[ArrayResults],
+                  pooled: np.ndarray) -> ArrayResults:
+    """Merge per-shard results: rates add, per-SSD arrays concatenate,
+    percentiles are exact over the pooled latency samples
+    (``pool_samples``)."""
+    if pooled.size:
+        p50, p95, p99 = np.percentile(pooled, [50.0, 95.0, 99.0])
+        summ = LatencySummary(mean=float(pooled.mean()), p50=float(p50),
+                              p95=float(p95), p99=float(p99), n=pooled.size)
+    else:
+        summ = LatencySummary.empty()
+    return ArrayResults(
+        iops=float(sum(p.iops for p in parts)),
+        per_ssd_iops=np.concatenate([p.per_ssd_iops for p in parts]),
+        read_iops=float(sum(p.read_iops for p in parts)),
+        write_iops=float(sum(p.write_iops for p in parts)),
+        util=np.concatenate([p.util for p in parts]),
+        sim_time=max(p.sim_time for p in parts),
+        gc_pause_frac=np.concatenate([p.gc_pause_frac for p in parts]),
+        mean_latency=summ.mean,
+        p50_latency=summ.p50,
+        p95_latency=summ.p95,
+        p99_latency=summ.p99,
+        events=sum(p.events for p in parts),
+        wall_s=max(p.wall_s for p in parts),
+    )
+
+
+# one persistent worker pool, shared by every ShardedArraySim in the process
+_POOL: tuple[int, "mp.pool.Pool"] | None = None
+
+
+def _start_method() -> str:
+    """'fork' is the fast path, but forking a parent whose JAX runtime is
+    already initialized (multithreaded) can deadlock the workers — fall back
+    to 'spawn' once jax has been imported. Spawned workers re-import this
+    package, so the repo's ``src`` must be on PYTHONPATH (as the tier-1
+    command sets it)."""
+    methods = mp.get_all_start_methods()
+    if "fork" in methods and "jax" not in sys.modules:
+        return "fork"
+    return "spawn"
+
+
+def _get_pool(n_procs: int) -> "mp.pool.Pool":
+    global _POOL
+    if _POOL is not None and _POOL[0] == n_procs:
+        return _POOL[1]
+    if _POOL is not None:
+        _POOL[1].terminate()
+    pool = mp.get_context(_start_method()).Pool(processes=n_procs)
+    _POOL = (n_procs, pool)
+    return pool
+
+
+def _shutdown_pool() -> None:
+    global _POOL
+    if _POOL is not None:
+        _POOL[1].terminate()
+        _POOL = None
+
+
+atexit.register(_shutdown_pool)
+
+
+class ShardedArraySim:
+    """Partition an ``ArraySim`` array across worker processes and merge the
+    results. Drop-in for sweep drivers: same constructor shape as
+    ``ArraySim`` plus sharding knobs, same ``run() -> ArrayResults``.
+
+    ``n_shards=None`` uses ``min(cpu_count, n_ssds)``. ``parallel=False``
+    runs the same shard decomposition serially in-process (identical
+    results — used to test the merge path and as the fallback where
+    multiprocessing is unavailable)."""
+
+    def __init__(self, n_ssds: int, ssd: SSDParams = SSDParams(),
+                 occupancy: float = 0.6, workload: Workload = Workload(),
+                 seed: int = 0, n_shards: int | None = None,
+                 parallel: bool = True, prefill_cache: bool = True):
+        if n_shards is None:
+            n_shards = min(os.cpu_count() or 1, n_ssds)
+        self.n = n_ssds
+        self.p = ssd
+        self.wl = workload
+        self.occupancy = occupancy
+        self.seed = seed
+        self.parallel = parallel
+        self.prefill_cache = prefill_cache
+        self.sizes = shard_sizes(n_ssds, n_shards)
+        self.last_latency: np.ndarray | None = None
+        self.last_wall_s = 0.0       # observed wall clock of the last run()
+
+    def _shard_args(self, measure_ops: int, warmup_ops: int | None):
+        if warmup_ops is None:
+            warmup_ops = measure_ops // 2
+        measures = _split_budget(measure_ops, self.sizes, self.n)
+        warmups = _split_budget(warmup_ops, self.sizes, self.n) \
+            if warmup_ops else [0] * len(self.sizes)
+        return [
+            (sz, self.p, self.occupancy,
+             _shard_workload(self.wl, sz, self.n),
+             shard_seed(self.seed, k), measures[k], warmups[k],
+             self.prefill_cache)
+            for k, sz in enumerate(self.sizes)
+        ]
+
+    def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
+        args = self._shard_args(measure_ops, warmup_ops)
+        t0 = time.perf_counter()
+        if self.parallel and len(args) > 1:
+            pool = _get_pool(min(len(args), os.cpu_count() or 1))
+            out = pool.map(_run_shard, args, chunksize=1)
+        else:
+            out = [_run_shard(a) for a in args]
+        self.last_wall_s = time.perf_counter() - t0
+        parts = [r for r, _ in out]
+        pooled = pool_samples([s for _, s in out])
+        merged = merge_results(parts, pooled)
+        self.last_latency = pooled if pooled.size else None
+        return merged

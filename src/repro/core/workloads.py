@@ -23,8 +23,7 @@ Closed-loop sources emit ``at=0.0`` (issue immediately); open-loop sources
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -79,10 +78,13 @@ class ZipfSampler:
         return int(min(max(k, head + 1), self.n))
 
 
-@dataclass(frozen=True)
-class Op:
+class Op(NamedTuple):
     """One application request. ``at`` is the earliest simulated time the op
-    may issue (0.0 = immediately, the closed-loop case)."""
+    may issue (0.0 = immediately, the closed-loop case).
+
+    A NamedTuple, not a frozen dataclass: one ``Op`` is built per simulated
+    request, and frozen-dataclass ``__init__`` (``object.__setattr__`` per
+    field) costs ~4x a tuple construction on the DES hot path."""
 
     lba: int
     is_read: bool
@@ -101,10 +103,13 @@ class UniformSource(OpSource):
     def __init__(self, n_live: int, rng: np.random.Generator,
                  read_frac: float = 0.0):
         self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+        # bound methods: next_op runs once per simulated request
+        self._randint = rng.integers
+        self._random = rng.random
 
     def next_op(self, now: float) -> Op:
-        return Op(int(self.rng.integers(self.n_live)),
-                  bool(self.rng.random() < self.read_frac))
+        return Op(int(self._randint(self.n_live)),
+                  self._random() < self.read_frac)
 
 
 class ZipfSource(OpSource):
@@ -117,10 +122,11 @@ class ZipfSource(OpSource):
                  virtual_scale: int = 512):
         self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
         self._zipf = ZipfSampler(n_live * virtual_scale, s, rng)
+        self._random = rng.random
 
     def next_op(self, now: float) -> Op:
         lba = _mix64(self._zipf.sample()) % self.n_live
-        return Op(lba, bool(self.rng.random() < self.read_frac))
+        return Op(lba, self._random() < self.read_frac)
 
 
 class SequentialSource(OpSource):
@@ -157,7 +163,7 @@ class BurstySource(OpSource):
         period = self.on + self.off
         phase = now % period
         if phase >= self.on:  # in an OFF window: defer to the next period
-            op = replace(op, at=max(op.at, now + (period - phase)))
+            op = op._replace(at=max(op.at, now + (period - phase)))
         return op
 
 
@@ -173,8 +179,8 @@ class MixedTenantSource(OpSource):
 
     def next_op(self, now: float) -> Op:
         if self.rng.random() < self.writer_frac:
-            return replace(self.writer.next_op(now), tenant=1)
-        return replace(self.reader.next_op(now), tenant=0)
+            return self.writer.next_op(now)._replace(tenant=1)
+        return self.reader.next_op(now)._replace(tenant=0)
 
 
 class TraceSource(OpSource):

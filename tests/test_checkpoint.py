@@ -78,6 +78,11 @@ def test_retention(tmp_path):
     for s in range(5):
         m.save_async(s, _tree(s))
         assert m.wait_for_commit(s, 30)
+    # wait_for_commit returns the moment the new manifest lands, which is
+    # *before* the worker prunes old manifests (retention runs right after
+    # the rename in the same _commit); drain() returns only once that whole
+    # completion finished, so the glob below can't race the pruning
+    assert m.drain(30)
     manifests = sorted(p.name for p in tmp_path.glob("manifest-*.json"))
     assert manifests == ["manifest-3.json", "manifest-4.json"]
     m.close()

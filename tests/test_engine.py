@@ -1,11 +1,14 @@
 """Shared discrete-event engine: loop ordering, latency stats, and the
-multi-slot NCQ device model (service overlap + GC preemption)."""
+multi-slot NCQ device model (service overlap + GC preemption), plus the
+slotted-record fast path (payload events, free-list reuse, stop-flag run,
+cached latency summaries, batch admission/offer)."""
 from types import SimpleNamespace
 
 import numpy as np
 import pytest
 
-from repro.core.engine import DeviceModel, EventLoop, LatencyRecorder
+from repro.core.engine import DeviceModel, EventLoop, LatencyRecorder, \
+    MeasurementWindow
 
 
 def test_event_loop_orders_by_time_then_fifo():
@@ -29,6 +32,72 @@ def test_event_loop_schedule_is_relative():
     assert times == [1.5]
 
 
+def test_payload_events_no_closures():
+    """call/call_at dispatch handler(payload): the hot path schedules bound
+    methods + payload records, never per-event lambdas."""
+    loop = EventLoop()
+    got = []
+    loop.call_at(1.0, got.append, "a")
+    loop.call(2.0, got.append, "b")      # relative: fires at 2.0
+    loop.call_at(1.5, got.append, "c")
+    while loop.step():
+        pass
+    assert got == ["a", "c", "b"]
+    assert loop.processed == 3
+
+
+def test_event_slot_free_list_reuse():
+    """Slots recycle: a schedule/dispatch steady state must not grow the
+    record arrays beyond the peak number of simultaneously pending events."""
+    loop = EventLoop()
+    state = {"n": 0}
+
+    def tick(payload):
+        state["n"] += 1
+        if state["n"] < 500:
+            loop.call(1.0, tick, payload)
+
+    loop.call(1.0, tick, ())
+    loop.run()
+    assert state["n"] == 500
+    assert len(loop._handlers) == 1      # one pending event at any time
+    assert loop._free == [0]
+
+
+def test_stop_ends_run_after_current_handler():
+    loop = EventLoop()
+    got = []
+
+    def handler(x):
+        got.append(x)
+        if x == 2:
+            loop.stop()
+        got.append(("post", x))          # handler still finishes
+
+    for i in range(5):
+        loop.call_at(float(i), handler, i)
+    n = loop.run()
+    assert n == 3                        # events 0,1,2 ran; 3,4 did not
+    assert got[-1] == ("post", 2)
+    assert loop.run() == 2               # resumes with the remaining events
+
+
+def test_measurement_window_target_stops_loop():
+    loop = EventLoop()
+    mw = MeasurementWindow(loop, warmup=2, on_begin=lambda: None, target=5)
+    done = []
+
+    def complete(i):
+        done.append(i)
+        mw.note_completion(t_issue=0.0)
+
+    for i in range(10):
+        loop.call_at(float(i), complete, i)
+    loop.run()
+    assert len(done) == 5                # stopped at the target, not the heap
+    assert mw.measuring and len(mw.latency) == 3   # completions 3,4,5
+
+
 def test_latency_recorder_percentiles():
     rec = LatencyRecorder()
     for v in range(1, 101):
@@ -40,6 +109,45 @@ def test_latency_recorder_percentiles():
     assert s.p95 <= s.p99 <= 100.0
     rec.reset()
     assert rec.summary().n == 0
+
+
+def test_latency_summary_cached_no_rescan(monkeypatch):
+    """Repeated summary() calls must not rescan the sample buffer: the
+    percentile pass runs once per dirty state, and record() invalidates."""
+    import repro.core.engine as engine_mod
+    calls = {"n": 0}
+    real = np.percentile
+
+    def counting(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    monkeypatch.setattr(engine_mod.np, "percentile", counting)
+    rec = LatencyRecorder()
+    for v in range(100):
+        rec.record(float(v))
+    s1 = rec.summary()
+    s2 = rec.summary()
+    s3 = rec.summary()
+    assert calls["n"] == 1 and s1 is s2 is s3
+    rec.record(1000.0)                   # invalidates the cache
+    s4 = rec.summary()
+    assert calls["n"] == 2 and s4.n == 101
+    rec.reset()
+    assert rec.summary().n == 0 and calls["n"] == 2   # empty: no percentile
+
+
+def test_latency_recorder_buffer_growth():
+    """The float64 buffer doubles past its preallocated capacity without
+    losing samples."""
+    rec = LatencyRecorder(capacity=16)
+    for v in range(1000):
+        rec.record(float(v))
+    assert len(rec) == 1000
+    vals = rec.values()
+    assert vals.dtype == np.float64 and vals.shape == (1000,)
+    np.testing.assert_array_equal(vals, np.arange(1000.0))
+    assert rec.summary().p50 == pytest.approx(499.5)
 
 
 class FakeFTL:
@@ -152,3 +260,66 @@ def test_gc_runs_even_with_empty_queue():
         pass
     assert server.gc_time == pytest.approx(3.0)
     assert not dev.in_gc
+
+
+def test_offer_fast_path_matches_kick():
+    """offer() (zero-backlog direct admission) must produce the same service
+    schedule as append-to-host-queue + kick(): same completion times, same
+    NCQ cap, False once the NCQ is full."""
+    server = FakeServer(channels=2, device_slots=4)
+    loop = EventLoop()
+    done = []
+    dev = DeviceModel(loop, server, pull=lambda: None,
+                      service_time=lambda r: 1.0,
+                      on_done=lambda r: done.append((r, loop.now)))
+    assert all(dev.offer(r) for r in "abcd")       # fills the 4 NCQ slots
+    assert dev.offer("e") is False                 # NCQ full
+    assert dev.occupancy == 4
+    while loop.step():
+        pass
+    assert [t for _, t in done] == [1.0, 1.0, 2.0, 2.0]   # as via kick()
+    assert server.busy_time == pytest.approx(4.0)
+
+
+def test_offer_defers_to_gc():
+    """offer during a pending-GC drain admits but must not start service."""
+    server = FakeServer(channels=2, device_slots=8, gc_len=5.0)
+    loop = EventLoop()
+    done = []
+    dev = DeviceModel(loop, server, pull=lambda: None,
+                      service_time=lambda r: 1.0,
+                      on_done=lambda r: done.append((r, loop.now)))
+    dev.offer("a")
+    dev.offer("b")                      # both in service
+    server.ftl.gc_needed = True
+    assert dev.offer("c")               # admitted, service blocked by GC
+    assert dev.in_service == 2 and len(dev.admitted) == 1
+    while loop.step():
+        pass
+    times = [t for _, t in done]
+    assert times[:2] == [1.0, 1.0]
+    assert times[2] == 7.0              # drain(1) + episode(5) + service(1)
+
+
+def test_kick_skips_pull_when_backlog_empty():
+    """With a backlog container attached, kick() must not call pull() while
+    the backlog is empty (the per-completion fast path)."""
+    server = FakeServer(channels=1, device_slots=2)
+    loop = EventLoop()
+    backlog = []
+    pulls = {"n": 0}
+
+    def pull():
+        pulls["n"] += 1
+        return backlog.pop(0) if backlog else None
+
+    dev = DeviceModel(loop, server, pull=pull, service_time=lambda r: 1.0,
+                      on_done=lambda r: None, backlog=backlog)
+    dev.kick()
+    assert pulls["n"] == 0              # empty backlog: pull never called
+    backlog.append("a")
+    dev.kick()
+    assert pulls["n"] >= 1
+    while loop.step():
+        pass
+    assert server.busy_time == pytest.approx(1.0)

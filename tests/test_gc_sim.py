@@ -99,6 +99,50 @@ def test_seal_fifo_sample_distinct():
     assert sorted(sf.sample_distinct(rng, 50)) == list(range(1, 20, 2))
 
 
+def test_seal_fifo_heavy_churn_matches_reference():
+    """Deterministic heavy append/remove churn (forces many compactions)
+    against a plain-list reference: length, order, membership, and
+    head_window stay equivalent. (The hypothesis version with arbitrary
+    interleavings lives in test_seal_fifo_prop.py.)"""
+    rng = np.random.default_rng(11)
+    sf = SealFifo()
+    ref: list[int] = []
+    next_block = 0
+    for step in range(5000):
+        if not ref or rng.random() < 0.55:
+            sf.append(next_block)
+            ref.append(next_block)
+            next_block += 1
+        else:
+            victim = ref[int(rng.integers(len(ref)))]
+            sf.remove(victim)
+            ref.remove(victim)
+        if step % 97 == 0:        # periodic deep check (every step is O(n))
+            assert list(sf) == ref
+    assert len(sf) == len(ref)
+    assert list(sf) == ref
+    assert all(b in sf for b in ref)
+    for k in (0, 1, 7, len(ref), len(ref) + 5):
+        assert sf.head_window(k) == ref[:k]
+
+
+def test_ftl_numpy_views_match_list_state():
+    """The list-backed FTL still exposes numpy views for analysis; they must
+    reflect the live mapping state."""
+    rng = np.random.default_rng(2)
+    ftl = FTL(SMALL, rng)
+    ftl.prefill(0.4)
+    for _ in range(2000):
+        ftl.user_write(int(rng.integers(ftl.live_lbas)))
+        while ftl.need_gc() and not ftl.gc_satisfied():
+            ftl.gc_reclaim_one()
+    assert ftl.page_lba.dtype == np.int64
+    assert ftl.valid_count.sum() == ftl.live_lbas
+    live = np.flatnonzero(ftl.lba_loc >= 0)
+    np.testing.assert_array_equal(ftl.page_lba[ftl.lba_loc[live]], live)
+    assert ftl.sealed.dtype == bool
+
+
 def test_batched_prefill_matches_scalar_programs():
     """The vectorized sequential fill must leave the FTL in exactly the state
     the one-page-at-a-time loop produced."""
@@ -132,6 +176,16 @@ def test_program_chunk_handles_duplicates():
     np.testing.assert_array_equal(a.lba_loc, b.lba_loc)
     np.testing.assert_array_equal(a.valid_count, b.valid_count)
     assert (a.active, a.active_off) == (b.active, b.active_off)
+
+
+def test_run_zero_ops_returns_immediately():
+    """run(0) must terminate (regression: a falsy completion target of 0
+    once disabled the stop condition and the closed loop spun forever)."""
+    r = ArraySim(2, SMALL, 0.6,
+                 Workload(w_total=8, qd_per_ssd=4, n_streams=2),
+                 seed=0).run(0)
+    assert r.events == 0
+    assert r.iops == 0.0
 
 
 def test_queue_depth_scales_throughput_under_gc():

@@ -1,0 +1,143 @@
+"""Seed-for-seed determinism goldens for the event-engine fast path.
+
+The values below were recorded from the PRE-fast-path engine (PR 1 state,
+commit 7edcad4) on small configs. The slotted event records, batch-admission
+kick, list-backed FTL, and payload handlers must not change event ordering,
+RNG consumption, or float accumulation order — so a fixed seed must keep
+producing BYTE-IDENTICAL counters, rates, and latency percentiles.
+
+If a change legitimately alters simulation semantics (a modeling change, not
+an optimization), regenerate these goldens and say so in the commit.
+"""
+import numpy as np
+import pytest
+
+from repro.core.gc_sim import ArraySim, SSDParams, Workload, \
+    clear_prefill_cache
+from repro.core.safs_sim import SAFSSim, SAFSWorkload
+
+P = SSDParams(capacity_pages=4096)
+
+GOLDEN_ARRAY_UNIFORM = {
+    "iops": 79653.14748115413,
+    "read_iops": 0.0,
+    "write_iops": 79653.14748115413,
+    "sim_time": 0.07532659021942097,
+    "mean": 0.0008500640771864282,
+    "p50": 0.0005252100840336116,
+    "p95": 0.0039226453081232515,
+    "p99": 0.005141150210084031,
+    "writes": 8901,
+    "gc_copies": 3676,
+    "erases": 196,
+    "per_ssd": [27400.68273351702, 26577.600209545093, 25674.864538092013],
+}
+
+GOLDEN_ARRAY_ZIPF = {
+    "iops": 67940.04668324922,
+    "read_iops": 19661.849510132328,
+    "write_iops": 48278.1971731169,
+    "sim_time": 0.07359429738562075,
+    "mean": 0.0006936046646825378,
+    "p50": 0.0005252100840336116,
+    "p95": 0.0033306158963585302,
+    "p99": 0.005019049737394944,
+    "writes": 4669,
+    "gc_copies": 2029,
+    "erases": 106,
+}
+
+GOLDEN_SAFS_UNIFORM = {
+    "app_iops": 101486.93371274845,
+    "hit_rate": 0.10210737581535374,
+    "ssd_page_writes": 2509,
+    "flush_writes": 954,
+    "demand_writes": 2840,
+    "ssd_reads": 0,
+    "stale_discards": 817,
+    "sim_time": 0.03941394082633057,
+    "mean": 0.0006391189348447718,
+    "p50": 0.0004105794817926972,
+    "p95": 0.0035815236928104614,
+    "p99": 0.005803759337068157,
+}
+
+
+def _array_counters(sim, r):
+    return {
+        "iops": r.iops, "read_iops": r.read_iops, "write_iops": r.write_iops,
+        "sim_time": r.sim_time, "mean": r.mean_latency, "p50": r.p50_latency,
+        "p95": r.p95_latency, "p99": r.p99_latency,
+        "writes": sum(s.ftl.writes for s in sim.ssds),
+        "gc_copies": sum(s.ftl.gc_copies for s in sim.ssds),
+        "erases": sum(s.ftl.erases for s in sim.ssds),
+    }
+
+
+def test_golden_array_uniform():
+    sim = ArraySim(3, P, 0.6, Workload(w_total=96, qd_per_ssd=32, n_streams=3),
+                   seed=42)
+    r = sim.run(6000)
+    got = _array_counters(sim, r)
+    for k, want in GOLDEN_ARRAY_UNIFORM.items():
+        if k == "per_ssd":
+            continue
+        assert got[k] == want, f"{k}: {got[k]!r} != golden {want!r}"
+    assert [float(x) for x in r.per_ssd_iops] == GOLDEN_ARRAY_UNIFORM["per_ssd"]
+
+
+def test_golden_array_zipf_mixed_rw():
+    sim = ArraySim(2, P, 0.6,
+                   Workload(dist="zipf", read_frac=0.3, w_total=64,
+                            qd_per_ssd=32, n_streams=2), seed=7)
+    r = sim.run(5000)
+    got = _array_counters(sim, r)
+    for k, want in GOLDEN_ARRAY_ZIPF.items():
+        assert got[k] == want, f"{k}: {got[k]!r} != golden {want!r}"
+
+
+def test_golden_safs_uniform():
+    sim = SAFSSim(n_ssds=2, ssd=P, occupancy=0.6,
+                  workload=SAFSWorkload(concurrency=64), cache_frac=0.1,
+                  seed=3)
+    r = sim.run(4000)
+    got = {
+        "app_iops": r.app_iops, "hit_rate": r.hit_rate,
+        "ssd_page_writes": r.ssd_page_writes, "flush_writes": r.flush_writes,
+        "demand_writes": r.demand_writes, "ssd_reads": r.ssd_reads,
+        "stale_discards": r.stale_discards, "sim_time": r.sim_time,
+        "mean": r.mean_latency, "p50": r.p50_latency, "p95": r.p95_latency,
+        "p99": r.p99_latency,
+    }
+    for k, want in GOLDEN_SAFS_UNIFORM.items():
+        assert got[k] == want, f"{k}: {got[k]!r} != golden {want!r}"
+
+
+def test_prefill_cache_is_bit_identical():
+    """Construction through the prefill snapshot cache must not perturb any
+    result — first build (cache miss), rebuild (cache hit), and an uncached
+    build all match the golden."""
+    clear_prefill_cache()
+    wl = Workload(w_total=96, qd_per_ssd=32, n_streams=3)
+    miss = ArraySim(3, P, 0.6, wl, seed=42, prefill_cache=True).run(6000)
+    hit = ArraySim(3, P, 0.6, wl, seed=42, prefill_cache=True).run(6000)
+    clear_prefill_cache()
+    assert miss.iops == hit.iops == GOLDEN_ARRAY_UNIFORM["iops"]
+    assert miss.p99_latency == hit.p99_latency == GOLDEN_ARRAY_UNIFORM["p99"]
+    np.testing.assert_array_equal(miss.per_ssd_iops, hit.per_ssd_iops)
+
+
+def test_rerun_same_seed_identical():
+    """Two fresh sims with the same seed are byte-identical (no hidden
+    global state in the fast path)."""
+    kw = dict(ssd=P, occupancy=0.6,
+              workload=Workload(dist="zipf", w_total=64, qd_per_ssd=16,
+                                n_streams=4))
+    a = ArraySim(4, seed=11, **kw).run(4000)
+    b = ArraySim(4, seed=11, **kw).run(4000)
+    assert a.iops == b.iops
+    assert a.p99_latency == b.p99_latency
+    np.testing.assert_array_equal(a.per_ssd_iops, b.per_ssd_iops)
+    with pytest.raises(AssertionError):
+        c = ArraySim(4, seed=12, **kw).run(4000)
+        np.testing.assert_array_equal(a.per_ssd_iops, c.per_ssd_iops)

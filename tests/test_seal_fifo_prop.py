@@ -1,0 +1,79 @@
+"""Property test: SealFifo vs a reference model under append/remove churn.
+
+The reference is a plain seal-ordered list with O(n) removal — exactly what
+SealFifo replaced. Under any interleaving of appends and removes (including
+ones that trigger repeated tombstone compactions), length, membership,
+iteration order, and head_window must match the reference.
+"""
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gc_sim import SealFifo
+
+
+@st.composite
+def churn_script(draw):
+    """A list of operations: ('append', b) with fresh b, or ('remove', i)
+    removing the i-th (mod current length) live block."""
+    n_ops = draw(st.integers(min_value=1, max_value=200))
+    ops = []
+    next_block = 0
+    n_live = 0
+    for _ in range(n_ops):
+        if n_live == 0 or draw(st.booleans()):
+            ops.append(("append", next_block))
+            next_block += 1
+            n_live += 1
+        else:
+            ops.append(("remove", draw(st.integers(min_value=0,
+                                                   max_value=10_000))))
+            n_live -= 1
+    return ops
+
+
+@settings(max_examples=200, deadline=None)
+@given(churn_script())
+def test_seal_fifo_matches_reference_under_churn(ops):
+    sf = SealFifo()
+    ref: list[int] = []
+    for op, arg in ops:
+        if op == "append":
+            sf.append(arg)
+            ref.append(arg)
+        else:
+            victim = ref[arg % len(ref)]
+            sf.remove(victim)
+            ref.remove(victim)
+        # full-state equivalence after every operation
+        assert len(sf) == len(ref)
+        assert list(sf) == ref
+        for b in ref:
+            assert b in sf
+    for k in (0, 1, 2, len(ref), len(ref) + 3):
+        assert sf.head_window(k) == ref[:k]
+
+
+@settings(max_examples=50, deadline=None)
+@given(churn_script(), st.integers(min_value=1, max_value=8),
+       st.integers(min_value=0, max_value=2**31 - 1))
+def test_seal_fifo_sample_distinct_under_churn(ops, k, seed):
+    import numpy as np
+    sf = SealFifo()
+    ref: list[int] = []
+    for op, arg in ops:
+        if op == "append":
+            sf.append(arg)
+            ref.append(arg)
+        else:
+            victim = ref[arg % len(ref)]
+            sf.remove(victim)
+            ref.remove(victim)
+    if not ref:
+        return
+    got = sf.sample_distinct(np.random.default_rng(seed), k)
+    assert len(got) == min(k, len(ref))
+    assert len(set(got)) == len(got)           # distinct
+    assert set(got) <= set(ref)                # only live blocks

@@ -1,0 +1,103 @@
+"""Process-sharded array simulation: partitioning, merging, determinism,
+and the 100+ SSD scale path."""
+import numpy as np
+import pytest
+
+from repro.core.gc_sim import ArrayResults, SSDParams, Workload
+from repro.core.sharded import ShardedArraySim, merge_results, pool_samples, \
+    shard_seed, shard_sizes
+
+SMALL = SSDParams(capacity_pages=4096)
+
+
+def test_shard_sizes_balanced():
+    assert shard_sizes(18, 2) == [9, 9]
+    assert shard_sizes(18, 4) == [5, 5, 4, 4]
+    assert shard_sizes(128, 8) == [16] * 8
+    assert shard_sizes(3, 8) == [1, 1, 1]      # clamped to n_ssds
+    assert shard_sizes(7, 1) == [7]
+    for n, k in ((100, 7), (128, 6), (19, 4)):
+        sizes = shard_sizes(n, k)
+        assert sum(sizes) == n
+        assert max(sizes) - min(sizes) <= 1
+
+
+def test_shard_seeds_decorrelated():
+    seeds = [shard_seed(0, k) for k in range(16)] + \
+            [shard_seed(1, k) for k in range(16)]
+    assert len(set(seeds)) == len(seeds)
+
+
+def test_merge_results_rates_add_and_percentiles_pool():
+    mk = lambda iops, n, ev: ArrayResults(
+        iops=iops, per_ssd_iops=np.full(n, iops / n), read_iops=0.0,
+        write_iops=iops, util=np.full(n, 0.5), sim_time=1.0,
+        gc_pause_frac=np.zeros(n), mean_latency=0.0, events=ev, wall_s=1.0)
+    parts = [mk(100.0, 2, 10), mk(300.0, 3, 30)]
+    pooled = pool_samples([np.array([1.0, 2.0, 3.0]), None, np.empty(0),
+                           np.array([4.0, 5.0])])
+    m = merge_results(parts, pooled)
+    assert m.iops == 400.0
+    assert m.per_ssd_iops.shape == (5,)
+    assert m.events == 40
+    assert m.p50_latency == 3.0               # exact over pooled samples
+    assert m.mean_latency == pytest.approx(3.0)
+
+
+def test_serial_equals_parallel():
+    """The worker-process path must be bit-identical to running the same
+    shard decomposition in-process."""
+    wl = Workload(w_total=6 * 16, qd_per_ssd=16, n_streams=6)
+    a = ShardedArraySim(6, SMALL, 0.6, wl, seed=5, n_shards=2,
+                        parallel=True).run(6000)
+    b = ShardedArraySim(6, SMALL, 0.6, wl, seed=5, n_shards=2,
+                        parallel=False).run(6000)
+    assert a.iops == b.iops
+    assert a.p99_latency == b.p99_latency
+    np.testing.assert_array_equal(a.per_ssd_iops, b.per_ssd_iops)
+    np.testing.assert_array_equal(a.gc_pause_frac, b.gc_pause_frac)
+
+
+def test_sharded_run_zero_ops_is_noop():
+    """run(0) matches ArraySim.run(0): no ops are manufactured by the
+    per-shard minimum (regression: max(1, ...) turned a zero budget into
+    one op per shard)."""
+    r = ShardedArraySim(4, SMALL, 0.6,
+                        Workload(w_total=16, qd_per_ssd=4, n_streams=4),
+                        seed=0, n_shards=2, parallel=False).run(0)
+    assert r.events == 0
+    assert r.iops == 0.0
+
+
+def test_sharded_run_is_deterministic():
+    wl = Workload(w_total=4 * 8, qd_per_ssd=8, n_streams=4)
+    a = ShardedArraySim(4, SMALL, 0.6, wl, seed=9, n_shards=2).run(4000)
+    b = ShardedArraySim(4, SMALL, 0.6, wl, seed=9, n_shards=2).run(4000)
+    assert a.iops == b.iops and a.p95_latency == b.p95_latency
+
+
+def test_window_splits_proportionally():
+    sim = ShardedArraySim(10, SMALL, 0.6,
+                          Workload(w_total=100, qd_per_ssd=10, n_streams=10),
+                          seed=0, n_shards=3)
+    args = sim._shard_args(3000, None)
+    sizes = [a[0] for a in args]
+    assert sizes == [4, 3, 3]
+    assert [a[3].w_total for a in args] == [40, 30, 30]
+    assert [a[3].n_streams for a in args] == [4, 3, 3]
+    assert sum(a[5] for a in args) == pytest.approx(3000, abs=len(args))
+
+
+@pytest.mark.slow
+def test_scale_sweep_128_ssds_monotone():
+    """The ROADMAP scale item: a 128-SSD qd sweep completes and keeps the
+    paper's monotone qd->throughput trend under active GC."""
+    prev = 0.0
+    for qd in (1, 4, 32):
+        r = ShardedArraySim(
+            128, SSDParams(capacity_pages=8192), 0.6,
+            Workload(w_total=128 * qd, qd_per_ssd=qd, n_streams=128),
+            seed=0).run(80000)
+        assert r.per_ssd_iops.shape == (128,)
+        assert r.iops > prev, f"qd={qd} did not improve throughput"
+        prev = r.iops
