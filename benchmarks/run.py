@@ -16,11 +16,11 @@ def main(argv=None):
                     help="smaller op counts (CI)")
     args = ap.parse_args(argv)
 
-    # perf + scale first, before anything imports jax: ShardedArraySim's
+    # perf + scale + raid first, before anything imports jax: ShardedArraySim's
     # worker pool can then use the fast 'fork' start method (forking after
     # the multithreaded JAX runtime initializes risks worker deadlock, and
     # the fallback 'spawn' pool is slower to start)
-    from . import perf_bench, scale_sweep
+    from . import perf_bench, raid_sweep, scale_sweep
 
     t0 = time.time()
     print("=" * 72)
@@ -28,6 +28,11 @@ def main(argv=None):
     print("=" * 72)
     rc = perf_bench.main(["--smoke"] if args.fast else [])
     rc |= scale_sweep.main(["--smoke"] if args.fast else [])
+    print()
+    print("=" * 72)
+    print("SSArray layouts -- JBOD vs RAID-0 vs RAID-5 under active GC")
+    print("=" * 72)
+    rc |= raid_sweep.main(["--smoke"] if args.fast else [])
     print()
 
     from . import paper_figs, paper_tables, roofline, serving_bench

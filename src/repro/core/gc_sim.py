@@ -41,8 +41,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .engine import DeviceModel, EventLoop, MeasurementWindow
-from .workloads import Op, OpSource, ZipfSampler, _mix64, source_for
+from .engine import DeviceModel, EventLoop, LatencyRecorder, MeasurementWindow
+from .workloads import (OP_READ, OP_REBUILD, OP_TRIM, OP_WRITE, Op, OpSource,
+                        ZipfSampler, _mix64, source_for)
 
 __all__ = [
     "ArrayResults", "ArraySim", "FTL", "SSDParams", "SSDServer", "SealFifo",
@@ -71,6 +72,8 @@ class SSDParams:
     t_coalesce: float = 10.0e-6          # DRAM write-buffer hit: a write whose
                                          # LBA already has a pending write is
                                          # absorbed at bus speed, no program
+    t_trim: float = 20.0e-6              # TRIM/deallocate: mapping-table-only
+                                         # command, no flash program
     gc_low_blocks: int = 12              # enter GC episode at <= low free blocks
     gc_high_blocks: int = 16             # leave episode at >= high free blocks
                                          # (width => ~5 ms pauses; calibrated so
@@ -190,6 +193,7 @@ class FTL:
         self.writes = 0          # user page programs
         self.gc_copies = 0       # GC page programs
         self.erases = 0
+        self.trims = 0           # TRIM invalidations applied
 
     def clone(self, rng: np.random.Generator) -> "FTL":
         """Fast state copy (prefill snapshot cache) — ~10x cheaper than
@@ -214,6 +218,7 @@ class FTL:
         c.writes = self.writes
         c.gc_copies = self.gc_copies
         c.erases = self.erases
+        c.trims = self.trims
         if hasattr(self, "live_lbas"):
             c.live_lbas = self.live_lbas
         return c
@@ -348,10 +353,22 @@ class FTL:
             self.writes = 0
             self.gc_copies = 0
             self.erases = 0
+            self.trims = 0
 
     def user_write(self, lba: int) -> None:
         self._program(lba)
         self.writes += 1
+
+    def trim(self, lba: int) -> None:
+        """TRIM/deallocate ``lba``: drop the mapping and mark its physical
+        page invalid, so GC never copies it (trim-aware GC lowers WA). A
+        later write to the LBA simply re-maps it."""
+        loc = self._lba_loc[lba]
+        if loc >= 0:
+            self._page_lba[loc] = -1
+            self._valid_count[loc // self.p.pages_per_block] -= 1
+            self._lba_loc[lba] = -1
+            self.trims += 1
 
     def need_gc(self) -> bool:
         return len(self.free_blocks) <= self._gc_low
@@ -390,6 +407,8 @@ class FTL:
 @dataclass(frozen=True)
 class Workload:
     read_frac: float = 0.0
+    trim_frac: float = 0.0           # fraction of writes issued as TRIM
+                                     # (uniform/zipf sources; trim-aware GC)
     dist: str = "uniform"            # "uniform" | "zipf"
     zipf_s: float = 0.99
     w_total: int = 128               # total outstanding window (app tokens)
@@ -430,6 +449,25 @@ class ArrayResults:
     p99_latency: float = 0.0
     events: int = 0                  # engine events dispatched during run()
     wall_s: float = 0.0              # host wall-clock seconds of run()
+    # -- array-layout results (core/raid.py; defaults = the JBOD story) ------
+    layout: str = "jbod"
+    parity_wa: float = 1.0           # member page writes / logical page writes
+    gc_wa: float = 1.0               # (user + GC programs) / user programs
+    array_wa: float = 1.0            # total = parity_wa * gc_wa
+    stripe_stall_mean: float = 0.0   # per striped write: last child done -
+    stripe_stall_p99: float = 0.0    #   first child done (the sync penalty)
+    util_spread: float = 0.0         # max - min per-SSD utilization
+    logical_writes: int = 0          # measured logical data pages written
+    child_writes: int = 0            # measured member page writes (data+parity)
+    child_reads: int = 0             # measured member page reads (RMW/degraded)
+    parity_writes: int = 0
+    full_stripe_rows: int = 0        # rows closed by the coalesced path
+    rmw_ops: int = 0                 # logical writes that paid the RMW
+    degraded_reads: int = 0          # reads served by reconstruction
+    rebuild_rows: int = 0            # rebuild rows completed during run()
+    trims: int = 0                   # TRIM invalidations applied (measured)
+    ftl_writes: int = 0              # measured user page programs (all SSDs)
+    ftl_gc_copies: int = 0           # measured GC page copies (all SSDs)
 
 
 class SSDServer:
@@ -447,6 +485,7 @@ class SSDServer:
         self.busy_time = 0.0         # channel-seconds (see DeviceModel)
         self.served_reads = 0
         self.served_writes = 0
+        self.served_trims = 0
 
     def clone(self, rng: np.random.Generator) -> "SSDServer":
         """Fast state copy (prefill snapshot cache)."""
@@ -459,6 +498,7 @@ class SSDServer:
         c.busy_time = self.busy_time
         c.served_reads = self.served_reads
         c.served_writes = self.served_writes
+        c.served_trims = self.served_trims
         return c
 
     def service_time(self, is_read: bool) -> float:
@@ -498,18 +538,42 @@ def clear_prefill_cache() -> None:
     _PREFILL_CACHE.clear()
 
 
+def _ftl_window_stats(ssds, ftl_snap, span, channels):
+    """Measurement-window accounting shared by both run loops: per-SSD
+    utilization plus the FTL (writes, gc_copies, trims) deltas against the
+    warmup snapshot and the GC write amplification they imply. Pure
+    arithmetic after ``loop.run()`` — cannot perturb event ordering."""
+    util = np.array([s.busy_time / (span * channels) for s in ssds])
+    ftl_w = sum(s.ftl.writes for s in ssds) - sum(w for w, _, _ in ftl_snap)
+    ftl_c = sum(s.ftl.gc_copies for s in ssds) \
+        - sum(c for _, c, _ in ftl_snap)
+    trims = sum(s.ftl.trims for s in ssds) - sum(t for _, _, t in ftl_snap)
+    gc_wa = (ftl_w + ftl_c) / ftl_w if ftl_w else 1.0
+    return util, ftl_w, ftl_c, trims, gc_wa
+
+
 class ArraySim:
-    """Host + n SSDs on the shared event engine. Global LBAs stripe across
-    SSDs page-granularly; each SSD is a multi-slot NCQ device."""
+    """Host + n SSDs on the shared event engine; each SSD is a multi-slot
+    NCQ device. Data placement is governed by ``layout`` (``core/raid.py``):
+    the default ``JBODLayout`` round-robins independent 1-page LBAs across
+    SSDs on a byte-identical fast path, while ``Raid0Layout``/``Raid5Layout``
+    fan each logical op out to striped per-SSD children (completing at the
+    max of them) through :meth:`_run_layout`."""
 
     def __init__(self, n_ssds: int, ssd: SSDParams = SSDParams(),
                  occupancy: float = 0.6, workload: Workload = Workload(),
                  seed: int = 0, source: OpSource | None = None,
                  trace: np.ndarray | None = None,
-                 prefill_cache: bool = False):
+                 prefill_cache: bool = False,
+                 layout: "Layout | None" = None):
+        from .raid import JBODLayout, Layout   # local: raid imports workloads
         self.n = n_ssds
         self.p = ssd
         self.wl = workload
+        self.layout = layout if layout is not None else JBODLayout()
+        if not isinstance(self.layout, Layout):
+            raise TypeError(f"layout must be a core.raid.Layout, "
+                            f"got {type(self.layout).__name__}")
         self.rng = np.random.default_rng(seed)
         key = (n_ssds, ssd, occupancy, seed) if prefill_cache else None
         snap = _PREFILL_CACHE.get(key) if key is not None else None
@@ -526,13 +590,18 @@ class ArraySim:
             self.ssds = [s.clone(self.rng) for s in servers]
             self.rng.bit_generator.state = copy.deepcopy(rng_state)
         self.live_per_ssd = self.ssds[0].ftl.live_lbas
-        self.n_live = self.live_per_ssd * n_ssds
+        # the logical page space excludes parity capacity (RAID-5); for JBOD
+        # data_members(n) == n, so this is the historical n_live
+        self.n_live = self.live_per_ssd * self.layout.data_members(n_ssds)
         self.source = source or source_for(workload, self.n_live, self.rng,
                                            trace=trace)
         self.last_latency: np.ndarray | None = None   # samples of last run()
+        self.last_stall: np.ndarray | None = None     # stripe-stall samples
 
     # -- main loop -------------------------------------------------------------
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
+        if not self.layout.trivial:
+            return self._run_layout(measure_ops, warmup_ops)
         n, wl = self.n, self.wl
         if warmup_ops is None:
             warmup_ops = measure_ops // 2
@@ -547,7 +616,7 @@ class ArraySim:
         n_streams = max(1, wl.n_streams)
         window = max(1, wl.w_total // n_streams)
         outstanding = [0] * n_streams
-        parked: list[tuple[int, int, bool] | None] = [None] * n_streams
+        parked: list[tuple[int, int, bool, int] | None] = [None] * n_streams
         sleeping = [False] * n_streams
         waiters: list[deque] = [deque() for _ in range(n)]  # streams parked per SSD
         host_queues: list[deque] = [deque() for _ in range(n)]
@@ -555,6 +624,7 @@ class ArraySim:
 
         measured = [0] * n
         mr = [0, 0]                  # measured [reads, writes]
+        ftl_snap = [(0, 0, 0)] * n   # (writes, gc_copies, trims) at warmup
 
         def begin_measure():
             measured[:] = [0] * n
@@ -562,25 +632,29 @@ class ArraySim:
             for ss in ssds:
                 ss.busy_time = 0.0
                 ss.gc_time = 0.0
+            ftl_snap[:] = [(s.ftl.writes, s.ftl.gc_copies, s.ftl.trims)
+                           for s in ssds]
 
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
         note_completion = mw.note_completion
         next_op = self.source.next_op
 
-        # requests are (stream, lba, is_read, coal, t_issue)
+        # requests are (stream, lba, is_read, coal, t_issue, kind)
         def make_pull(i: int):
             hq = host_queues[i]
             return lambda: hq.popleft() if hq else None
 
         def make_service_time(i: int):
             t_read, t_prog = self.p.t_read, self.p.t_prog
-            t_coal = self.p.t_coalesce
+            t_coal, t_trim = self.p.t_coalesce, self.p.t_trim
 
             def service_time(req):
                 if req[3]:
                     return t_coal
-                return t_read if req[2] else t_prog
+                if req[2]:
+                    return t_read
+                return t_trim if req[5] == OP_TRIM else t_prog
             return service_time
 
         def make_on_done(i: int):
@@ -591,10 +665,13 @@ class ArraySim:
             w = waiters[i]
 
             def on_done(req):
-                stream, lba, is_read, coal, t_issue = req
+                stream, lba, is_read, coal, t_issue, kind = req
                 outstanding[stream] -= 1
                 if is_read:
                     s.served_reads += 1
+                elif kind == OP_TRIM:
+                    ftl.trim(lba)
+                    s.served_trims += 1
                 else:
                     s.served_writes += 1
                     c = pw[lba] - 1
@@ -621,10 +698,11 @@ class ArraySim:
                                backlog=host_queues[i])
                    for i in range(n)]
 
-        def enqueue(stream: int, ssd_i: int, lba: int, is_read: bool):
+        def enqueue(stream: int, ssd_i: int, lba: int, is_read: bool,
+                    kind: int):
             s = ssds[ssd_i]
             coal = False
-            if not is_read:
+            if kind == OP_WRITE:
                 pw = s.pending_writes
                 c = pw.get(lba)
                 if c is None:
@@ -633,7 +711,7 @@ class ArraySim:
                     coal = True
                     pw[lba] = c + 1
             outstanding[stream] += 1
-            req = (stream, lba, is_read, coal, loop.now)
+            req = (stream, lba, is_read, coal, loop.now, kind)
             hq = host_queues[ssd_i]
             dev = devices[ssd_i]
             if hq:
@@ -642,20 +720,21 @@ class ArraySim:
             elif not dev.offer(req):
                 hq.append(req)
 
-        def place(stream: int, ssd_i: int, lba: int, is_read: bool) -> bool:
+        def place(stream: int, ssd_i: int, lba: int, is_read: bool,
+                  kind: int) -> bool:
             """Enqueue or park; True if the stream may keep submitting."""
             dev = devices[ssd_i]
             if len(host_queues[ssd_i]) + len(dev.admitted) + dev.in_service < qd:
-                enqueue(stream, ssd_i, lba, is_read)
+                enqueue(stream, ssd_i, lba, is_read, kind)
                 return True
-            parked[stream] = (ssd_i, lba, is_read)
+            parked[stream] = (ssd_i, lba, is_read, kind)
             waiters[ssd_i].append(stream)
             return False
 
         def wake(args):
-            stream, ssd_i, lba, is_read = args
+            stream, ssd_i, lba, is_read, kind = args
             sleeping[stream] = False
-            if place(stream, ssd_i, lba, is_read):
+            if place(stream, ssd_i, lba, is_read, kind):
                 stream_fill(stream)
 
         def stream_fill(stream: int):
@@ -667,11 +746,15 @@ class ArraySim:
                 op = next_op(loop.now)
                 glba = op.lba
                 ssd_i, lba = glba % n, glba // n
+                kind = op.kind
+                if kind < 0:
+                    kind = OP_READ if op.is_read else OP_WRITE
                 if op.at > loop.now:
                     sleeping[stream] = True
-                    loop.call_at(op.at, wake, (stream, ssd_i, lba, op.is_read))
+                    loop.call_at(op.at, wake,
+                                 (stream, ssd_i, lba, op.is_read, kind))
                     return
-                if not place(stream, ssd_i, lba, op.is_read):
+                if not place(stream, ssd_i, lba, op.is_read, kind):
                     return
 
         def unpark(ssd_i: int):
@@ -680,9 +763,9 @@ class ArraySim:
             dev = devices[ssd_i]
             while w and len(hq) + len(dev.admitted) + dev.in_service < qd:
                 stream = w.popleft()
-                tgt, lba, is_read = parked[stream]
+                tgt, lba, is_read, kind = parked[stream]
                 parked[stream] = None
-                enqueue(stream, tgt, lba, is_read)
+                enqueue(stream, tgt, lba, is_read, kind)
                 stream_fill(stream)
 
         for si in range(n_streams):
@@ -696,14 +779,16 @@ class ArraySim:
         span = mw.span
         summ = mw.latency.summary()
         self.last_latency = mw.latency.values()
+        self.last_stall = None
         measured_arr = np.asarray(measured, dtype=np.int64)
+        util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
+            ssds, ftl_snap, span, self.p.channels)
         return ArrayResults(
             iops=float(measured_arr.sum() / span),
             per_ssd_iops=measured_arr / span,
             read_iops=mr[0] / span,
             write_iops=mr[1] / span,
-            util=np.array([s.busy_time / (span * self.p.channels)
-                           for s in ssds]),
+            util=util,
             sim_time=span,
             gc_pause_frac=np.array([s.gc_time / span for s in ssds]),
             mean_latency=summ.mean,
@@ -712,6 +797,303 @@ class ArraySim:
             p99_latency=summ.p99,
             events=events,
             wall_s=wall_s,
+            gc_wa=gc_wa,
+            array_wa=gc_wa,
+            util_spread=float(util.max() - util.min()) if n else 0.0,
+            trims=trims,
+            ftl_writes=ftl_w,
+            ftl_gc_copies=ftl_c,
+        )
+
+
+    # -- layout-general loop (RAID-0 / RAID-5; JBOD keeps the fast path) -----
+    def _run_layout(self, measure_ops: int,
+                    warmup_ops: int | None = None) -> ArrayResults:
+        """Run with a non-trivial array layout: each logical op is lowered by
+        the layout's planner into phases of per-SSD page children
+        (``core/raid.py``); the op completes with its LAST child, so a stripe
+        write synchronizes on the slowest member — one straggling mid-GC SSD
+        stalls every stripe touching it, which is the paper's imbalance
+        magnified by striping. The submission machinery (windowed streams,
+        bounded per-SSD host queues, head-of-line parking) mirrors the fast
+        path; RMW/reconstruction follow-on phases and detached background
+        plans (catch-up parity) bypass the qd bound like device-internal
+        traffic, so they can never deadlock against a full host queue."""
+        from .raid import RebuildSource
+        n, wl = self.n, self.wl
+        layout = self.layout
+        planner = layout.make_planner(n, self.live_per_ssd)
+        if warmup_ops is None:
+            warmup_ops = measure_ops // 2
+        total_ops = warmup_ops + measure_ops
+        loop = EventLoop()
+        qd = wl.qd_per_ssd
+
+        n_fg = max(1, wl.n_streams)
+        rebuild_on = bool(getattr(planner, "rebuild", False))
+        n_streams = n_fg + (1 if rebuild_on else 0)
+        window = max(1, wl.w_total // n_fg)
+        windows = [window] * n_fg
+        srcs = [self.source] * n_fg
+        if rebuild_on:
+            windows.append(max(1, layout.rebuild_window))
+            srcs.append(RebuildSource())
+
+        outstanding = [0] * n_streams
+        pending: list[deque] = [deque() for _ in range(n_streams)]
+        parked = [False] * n_streams
+        sleeping = [False] * n_streams
+        waiters: list[deque] = [deque() for _ in range(n)]
+        host_queues: list[deque] = [deque() for _ in range(n)]
+        ssds = self.ssds
+
+        measured = [0] * n           # per-SSD child completions in-window
+        mr = [0, 0]                  # measured logical [reads, writes]
+        rebuild_done = [0]
+        ftl_snap = [(0, 0, 0)] * n
+        stall = LatencyRecorder()
+        stat_snap = [planner.snapshot()]
+
+        def begin_measure():
+            measured[:] = [0] * n
+            mr[0] = mr[1] = 0
+            for ss in ssds:
+                ss.busy_time = 0.0
+                ss.gc_time = 0.0
+            ftl_snap[:] = [(s.ftl.writes, s.ftl.gc_copies, s.ftl.trims)
+                           for s in ssds]
+            stat_snap[0] = planner.snapshot()
+            stall.reset()
+
+        mw = MeasurementWindow(loop, warmup_ops, begin_measure,
+                               target=total_ops)
+        note_completion = mw.note_completion
+
+        def make_pull(i: int):
+            hq = host_queues[i]
+            return lambda: hq.popleft() if hq else None
+
+        def make_service_time(i: int):
+            t_read, t_prog = self.p.t_read, self.p.t_prog
+            t_coal, t_trim = self.p.t_coalesce, self.p.t_trim
+
+            def service_time(req):
+                if req[3]:
+                    return t_coal
+                k = req[2]
+                if k == OP_READ:
+                    return t_read
+                return t_trim if k == OP_TRIM else t_prog
+            return service_time
+
+        # child requests are (plan, member_lba, kind, coal)
+        def enqueue_child(plan, ssd_i: int, lba: int, kind: int):
+            coal = False
+            if kind == OP_WRITE:
+                pw = ssds[ssd_i].pending_writes
+                c = pw.get(lba)
+                if c is None:
+                    pw[lba] = 1
+                else:
+                    coal = True
+                    pw[lba] = c + 1
+            req = (plan, lba, kind, coal)
+            hq = host_queues[ssd_i]
+            dev = devices[ssd_i]
+            if hq:
+                hq.append(req)
+                dev.kick()
+            elif not dev.offer(req):
+                hq.append(req)
+
+        def submit_phase(plan):
+            children = plan.phases[plan.phase_i]
+            plan.remaining = len(children)
+            for ssd_i, lba, kind in children:
+                enqueue_child(plan, ssd_i, lba, kind)
+
+        def finish_plan(plan):
+            st = plan.stream
+            if st >= 0:
+                outstanding[st] -= 1
+            if plan.measured:
+                if note_completion(plan.t_issue):
+                    if plan.kind == OP_READ:
+                        mr[0] += 1
+                    else:
+                        mr[1] += 1
+                if plan.stall_track and mw.measuring and plan.t_first >= 0.0:
+                    stall.record(plan.t_last - plan.t_first)
+            elif plan.kind == OP_REBUILD:
+                rebuild_done[0] += 1
+            if st >= 0:
+                stream_fill(st)
+
+        def make_on_done(i: int):
+            s = ssds[i]
+            ftl = s.ftl
+            program = ftl._program
+            pw = s.pending_writes
+            w = waiters[i]
+
+            def on_done(req):
+                plan, lba, kind, coal = req
+                if kind == OP_READ:
+                    s.served_reads += 1
+                elif kind == OP_TRIM:
+                    ftl.trim(lba)
+                    s.served_trims += 1
+                else:
+                    s.served_writes += 1
+                    c = pw[lba] - 1
+                    if c:
+                        pw[lba] = c
+                    else:
+                        del pw[lba]
+                    if not coal:      # inlined ftl.user_write
+                        program(lba)
+                        ftl.writes += 1
+                if mw.measuring:
+                    measured[i] += 1
+                now = loop.now
+                if plan.t_first < 0.0:
+                    plan.t_first = now
+                plan.t_last = now
+                r = plan.remaining - 1
+                plan.remaining = r
+                if r == 0:
+                    nxt = plan.phase_i + 1
+                    if nxt < len(plan.phases):
+                        plan.phase_i = nxt
+                        plan.t_first = -1.0   # stall spans the final phase
+                        submit_phase(plan)
+                    else:
+                        finish_plan(plan)
+                if w:
+                    unpark(i)
+            return on_done
+
+        devices = [DeviceModel(loop, ssds[i], make_pull(i),
+                               make_service_time(i), make_on_done(i),
+                               backlog=host_queues[i])
+                   for i in range(n)]
+
+        def try_drain(st: int) -> bool:
+            """Place the stream's pending children in order; parks the stream
+            (False) when a target host queue is at the qd bound."""
+            pend = pending[st]
+            while pend:
+                ssd_i, lba, kind, plan = pend[0]
+                dev = devices[ssd_i]
+                if len(host_queues[ssd_i]) + len(dev.admitted) \
+                        + dev.in_service < qd:
+                    pend.popleft()
+                    enqueue_child(plan, ssd_i, lba, kind)
+                else:
+                    parked[st] = True
+                    waiters[ssd_i].append(st)
+                    return False
+            return True
+
+        def issue_op(st: int, op) -> bool:
+            plan, detached = planner.plan(op)
+            if plan is None:          # host-level no-op (e.g. TRIM whose
+                return True           # only target is the failed member)
+            plan.stream = st
+            plan.t_issue = loop.now
+            outstanding[st] += 1
+            if detached:
+                for d in detached:
+                    d.t_issue = loop.now
+                    submit_phase(d)   # background: bypasses the qd bound
+            children = plan.phases[0]
+            plan.remaining = len(children)
+            pend = pending[st]
+            for ch in children:
+                pend.append((ch[0], ch[1], ch[2], plan))
+            return try_drain(st)
+
+        def wake(args):
+            st, op = args
+            sleeping[st] = False
+            if issue_op(st, op):
+                stream_fill(st)
+
+        def stream_fill(st: int):
+            if parked[st] or sleeping[st] or pending[st]:
+                return
+            win = windows[st]
+            src = srcs[st]
+            next_op = src.next_op
+            while outstanding[st] < win:
+                op = next_op(loop.now)
+                if op.at > loop.now:
+                    sleeping[st] = True
+                    loop.call_at(op.at, wake, (st, op))
+                    return
+                if not issue_op(st, op):
+                    return
+
+        def unpark(ssd_i: int):
+            w = waiters[ssd_i]
+            hq = host_queues[ssd_i]
+            dev = devices[ssd_i]
+            while w and len(hq) + len(dev.admitted) + dev.in_service < qd:
+                st = w.popleft()
+                parked[st] = False
+                if try_drain(st):
+                    stream_fill(st)
+
+        for si in range(n_streams):
+            stream_fill(si)
+
+        t_wall = time.perf_counter()
+        events = loop.run() if total_ops > 0 else 0
+        wall_s = time.perf_counter() - t_wall
+
+        span = mw.span
+        summ = mw.latency.summary()
+        stall_summ = stall.summary()
+        self.last_latency = mw.latency.values()
+        self.last_stall = stall.values()
+        measured_arr = np.asarray(measured, dtype=np.int64)
+        util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
+            ssds, ftl_snap, span, self.p.channels)
+        sd = planner.delta(stat_snap[0])
+        parity_wa = sd["child_writes"] / sd["logical_writes"] \
+            if sd["logical_writes"] else 1.0
+        return ArrayResults(
+            iops=float(summ.n / span),
+            per_ssd_iops=measured_arr / span,
+            read_iops=mr[0] / span,
+            write_iops=mr[1] / span,
+            util=util,
+            sim_time=span,
+            gc_pause_frac=np.array([s.gc_time / span for s in ssds]),
+            mean_latency=summ.mean,
+            p50_latency=summ.p50,
+            p95_latency=summ.p95,
+            p99_latency=summ.p99,
+            events=events,
+            wall_s=wall_s,
+            layout=layout.name,
+            parity_wa=parity_wa,
+            gc_wa=gc_wa,
+            array_wa=parity_wa * gc_wa,
+            stripe_stall_mean=stall_summ.mean,
+            stripe_stall_p99=stall_summ.p99,
+            util_spread=float(util.max() - util.min()) if n else 0.0,
+            logical_writes=sd["logical_writes"],
+            child_writes=sd["child_writes"],
+            child_reads=sd["child_reads"],
+            parity_writes=sd["parity_writes"],
+            full_stripe_rows=sd["full_stripe_rows"],
+            rmw_ops=sd["rmw_ops"],
+            degraded_reads=sd["degraded_reads"],
+            rebuild_rows=rebuild_done[0],
+            trims=trims,
+            ftl_writes=ftl_w,
+            ftl_gc_copies=ftl_c,
         )
 
 

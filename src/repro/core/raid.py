@@ -1,0 +1,600 @@
+"""Array layout subsystem: how logical pages map onto the array's SSDs.
+
+Sits between the workload layer (``core/workloads.py``) and the per-SSD
+``DeviceModel``s: a :class:`Layout` spec describes the data placement and a
+per-run *planner* turns each logical :class:`~.workloads.Op` into a
+:class:`Plan` — one or two *phases* of per-SSD page children. A logical op
+completes when its last child completes, so a striped write finishes at the
+**max** of its members — exactly the regime where the paper's unsynchronized
+GC pauses hurt most: one straggling member (mid-GC) stalls every stripe that
+touches it, and parity updates amplify random writes onto sibling SSDs.
+
+Layouts
+-------
+* :class:`JBODLayout` — the historical behavior (page-granular round-robin of
+  independent 1-page ops). The default; ``ArraySim`` keeps its byte-identical
+  fast path for it.
+* :class:`Raid0Layout` — striping without parity. A logical op covers up to
+  ``stripe_width`` pages of one stripe row and fans out to one child per
+  member page.
+* :class:`Raid5Layout` — rotating parity (one parity member per stripe row,
+  ``row % group``). Small writes do the classic read-modify-write: phase 1
+  reads old data + old parity, phase 2 writes new data + new parity (2 reads
+  + 2 writes for a 1-page write). Sequential runs are detected online and
+  coalesce into full-stripe writes that skip the RMW entirely (parity is
+  written once per row, write amplification ``group/(group-1)``).
+
+Stripe groups: ``group`` partitions the array into independent RAID sets of
+``group`` SSDs; stripe rows interleave across groups so load stays even. A
+stripe never spans groups, which is what lets ``ShardedArraySim`` partition a
+grouped array across worker processes with bit-identical results
+(``shard_unit``).
+
+Failure scenarios: ``Raid5Layout(degraded=1)`` drops the last member of every
+group — reads reconstruct from the surviving row members, writes fall back to
+reconstructing parity — and ``rebuild=True`` adds a background rebuild tenant
+(:class:`RebuildSource`) that streams row-reconstruction I/O (read the
+``group-1`` survivors, write the spare) in competition with foreground
+traffic.
+
+Everything here is pure planning — no simulated time, no RNG. The DES
+integration (windows, parking, device service, measurement) lives in
+``gc_sim.ArraySim._run_layout``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+
+from .workloads import OP_READ, OP_REBUILD, OP_TRIM, OP_WRITE, Op, OpSource
+
+__all__ = [
+    "JBODLayout", "Layout", "Plan", "Raid0Layout", "Raid5Layout",
+    "RebuildSource", "StripeMap", "layout_from_name",
+]
+
+# how many concurrent sequential runs the RAID-5 planner tracks before the
+# oldest is evicted (its open row gets a catch-up parity plan). Matches the
+# multi-cursor sequential sources (a handful of cursors), with headroom.
+_MAX_RUNS = 128
+
+
+class StripeMap:
+    """Pure address algebra shared by the planners and the tests.
+
+    Logical pages are grouped into stripe *rows* of ``d`` data pages
+    (``d = group`` for RAID-0, ``group - 1`` for RAID-5); row ``s`` lives in
+    group ``s % n_groups`` at member-LBA ``r = s // n_groups``. Within a
+    RAID-5 group the parity member rotates (``r % group``, left-symmetric
+    style) and data index ``i`` lands on member ``(parity + 1 + i) % group``.
+    Every member therefore holds one page of every row of its group at the
+    same member-LBA ``r`` — member LBAs stay dense in ``[0, rows)``, which is
+    what the per-SSD FTLs (prefilled to ``rows`` live LBAs) expect.
+    """
+
+    __slots__ = ("n", "group", "n_groups", "d", "parity")
+
+    def __init__(self, n: int, group: int, parity: bool):
+        if group < (3 if parity else 2):
+            raise ValueError(f"group={group} too small for "
+                             f"{'RAID-5' if parity else 'RAID-0'}")
+        if n % group:
+            raise ValueError(f"n_ssds={n} not a multiple of group={group}")
+        self.n = n
+        self.group = group
+        self.n_groups = n // group
+        self.d = group - 1 if parity else group
+        self.parity = parity
+
+    def data_members(self) -> int:
+        """Data-bearing member count (sizes the logical page space)."""
+        return self.n_groups * self.d
+
+    def row_of(self, lba: int) -> tuple[int, int, int]:
+        """Logical page -> (group, member_lba r, within-row index i)."""
+        s, i = divmod(lba, self.d)
+        return s % self.n_groups, s // self.n_groups, i
+
+    def parity_member(self, g: int, r: int) -> int:
+        """Global SSD index of row ``r``'s parity member in group ``g``."""
+        return g * self.group + r % self.group
+
+    def data_member(self, g: int, r: int, i: int) -> int:
+        """Global SSD index of data index ``i`` in row ``r`` of group ``g``."""
+        if self.parity:
+            local = (r % self.group + 1 + i) % self.group
+        else:
+            local = i
+        return g * self.group + local
+
+    def locate(self, lba: int) -> tuple[int, int]:
+        """Logical page -> (global SSD index, member LBA)."""
+        g, r, i = self.row_of(lba)
+        return self.data_member(g, r, i), r
+
+    def logical(self, g: int, r: int, i: int) -> int:
+        """Inverse of :meth:`row_of`."""
+        return (r * self.n_groups + g) * self.d + i
+
+    def row_members(self, g: int, r: int) -> list[tuple[int, int, bool]]:
+        """All member pages of a row: ``(ssd, member_lba, is_parity)``."""
+        out = [(self.data_member(g, r, i), r, False) for i in range(self.d)]
+        if self.parity:
+            out.append((self.parity_member(g, r), r, True))
+        return out
+
+
+class Plan:
+    """One logical op, lowered to phases of per-SSD page children.
+
+    ``phases`` is a list of child lists; each child is ``(ssd, member_lba,
+    kind)`` with kinds from ``core.workloads``. Phase ``k+1`` is submitted
+    only when every child of phase ``k`` has completed (the RMW
+    read-then-write dependency); the logical op completes with the last
+    child of the last phase. ``ArraySim._run_layout`` owns the mutable
+    bookkeeping fields (``stream``/``t_issue``/``remaining``/...)."""
+
+    __slots__ = ("phases", "kind", "measured", "stall_track", "stream",
+                 "t_issue", "phase_i", "remaining", "t_first", "t_last")
+
+    def __init__(self, phases, kind: int, measured: bool = True,
+                 stall_track: bool = False):
+        self.phases = phases
+        self.kind = kind                  # OP_READ/OP_WRITE/OP_TRIM/OP_REBUILD
+        self.measured = measured
+        self.stall_track = stall_track
+        # run-loop bookkeeping (set at submission)
+        self.stream = -1
+        self.t_issue = 0.0
+        self.phase_i = 0
+        self.remaining = 0
+        self.t_first = -1.0
+        self.t_last = 0.0
+
+
+class RebuildSource(OpSource):
+    """Background rebuild tenant: an endless stream of ``OP_REBUILD`` ops,
+    one per stripe row, cycling over every group's rows. The planner lowers
+    each into (read the survivors, write the spare)."""
+
+    def __init__(self) -> None:
+        self._c = 0
+
+    def next_op(self, now: float) -> Op:
+        c = self._c
+        self._c = c + 1
+        return Op(c, False, kind=OP_REBUILD, tenant=-1)
+
+
+def _new_stats() -> dict:
+    return {
+        "logical_writes": 0,      # logical data pages written (foreground)
+        "logical_reads": 0,       # logical data pages read (foreground)
+        "child_writes": 0,        # member page writes issued (data + parity)
+        "child_reads": 0,         # member page reads issued (incl. RMW/rec.)
+        "parity_writes": 0,       # parity member page writes
+        "full_stripe_rows": 0,    # rows closed by the coalesced path
+        "rmw_ops": 0,             # logical writes that took read-modify-write
+        "deferred_writes": 0,     # seq-run writes that skipped the RMW
+        "catchup_rows": 0,        # broken-run rows finished by catch-up plans
+        "degraded_reads": 0,      # reads served by reconstruction
+        "trims": 0,               # logical trims planned
+        "rebuild_rows": 0,        # rebuild rows planned
+        "rebuild_reads": 0,       # survivor reads issued by the rebuild tenant
+        "rebuild_writes": 0,      # spare writes issued by the rebuild tenant
+    }
+
+
+class _BasePlanner:
+    """Shared planner state: stripe map, per-run stats, degraded member."""
+
+    def __init__(self, smap: StripeMap, rows: int, stripe_width: int,
+                 degraded: int):
+        self.smap = smap
+        self.rows = rows                          # member LBAs per SSD
+        self.w = max(1, min(stripe_width, smap.d))
+        if degraded not in (0, 1):
+            raise ValueError("degraded must be 0 or 1 (single-parity array)")
+        if degraded and not smap.parity:
+            raise ValueError("degraded mode needs a parity layout (RAID-5); "
+                             "a degraded RAID-0/JBOD member is data loss")
+        self.degraded = degraded
+        # the failed SSD is the last member of every group (arbitrary but
+        # fixed; rotation spreads its role across data and parity rows)
+        self.dead_local = smap.group - 1 if degraded else -1
+        self.stats = _new_stats()
+
+    # -- shared helpers ------------------------------------------------------
+    def _segment(self, lba: int) -> tuple[int, int, int, int]:
+        """Aligned window of the op: (group, row, start_i, end_i).
+
+        Ops are aligned to ``stripe_width`` *within* their stripe row, so a
+        logical op never spans rows (and therefore never spans groups —
+        the invariant stripe-group sharding relies on). The tail window of a
+        row is short when the width doesn't divide ``d``."""
+        g, r, i = self.smap.row_of(lba)
+        start = i - i % self.w
+        return g, r, start, min(start + self.w, self.smap.d)
+
+    def _dead_ssd(self, g: int) -> int:
+        return g * self.smap.group + self.dead_local
+
+    def snapshot(self) -> dict:
+        return dict(self.stats)
+
+    def delta(self, snap: dict) -> dict:
+        return {k: v - snap[k] for k, v in self.stats.items()}
+
+
+class _Raid0Planner(_BasePlanner):
+    """Striping without parity: one child per member page of the window."""
+
+    rebuild = False
+
+    def plan(self, op: Op):
+        smap = self.smap
+        kind = op.op_kind()
+        g, r, s_i, e_i = self._segment(op.lba)
+        k = e_i - s_i
+        st = self.stats
+        if kind == OP_READ:
+            st["logical_reads"] += k
+        elif kind == OP_TRIM:
+            st["trims"] += k
+        else:
+            kind = OP_WRITE
+            st["logical_writes"] += k
+            st["child_writes"] += k
+        children = [(smap.data_member(g, r, i), r, kind)
+                    for i in range(s_i, e_i)]
+        if kind == OP_READ:
+            st["child_reads"] += k
+        return Plan([children], kind,
+                    stall_track=(kind == OP_WRITE and k > 1)), None
+
+    def flush(self):
+        return []
+
+
+class _Raid5Planner(_BasePlanner):
+    """Rotating parity with online sequential-run detection.
+
+    A *run* is a contiguous ascending sequence of write windows (one per
+    submitting cursor; the bounded ``_runs`` dict keys each run by the next
+    logical page it expects). A write window that contiguously extends a run
+    from the start of its stripe row skips the RMW — its parity is deferred
+    and written once when the run closes the row (the full-stripe path). A
+    window that doesn't (random writes, broken runs) pays the classic RMW:
+    read old data + old parity, write new data + new parity. When a run with
+    a half-covered row is evicted, a detached *catch-up* plan reconstructs
+    and writes that row's parity (read the unwritten data pages, write
+    parity) so parity is eventually consistent for every touched row.
+    """
+
+    def __init__(self, smap: StripeMap, rows: int, stripe_width: int,
+                 degraded: int, rebuild: bool):
+        super().__init__(smap, rows, stripe_width, degraded)
+        self.rebuild = rebuild and degraded > 0
+        # next_expected_lba -> [run_len_pages, open_row (g, r, covered) | None]
+        self._runs: OrderedDict[int, list] = OrderedDict()
+
+    # -- rebuild -------------------------------------------------------------
+    def _plan_rebuild(self, counter: int) -> Plan:
+        smap = self.smap
+        g = counter % smap.n_groups
+        r = (counter // smap.n_groups) % self.rows
+        dead = self._dead_ssd(g)
+        reads = [(ssd, lba, OP_READ)
+                 for ssd, lba, _ in smap.row_members(g, r) if ssd != dead]
+        st = self.stats
+        st["rebuild_rows"] += 1
+        # rebuild traffic gets its own counters: it is background
+        # reconstruction load, NOT parity write amplification, so it must
+        # stay out of the child_writes/logical_writes WA split
+        st["rebuild_reads"] += len(reads)
+        st["rebuild_writes"] += 1
+        return Plan([reads, [(dead, r, OP_WRITE)]], OP_REBUILD,
+                    measured=False)
+
+    # -- reads ---------------------------------------------------------------
+    def _plan_read(self, g: int, r: int, s_i: int, e_i: int) -> Plan:
+        smap = self.smap
+        st = self.stats
+        k = e_i - s_i
+        st["logical_reads"] += k
+        if not self.degraded:
+            children = [(smap.data_member(g, r, i), r, OP_READ)
+                        for i in range(s_i, e_i)]
+            st["child_reads"] += k
+            return Plan([children], OP_READ)
+        dead = self._dead_ssd(g)
+        need: list[tuple[int, int]] = []     # ordered, deduped (ssd, lba)
+        seen: set[int] = set()
+        reconstructed = 0
+        for i in range(s_i, e_i):
+            ssd = smap.data_member(g, r, i)
+            if ssd != dead:
+                if ssd not in seen:
+                    seen.add(ssd)
+                    need.append((ssd, r))
+            else:
+                reconstructed += 1
+                for o_ssd, o_lba, _ in smap.row_members(g, r):
+                    if o_ssd != dead and o_ssd not in seen:
+                        seen.add(o_ssd)
+                        need.append((o_ssd, o_lba))
+        st["degraded_reads"] += reconstructed
+        st["child_reads"] += len(need)
+        children = [(ssd, lba, OP_READ) for ssd, lba in need]
+        return Plan([children], OP_READ)
+
+    # -- writes --------------------------------------------------------------
+    def _run_continue(self, lba0: int, k: int):
+        """Advance run tracking. Returns ``(run_len, evicted_open_rows)``:
+        the total contiguous run length in pages INCLUDING this window
+        (``k`` when the window starts a run), and the open deferred rows of
+        any runs displaced on the way — a run already keyed at the new
+        next-expected page (two cursors converging / a re-write of the run's
+        last page), and the oldest run when the table overflows. Displaced
+        open rows MUST be surfaced so the caller emits catch-up parity,
+        or the row would silently stay parity-inconsistent."""
+        runs = self._runs
+        state = runs.pop(lba0, None)
+        if state is None:
+            state = [k, None]
+        else:
+            state[0] += k
+        evicted = []
+        collided = runs.pop(lba0 + k, None)
+        if collided is not None and collided[1] is not None:
+            evicted.append(collided[1])
+        runs[lba0 + k] = state
+        if len(runs) > _MAX_RUNS:
+            _, oldest = runs.popitem(last=False)
+            if oldest[1] is not None:
+                evicted.append(oldest[1])
+        return state[0], evicted
+
+    def _catchup_plan(self, open_row) -> Plan:
+        """Detached plan finishing the parity of a half-written row: read the
+        data pages the run never wrote, write the parity page."""
+        g, r, covered = open_row
+        smap = self.smap
+        dead = self._dead_ssd(g) if self.degraded else -1
+        reads = []
+        for i in range(covered, smap.d):
+            ssd = smap.data_member(g, r, i)
+            if ssd != dead:
+                reads.append((ssd, r, OP_READ))
+        p_ssd = smap.parity_member(g, r)
+        st = self.stats
+        st["catchup_rows"] += 1
+        st["child_reads"] += len(reads)
+        st["child_writes"] += 1
+        st["parity_writes"] += 1
+        phases = [reads, [(p_ssd, r, OP_WRITE)]] if reads \
+            else [[(p_ssd, r, OP_WRITE)]]
+        return Plan(phases, OP_WRITE, measured=False)
+
+    def _plan_write(self, lba: int, g: int, r: int, s_i: int, e_i: int,
+                    trim: bool):
+        smap = self.smap
+        st = self.stats
+        k = e_i - s_i
+        lba0 = smap.logical(g, r, s_i)
+        dead = self._dead_ssd(g) if self.degraded else -1
+        p_ssd = smap.parity_member(g, r)
+        parity_dead = p_ssd == dead
+
+        if trim:
+            # TRIM invalidates the data pages; parity upkeep is skipped (the
+            # modeled cost of trimming is mapping-table-only on the members)
+            st["trims"] += k
+            children = [(smap.data_member(g, r, i), r, OP_TRIM)
+                        for i in range(s_i, e_i)
+                        if smap.data_member(g, r, i) != dead]
+            if not children:
+                # every target page is on the failed member: nothing to send
+                # (a Plan with an empty phase would never complete and leak
+                # the stream's window slot)
+                return None, None
+            return Plan([children], OP_TRIM), None
+
+        st["logical_writes"] += k
+        run_len, evicted = self._run_continue(lba0, k)
+        detached = [self._catchup_plan(e) for e in evicted] or None
+        continued = run_len > k
+
+        data_writes = [(smap.data_member(g, r, i), r, OP_WRITE)
+                       for i in range(s_i, e_i)
+                       if smap.data_member(g, r, i) != dead]
+        dropped = k - len(data_writes)            # writes to the dead member
+
+        if parity_dead:
+            # the row's parity page is on the failed member: no parity to
+            # maintain, plain data writes (the row runs parity-less)
+            st["child_writes"] += len(data_writes)
+            self._clear_open(lba0 + k)
+            return Plan([data_writes], OP_WRITE,
+                        stall_track=len(data_writes) > 1), detached
+
+        closes_row = e_i == smap.d
+        if closes_row and run_len >= smap.d:
+            # full-stripe close: the run wrote every data page of the row —
+            # write the tail data + parity once, no reads
+            st["full_stripe_rows"] += 1
+            st["deferred_writes"] += k
+            st["child_writes"] += len(data_writes) + 1
+            st["parity_writes"] += 1
+            children = data_writes + [(p_ssd, r, OP_WRITE)]
+            self._clear_open(lba0 + k)
+            return Plan([children], OP_WRITE, stall_track=True), detached
+
+        if continued and run_len >= e_i:
+            # mid-row continuation of a real run: defer parity to the close
+            st["deferred_writes"] += k
+            st["child_writes"] += len(data_writes)
+            self._set_open(lba0 + k, (g, r, e_i))
+            return Plan([data_writes], OP_WRITE,
+                        stall_track=len(data_writes) > 1), detached
+
+        # read-modify-write (2 reads + 2 writes for a 1-page write)
+        st["rmw_ops"] += 1
+        if dropped:
+            # a target page is on the failed member: reconstruct parity from
+            # the untouched data pages (parity absorbs the lost write)
+            reads = [(smap.data_member(g, r, i), r, OP_READ)
+                     for i in range(smap.d)
+                     if not (s_i <= i < e_i)
+                     and smap.data_member(g, r, i) != dead]
+        else:
+            reads = [(smap.data_member(g, r, i), r, OP_READ)
+                     for i in range(s_i, e_i)] + [(p_ssd, r, OP_READ)]
+        writes = data_writes + [(p_ssd, r, OP_WRITE)]
+        st["child_reads"] += len(reads)
+        st["child_writes"] += len(writes)
+        st["parity_writes"] += 1
+        phases = [reads, writes] if reads else [writes]
+        return Plan(phases, OP_WRITE,
+                    stall_track=len(writes) > 1), detached
+
+    def _set_open(self, run_key: int, open_row) -> None:
+        state = self._runs.get(run_key)
+        if state is not None:
+            state[1] = open_row
+
+    def _clear_open(self, run_key: int) -> None:
+        state = self._runs.get(run_key)
+        if state is not None:
+            state[1] = None
+
+    # -- entry ---------------------------------------------------------------
+    def plan(self, op: Op):
+        kind = op.op_kind()
+        if kind == OP_REBUILD:
+            return self._plan_rebuild(op.lba), None
+        g, r, s_i, e_i = self._segment(op.lba)
+        if kind == OP_READ:
+            return self._plan_read(g, r, s_i, e_i), None
+        return self._plan_write(op.lba, g, r, s_i, e_i, kind == OP_TRIM)
+
+    def flush(self) -> list[Plan]:
+        """Close every still-open deferred row (end-of-run bookkeeping; the
+        XOR property test uses this to reach a parity-consistent state)."""
+        out = []
+        for _, state in self._runs.items():
+            if state[1] is not None:
+                out.append(self._catchup_plan(state[1]))
+                state[1] = None
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Layout specs (frozen, hashable, picklable — safe for prefill-cache keys and
+# for shipping to sharded worker processes)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Layout:
+    """Base spec. ``trivial`` layouts keep ``ArraySim``'s fast path.
+
+    ``trivial``/``parity``/``rebuild`` are plain class attributes (not
+    dataclass fields) so subclasses may shadow them with real fields."""
+
+    trivial = False
+    parity = False
+    rebuild = False
+
+    def data_members(self, n: int) -> int:
+        raise NotImplementedError
+
+    def shard_unit(self, n: int) -> int:
+        """SSDs per indivisible stripe group (shard sizes must be multiples
+        of this so a stripe group never spans shards)."""
+        return 1
+
+    def make_planner(self, n: int, rows: int):
+        raise NotImplementedError
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__.replace("Layout", "").lower()
+
+
+@dataclass(frozen=True)
+class JBODLayout(Layout):
+    """Independent 1-page LBAs round-robined across SSDs — the historical
+    ``ArraySim`` behavior. ``ArraySim`` recognizes it and keeps the
+    byte-identical fast path (PR 2 goldens)."""
+
+    trivial = True
+
+    def data_members(self, n: int) -> int:
+        return n
+
+    def make_planner(self, n: int, rows: int):
+        raise RuntimeError("JBOD runs on the ArraySim fast path; no planner")
+
+
+@dataclass(frozen=True)
+class Raid0Layout(Layout):
+    """Page-interleaved striping, no parity. ``stripe_width`` pages per
+    logical op (clamped to the group's data width); ``group`` SSDs per
+    independent stripe group (default: the whole array)."""
+
+    stripe_width: int = 4
+    group: int | None = None
+
+    def _group(self, n: int) -> int:
+        return self.group or n
+
+    def data_members(self, n: int) -> int:
+        return StripeMap(n, self._group(n), parity=False).data_members()
+
+    def shard_unit(self, n: int) -> int:
+        return self._group(n)
+
+    def make_planner(self, n: int, rows: int) -> _Raid0Planner:
+        smap = StripeMap(n, self._group(n), parity=False)
+        return _Raid0Planner(smap, rows, self.stripe_width, degraded=0)
+
+
+@dataclass(frozen=True)
+class Raid5Layout(Layout):
+    """Rotating-parity striping. ``group`` SSDs per RAID set (``group - 1``
+    data + 1 rotating parity per row; default: the whole array).
+    ``degraded=1`` fails the last member of every group; ``rebuild=True``
+    (with ``degraded``) adds the background rebuild tenant, whose closed-loop
+    window is ``rebuild_window`` rows."""
+
+    stripe_width: int = 1
+    group: int | None = None
+    degraded: int = 0
+    rebuild: bool = False
+    rebuild_window: int = 4
+
+    parity = True
+
+    def _group(self, n: int) -> int:
+        return self.group or n
+
+    def data_members(self, n: int) -> int:
+        return StripeMap(n, self._group(n), parity=True).data_members()
+
+    def shard_unit(self, n: int) -> int:
+        return self._group(n)
+
+    def make_planner(self, n: int, rows: int) -> _Raid5Planner:
+        smap = StripeMap(n, self._group(n), parity=True)
+        return _Raid5Planner(smap, rows, self.stripe_width, self.degraded,
+                             self.rebuild)
+
+
+def layout_from_name(name: str, **kw) -> Layout:
+    """Benchmark/CLI convenience: ``"jbod" | "raid0" | "raid5"``."""
+    table = {"jbod": JBODLayout, "raid0": Raid0Layout, "raid5": Raid5Layout}
+    try:
+        return table[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown layout {name!r} "
+                         f"(expected one of {sorted(table)})") from None

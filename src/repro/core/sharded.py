@@ -23,6 +23,14 @@ approximation is exact in distribution, for paper-style sweeps. Results are
 deterministic for a fixed ``(seed, n_shards)`` but differ numerically from
 the unsharded ``ArraySim`` (different RNG streams).
 
+Array layouts (``core/raid.py``): a striped layout couples the SSDs of one
+stripe group, so the partition is **stripe-group-aware** — shard sizes are
+multiples of ``layout.shard_unit`` (the group size) and a stripe group never
+spans shards. Each shard then simulates whole, independent RAID groups, which
+keeps serial == sharded bit-identical exactly as for JBOD. A grouped layout
+is required to shard at all (``group=None`` couples the whole array into one
+stripe set, forcing a single shard).
+
 The worker pool persists across ``run()`` calls (module-level), so the
 per-worker prefill snapshot cache (``gc_sim._PREFILL_CACHE``) keeps paying
 off across the points of a sweep.
@@ -78,13 +86,13 @@ def _shard_workload(wl: Workload, sz: int, n_ssds: int) -> Workload:
     )
 
 
-def _run_shard(args) -> tuple[ArrayResults, np.ndarray]:
+def _run_shard(args):
     (sz, ssd, occupancy, wl, seed, measure_ops, warmup_ops,
-     prefill_cache) = args
+     prefill_cache, layout) = args
     sim = ArraySim(sz, ssd, occupancy, wl, seed=seed,
-                   prefill_cache=prefill_cache)
+                   prefill_cache=prefill_cache, layout=layout)
     res = sim.run(measure_ops, warmup_ops)
-    return res, sim.last_latency
+    return res, sim.last_latency, sim.last_stall
 
 
 def pool_samples(samples: list[np.ndarray | None]) -> np.ndarray:
@@ -93,23 +101,36 @@ def pool_samples(samples: list[np.ndarray | None]) -> np.ndarray:
     return np.concatenate(live) if live else np.empty(0)
 
 
-def merge_results(parts: list[ArrayResults],
-                  pooled: np.ndarray) -> ArrayResults:
-    """Merge per-shard results: rates add, per-SSD arrays concatenate,
-    percentiles are exact over the pooled latency samples
-    (``pool_samples``)."""
+def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
+                  stall_pooled: np.ndarray | None = None) -> ArrayResults:
+    """Merge per-shard results: rates and layout counters add, per-SSD
+    arrays concatenate, write-amplification ratios are recomputed from the
+    pooled counters (never averaged), and latency / stripe-stall percentiles
+    are exact over the pooled raw samples (``pool_samples``)."""
     if pooled.size:
         p50, p95, p99 = np.percentile(pooled, [50.0, 95.0, 99.0])
         summ = LatencySummary(mean=float(pooled.mean()), p50=float(p50),
                               p95=float(p95), p99=float(p99), n=pooled.size)
     else:
         summ = LatencySummary.empty()
+    if stall_pooled is not None and stall_pooled.size:
+        stall_mean = float(stall_pooled.mean())
+        stall_p99 = float(np.percentile(stall_pooled, 99.0))
+    else:
+        stall_mean = stall_p99 = 0.0
+    util = np.concatenate([p.util for p in parts])
+    logical_writes = sum(p.logical_writes for p in parts)
+    child_writes = sum(p.child_writes for p in parts)
+    ftl_writes = sum(p.ftl_writes for p in parts)
+    ftl_gc_copies = sum(p.ftl_gc_copies for p in parts)
+    parity_wa = child_writes / logical_writes if logical_writes else 1.0
+    gc_wa = (ftl_writes + ftl_gc_copies) / ftl_writes if ftl_writes else 1.0
     return ArrayResults(
         iops=float(sum(p.iops for p in parts)),
         per_ssd_iops=np.concatenate([p.per_ssd_iops for p in parts]),
         read_iops=float(sum(p.read_iops for p in parts)),
         write_iops=float(sum(p.write_iops for p in parts)),
-        util=np.concatenate([p.util for p in parts]),
+        util=util,
         sim_time=max(p.sim_time for p in parts),
         gc_pause_frac=np.concatenate([p.gc_pause_frac for p in parts]),
         mean_latency=summ.mean,
@@ -118,6 +139,24 @@ def merge_results(parts: list[ArrayResults],
         p99_latency=summ.p99,
         events=sum(p.events for p in parts),
         wall_s=max(p.wall_s for p in parts),
+        layout=parts[0].layout if parts else "jbod",
+        parity_wa=parity_wa,
+        gc_wa=gc_wa,
+        array_wa=parity_wa * gc_wa,
+        stripe_stall_mean=stall_mean,
+        stripe_stall_p99=stall_p99,
+        util_spread=float(util.max() - util.min()) if util.size else 0.0,
+        logical_writes=logical_writes,
+        child_writes=child_writes,
+        child_reads=sum(p.child_reads for p in parts),
+        parity_writes=sum(p.parity_writes for p in parts),
+        full_stripe_rows=sum(p.full_stripe_rows for p in parts),
+        rmw_ops=sum(p.rmw_ops for p in parts),
+        degraded_reads=sum(p.degraded_reads for p in parts),
+        rebuild_rows=sum(p.rebuild_rows for p in parts),
+        trims=sum(p.trims for p in parts),
+        ftl_writes=ftl_writes,
+        ftl_gc_copies=ftl_gc_copies,
     )
 
 
@@ -163,17 +202,29 @@ class ShardedArraySim:
     results. Drop-in for sweep drivers: same constructor shape as
     ``ArraySim`` plus sharding knobs, same ``run() -> ArrayResults``.
 
-    ``n_shards=None`` uses ``min(cpu_count, n_ssds)``. ``parallel=False``
+    ``n_shards=None`` uses ``min(cpu_count, shard units)``. ``parallel=False``
     runs the same shard decomposition serially in-process (identical
     results — used to test the merge path and as the fallback where
-    multiprocessing is unavailable)."""
+    multiprocessing is unavailable).
+
+    With a striped ``layout`` the partition is stripe-group-aware: shard
+    sizes are multiples of the layout's group size, so a stripe group never
+    spans shards and each shard simulates whole independent RAID groups."""
 
     def __init__(self, n_ssds: int, ssd: SSDParams = SSDParams(),
                  occupancy: float = 0.6, workload: Workload = Workload(),
                  seed: int = 0, n_shards: int | None = None,
-                 parallel: bool = True, prefill_cache: bool = True):
+                 parallel: bool = True, prefill_cache: bool = True,
+                 layout=None):
+        from .raid import JBODLayout
+        self.layout = layout if layout is not None else JBODLayout()
+        unit = self.layout.shard_unit(n_ssds)   # SSDs per stripe group
+        if n_ssds % unit:
+            raise ValueError(f"n_ssds={n_ssds} not a multiple of the "
+                             f"layout's stripe group ({unit})")
+        units = n_ssds // unit
         if n_shards is None:
-            n_shards = min(os.cpu_count() or 1, n_ssds)
+            n_shards = min(os.cpu_count() or 1, units)
         self.n = n_ssds
         self.p = ssd
         self.wl = workload
@@ -181,8 +232,10 @@ class ShardedArraySim:
         self.seed = seed
         self.parallel = parallel
         self.prefill_cache = prefill_cache
-        self.sizes = shard_sizes(n_ssds, n_shards)
+        # partition whole stripe groups, then scale back to SSD counts
+        self.sizes = [u * unit for u in shard_sizes(units, n_shards)]
         self.last_latency: np.ndarray | None = None
+        self.last_stall: np.ndarray | None = None
         self.last_wall_s = 0.0       # observed wall clock of the last run()
 
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
@@ -195,7 +248,7 @@ class ShardedArraySim:
             (sz, self.p, self.occupancy,
              _shard_workload(self.wl, sz, self.n),
              shard_seed(self.seed, k), measures[k], warmups[k],
-             self.prefill_cache)
+             self.prefill_cache, self.layout)
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -208,8 +261,10 @@ class ShardedArraySim:
         else:
             out = [_run_shard(a) for a in args]
         self.last_wall_s = time.perf_counter() - t0
-        parts = [r for r, _ in out]
-        pooled = pool_samples([s for _, s in out])
-        merged = merge_results(parts, pooled)
+        parts = [r for r, _, _ in out]
+        pooled = pool_samples([s for _, s, _ in out])
+        stall_pooled = pool_samples([s for _, _, s in out])
+        merged = merge_results(parts, pooled, stall_pooled)
         self.last_latency = pooled if pooled.size else None
+        self.last_stall = stall_pooled if stall_pooled.size else None
         return merged

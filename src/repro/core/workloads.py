@@ -31,6 +31,15 @@ import numpy as np
 TRACE_READ = 0
 TRACE_WRITE = 1
 
+# op kinds (``Op.kind``). KIND_AUTO derives the kind from ``is_read`` so every
+# pre-existing two-argument ``Op(lba, is_read)`` call site keeps working; only
+# sources that emit the newer command types set an explicit kind.
+KIND_AUTO = -1
+OP_READ = 0
+OP_WRITE = 1
+OP_TRIM = 2      # ATA TRIM / NVMe deallocate: invalidates the LBA in the FTL
+OP_REBUILD = 3   # RAID rebuild unit (one stripe row), planned by core/raid.py
+
 
 def _mix64(x: int) -> int:
     """splitmix64 finalizer — cheap stateless permutation-ish hash."""
@@ -84,12 +93,23 @@ class Op(NamedTuple):
 
     A NamedTuple, not a frozen dataclass: one ``Op`` is built per simulated
     request, and frozen-dataclass ``__init__`` (``object.__setattr__`` per
-    field) costs ~4x a tuple construction on the DES hot path."""
+    field) costs ~4x a tuple construction on the DES hot path.
+
+    ``kind`` defaults to ``KIND_AUTO`` (derive read/write from ``is_read``),
+    so existing callers and sources are untouched; TRIM and rebuild sources
+    set it explicitly. Resolve with ``op_kind``."""
 
     lba: int
     is_read: bool
     at: float = 0.0
     tenant: int = 0
+    kind: int = KIND_AUTO
+
+    def op_kind(self) -> int:
+        k = self.kind
+        if k >= 0:
+            return k
+        return OP_READ if self.is_read else OP_WRITE
 
 
 class OpSource:
@@ -100,16 +120,25 @@ class OpSource:
 
 
 class UniformSource(OpSource):
+    """Uniform random LBAs. ``trim_frac`` turns that fraction of the writes
+    into TRIM commands; at the default 0.0 the extra RNG draw is skipped so
+    the op stream (and every seeded golden) is bit-identical to the
+    pre-TRIM source."""
+
     def __init__(self, n_live: int, rng: np.random.Generator,
-                 read_frac: float = 0.0):
+                 read_frac: float = 0.0, trim_frac: float = 0.0):
         self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+        self.trim_frac = trim_frac
         # bound methods: next_op runs once per simulated request
         self._randint = rng.integers
         self._random = rng.random
 
     def next_op(self, now: float) -> Op:
-        return Op(int(self._randint(self.n_live)),
-                  self._random() < self.read_frac)
+        lba = int(self._randint(self.n_live))
+        is_read = self._random() < self.read_frac
+        if not is_read and self.trim_frac and self._random() < self.trim_frac:
+            return Op(lba, False, kind=OP_TRIM)
+        return Op(lba, is_read)
 
 
 class ZipfSource(OpSource):
@@ -119,14 +148,18 @@ class ZipfSource(OpSource):
 
     def __init__(self, n_live: int, rng: np.random.Generator,
                  read_frac: float = 0.0, s: float = 0.99,
-                 virtual_scale: int = 512):
+                 virtual_scale: int = 512, trim_frac: float = 0.0):
         self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+        self.trim_frac = trim_frac
         self._zipf = ZipfSampler(n_live * virtual_scale, s, rng)
         self._random = rng.random
 
     def next_op(self, now: float) -> Op:
         lba = _mix64(self._zipf.sample()) % self.n_live
-        return Op(lba, self._random() < self.read_frac)
+        is_read = self._random() < self.read_frac
+        if not is_read and self.trim_frac and self._random() < self.trim_frac:
+            return Op(lba, False, kind=OP_TRIM)
+        return Op(lba, is_read)
 
 
 class SequentialSource(OpSource):
@@ -220,13 +253,15 @@ def source_for(wl, n_live: int, rng: np.random.Generator,
     ``safs_sim.SAFSWorkload`` — anything with the scenario attributes)."""
     scenario = getattr(wl, "scenario", "random")
     read_frac = getattr(wl, "read_frac", 0.0)
+    trim_frac = getattr(wl, "trim_frac", 0.0)
 
     def random_base():
         if getattr(wl, "dist", "uniform") == "zipf":
             return ZipfSource(n_live, rng, read_frac,
                               s=getattr(wl, "zipf_s", 0.99),
-                              virtual_scale=getattr(wl, "virtual_scale", 512))
-        return UniformSource(n_live, rng, read_frac)
+                              virtual_scale=getattr(wl, "virtual_scale", 512),
+                              trim_frac=trim_frac)
+        return UniformSource(n_live, rng, read_frac, trim_frac=trim_frac)
 
     if scenario == "random":
         return random_base()

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core.gc_sim import ArraySim, SSDParams, Workload, \
     clear_prefill_cache
+from repro.core.raid import JBODLayout, Raid0Layout, Raid5Layout
 from repro.core.safs_sim import SAFSSim, SAFSWorkload
 
 P = SSDParams(capacity_pages=4096)
@@ -45,6 +46,50 @@ GOLDEN_ARRAY_ZIPF = {
     "writes": 4669,
     "gc_copies": 2029,
     "erases": 106,
+}
+
+# Array-layout goldens (PR 3): recorded from the initial core/raid.py
+# implementation. These pin the layout subsystem's event ordering, planner
+# state machine, and WA accounting — regenerate only for deliberate modeling
+# changes, and say so in the commit.
+GOLDEN_RAID0 = {
+    "iops": 38590.54675913594,
+    "read_iops": 0.0,
+    "write_iops": 38590.54675913594,
+    "sim_time": 0.12956540966386537,
+    "mean_latency": 0.001209042652194209,
+    "p50_latency": 0.0005252100840336116,
+    "p99_latency": 0.005664104808590087,
+    "parity_wa": 1.0,
+    "gc_wa": 1.4088096104841645,
+    "stripe_stall_p99": 0.004973751167133528,
+    "logical_writes": 16556,
+    "child_writes": 16556,
+    "child_reads": 0,
+    "ftl_writes": 16482,
+    "ftl_gc_copies": 6738,
+}
+
+GOLDEN_RAID5 = {
+    # parity_writes == logical_writes + 1: one displaced-run catch-up parity
+    # fires in this window (run-collision handling, reviewed fix)
+    "iops": 58162.314823744746,
+    "read_iops": 17739.50602124215,
+    "write_iops": 40422.80880250259,
+    "sim_time": 0.08596631711017719,
+    "mean_latency": 0.0012298153637955143,
+    "p50_latency": 0.000880765639589165,
+    "p99_latency": 0.006076963702147525,
+    "parity_wa": 2.0002875215641174,
+    "gc_wa": 1.4284678938976663,
+    "stripe_stall_p99": 0.004810863095238094,
+    "logical_writes": 3478,
+    "child_writes": 6957,
+    "child_reads": 8506,
+    "parity_writes": 3479,
+    "rmw_ops": 3463,
+    "ftl_writes": 6899,
+    "ftl_gc_copies": 2956,
 }
 
 GOLDEN_SAFS_UNIFORM = {
@@ -94,6 +139,44 @@ def test_golden_array_zipf_mixed_rw():
     got = _array_counters(sim, r)
     for k, want in GOLDEN_ARRAY_ZIPF.items():
         assert got[k] == want, f"{k}: {got[k]!r} != golden {want!r}"
+
+
+def test_golden_array_jbod_layout_is_the_fast_path():
+    """JBODLayout (the default) must reproduce the PR 2 golden byte-for-byte:
+    the layout subsystem may not perturb the fast path's event ordering, RNG
+    consumption, or float accumulation order."""
+    for layout in (None, JBODLayout()):
+        sim = ArraySim(3, P, 0.6,
+                       Workload(w_total=96, qd_per_ssd=32, n_streams=3),
+                       seed=42, layout=layout)
+        r = sim.run(6000)
+        got = _array_counters(sim, r)
+        for k, want in GOLDEN_ARRAY_UNIFORM.items():
+            if k == "per_ssd":
+                continue
+            assert got[k] == want, f"{k}: {got[k]!r} != golden {want!r}"
+        assert [float(x) for x in r.per_ssd_iops] \
+            == GOLDEN_ARRAY_UNIFORM["per_ssd"]
+        assert r.layout == "jbod"
+
+
+def test_golden_raid0():
+    r = ArraySim(6, P, 0.6,
+                 Workload(w_total=96, qd_per_ssd=32, n_streams=6), seed=42,
+                 layout=Raid0Layout(stripe_width=4, group=6)).run(5000)
+    for k, want in GOLDEN_RAID0.items():
+        got = getattr(r, k)
+        assert got == want, f"{k}: {got!r} != golden {want!r}"
+
+
+def test_golden_raid5():
+    r = ArraySim(6, P, 0.6,
+                 Workload(w_total=96, qd_per_ssd=32, n_streams=6,
+                          read_frac=0.3), seed=7,
+                 layout=Raid5Layout(group=6)).run(5000)
+    for k, want in GOLDEN_RAID5.items():
+        got = getattr(r, k)
+        assert got == want, f"{k}: {got!r} != golden {want!r}"
 
 
 def test_golden_safs_uniform():

@@ -1,0 +1,666 @@
+"""Array layout subsystem (core/raid.py): stripe mapping algebra, the RAID-5
+parity state machine (RMW / full-stripe coalescing / catch-up), degraded
+mode, rebuild traffic, and the end-to-end ArraySim/ShardedArraySim
+integration."""
+import numpy as np
+import pytest
+
+from repro.core.gc_sim import FTL, ArraySim, SSDParams, Workload
+from repro.core.raid import (JBODLayout, Raid0Layout, Raid5Layout,
+                             RebuildSource, StripeMap, layout_from_name)
+from repro.core.sharded import ShardedArraySim
+from repro.core.workloads import (OP_READ, OP_REBUILD, OP_TRIM, OP_WRITE, Op)
+
+SMALL = SSDParams(capacity_pages=4096)
+
+
+# ---------------------------------------------------------------------------
+# StripeMap: pure address algebra
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,group,parity", [
+    (6, 3, True), (18, 6, True), (12, 12, True),
+    (6, 3, False), (18, 6, False), (8, 4, False),
+])
+def test_stripe_map_is_a_bijection(n, group, parity):
+    sm = StripeMap(n, group, parity)
+    seen = set()
+    for l in range(sm.data_members() * 40):
+        ssd, r = sm.locate(l)
+        assert 0 <= ssd < n and r >= 0
+        assert (ssd, r) not in seen          # no two logical pages collide
+        seen.add((ssd, r))
+        g, rr, i = sm.row_of(l)
+        assert sm.logical(g, rr, i) == l     # row_of/logical are inverses
+        assert g * group <= ssd < (g + 1) * group   # stays in its group
+
+
+def test_stripe_map_rows_use_distinct_members():
+    sm = StripeMap(18, 6, parity=True)
+    for g in range(sm.n_groups):
+        for r in range(40):
+            members = [ssd for ssd, _, _ in sm.row_members(g, r)]
+            assert len(set(members)) == 6    # d data + 1 parity, all distinct
+            assert sm.parity_member(g, r) in members
+    # parity rotates over every member of the group
+    assert {sm.parity_member(0, r) % 6 for r in range(6)} == set(range(6))
+
+
+def test_stripe_map_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        StripeMap(10, 6, parity=True)        # group doesn't divide n
+    with pytest.raises(ValueError):
+        StripeMap(4, 2, parity=True)         # RAID-5 needs >= 3 members
+
+
+# ---------------------------------------------------------------------------
+# RAID-5 planner: parity state machine
+# ---------------------------------------------------------------------------
+
+def _planner(n=18, group=6, w=1, degraded=0, rebuild=False, rows=128):
+    return Raid5Layout(stripe_width=w, group=group, degraded=degraded,
+                       rebuild=rebuild).make_planner(n, rows)
+
+
+def test_small_write_is_two_reads_two_writes():
+    pl = _planner()
+    plan, detached = pl.plan(Op(37, False))
+    assert detached is None
+    reads, writes = plan.phases
+    assert len(reads) == 2 and all(k == OP_READ for _, _, k in reads)
+    assert len(writes) == 2 and all(k == OP_WRITE for _, _, k in writes)
+    assert pl.stats["rmw_ops"] == 1 and pl.stats["parity_writes"] == 1
+    # the four children hit exactly two SSDs (data member + parity member)
+    ssds = {s for s, _, _ in reads} | {s for s, _, _ in writes}
+    assert len(ssds) == 2
+
+
+def test_sequential_run_coalesces_into_full_stripes():
+    pl = _planner()
+    d = pl.smap.d
+    for l in range(4 * d):                   # four rows, one page at a time
+        pl.plan(Op(l, False))
+    st = pl.stats
+    assert st["rmw_ops"] == 1                # only the very first write
+    assert st["full_stripe_rows"] == 4
+    # steady state: d data writes + 1 parity per row (plus the one RMW)
+    assert st["parity_writes"] == 4 + 1
+    assert st["child_reads"] == 2            # just the first RMW's reads
+    # long-run parity WA approaches (d+1)/d
+    assert st["child_writes"] / st["logical_writes"] < 1.5
+
+
+def test_full_width_aligned_write_skips_rmw_immediately():
+    pl = _planner(w=5)                       # stripe_width == d
+    plan, _ = pl.plan(Op(0, False))
+    assert len(plan.phases) == 1             # no read phase
+    assert len(plan.phases[0]) == 6          # 5 data + parity
+    assert pl.stats["full_stripe_rows"] == 1 and pl.stats["rmw_ops"] == 0
+
+
+def test_broken_run_gets_catchup_parity_plan():
+    pl = _planner()
+    d = pl.smap.d
+    base = 3 * d                             # row 3: half-write then abandon
+    for l in range(base, base + 2):
+        pl.plan(Op(l, False))
+    # the second write deferred its parity (continued run from row start)
+    assert pl.stats["deferred_writes"] >= 1
+    flushed = pl.flush()
+    assert len(flushed) == 1
+    catchup = flushed[0]
+    assert not catchup.measured
+    # reads the d-2 unwritten data pages, then writes the parity page
+    assert [len(p) for p in catchup.phases] == [d - 2, 1]
+    assert pl.stats["catchup_rows"] == 1
+
+
+def test_eviction_emits_detached_catchup():
+    import repro.core.raid as raid
+    pl = _planner()
+    d = pl.smap.d
+    # open a deferred row with an ascending 2-write run at row 0
+    pl.plan(Op(0, False))
+    pl.plan(Op(1, False))
+    # start > _MAX_RUNS distinct runs elsewhere to evict the first
+    detached_seen = []
+    for j in range(raid._MAX_RUNS + 4):
+        lba = (10 + 2 * j) * d + 2           # never contiguous, never row 0
+        _, det = pl.plan(Op(lba, False))
+        if det:
+            detached_seen.extend(det)
+    assert detached_seen, "evicting an open run must emit catch-up parity"
+    assert all(not p.measured for p in detached_seen)
+
+
+def test_run_collision_preserves_catchup_parity():
+    """Regression: a run keyed at the same next-expected page as an existing
+    run (re-write of the run's last page, converging cursors) used to clobber
+    that run's state, silently dropping its open deferred row — the row's
+    parity was never written."""
+    pl = _planner()
+    pl.plan(Op(0, False))
+    pl.plan(Op(1, False))                    # run keyed at 2, row 0 deferred
+    _, detached = pl.plan(Op(1, False))      # new run collides at key 2
+    assert detached, "displaced run's open row must emit catch-up parity"
+    assert all(not p.measured for p in detached)
+    assert pl.stats["catchup_rows"] == 1
+
+
+def test_degraded_read_reconstructs_from_survivors():
+    pl = _planner(group=6, degraded=1)
+    sm = pl.smap
+    dead = 5                                 # last member of group 0
+    hit = miss = None
+    for l in range(200):
+        ssd, _ = sm.locate(l)
+        g = ssd // 6
+        if g == 0 and ssd == dead and hit is None:
+            hit = l
+        elif g == 0 and ssd != dead and miss is None:
+            miss = l
+        if hit is not None and miss is not None:
+            break
+    # read of a live page: one child
+    plan, _ = pl.plan(Op(miss, True))
+    assert [len(p) for p in plan.phases] == [1]
+    # read of a dead page: all 5 survivors of the row
+    plan, _ = pl.plan(Op(hit, True))
+    assert [len(p) for p in plan.phases] == [5]
+    assert {s for s, _, _ in plan.phases[0]}.isdisjoint({dead})
+    assert pl.stats["degraded_reads"] == 1
+
+
+def test_degraded_write_variants():
+    pl = _planner(group=6, degraded=1)
+    sm = pl.smap
+    dead_local = 5
+    # classify logical pages of group 0 by their row's dead-member role
+    target_dead = parity_dead = normal = None
+    for l in range(400):
+        g, r, i = sm.row_of(l)
+        if g != 0:
+            continue
+        ssd = sm.data_member(g, r, i)
+        dead_ssd = g * 6 + dead_local
+        p_dead = sm.parity_member(g, r) == dead_ssd
+        if ssd == dead_ssd:
+            target_dead = target_dead if target_dead is not None else l
+        elif p_dead:
+            parity_dead = parity_dead if parity_dead is not None else l
+        else:
+            normal = normal if normal is not None else l
+        if None not in (target_dead, parity_dead, normal):
+            break
+    # normal RMW still works when both data target and parity are live
+    plan, _ = pl.plan(Op(normal, False))
+    assert [len(p) for p in plan.phases] == [2, 2]
+    # parity on the dead member: plain data write, no parity upkeep
+    plan, _ = pl.plan(Op(parity_dead, False))
+    assert [len(p) for p in plan.phases] == [1]
+    assert plan.phases[0][0][2] == OP_WRITE
+    # data target on the dead member: reconstruct parity from the d-1
+    # untouched pages, write parity only (the lost write lands in parity)
+    plan, _ = pl.plan(Op(target_dead, False))
+    assert [len(p) for p in plan.phases] == [4, 1]
+    assert plan.phases[1][0][0] == sm.parity_member(*sm.row_of(target_dead)[:2])
+
+
+def test_rebuild_plans_read_survivors_write_spare():
+    pl = _planner(group=6, degraded=1, rebuild=True, rows=64)
+    src = RebuildSource()
+    op = src.next_op(0.0)
+    assert op.kind == OP_REBUILD
+    plan, det = pl.plan(op)
+    assert det is None and not plan.measured
+    reads, writes = plan.phases
+    assert len(reads) == 5 and len(writes) == 1
+    dead = {5, 11, 17}
+    assert {s for s, _, _ in reads}.isdisjoint(dead)
+    assert writes[0][0] in dead and writes[0][2] == OP_WRITE
+    # the counter walks every group and wraps rows
+    targets = set()
+    for _ in range(3 * 64 * 3):
+        p, _ = pl.plan(src.next_op(0.0))
+        targets.add(p.phases[1][0][0])
+    assert targets == dead
+
+
+def test_trim_plan_invalidates_without_parity():
+    pl = _planner()
+    plan, _ = pl.plan(Op(7, False, kind=OP_TRIM))
+    assert [len(p) for p in plan.phases] == [1]
+    assert plan.phases[0][0][2] == OP_TRIM
+    assert pl.stats["trims"] == 1 and pl.stats["parity_writes"] == 0
+
+
+def test_layout_spec_validation():
+    Raid0Layout(group=6).make_planner(18, 64)       # valid shape
+    with pytest.raises(ValueError):
+        # degraded RAID-0 is data loss, not a scenario
+        from repro.core.raid import _Raid0Planner
+        from repro.core.raid import StripeMap as SM
+        _Raid0Planner(SM(18, 6, False), 64, 4, degraded=1)
+    with pytest.raises(ValueError):
+        Raid5Layout(group=7).make_planner(18, 64)   # 7 doesn't divide 18
+    with pytest.raises(ValueError):
+        layout_from_name("raid6")
+    with pytest.raises(TypeError):
+        ArraySim(6, SMALL, 0.6, layout="raid5")     # spec object required
+    assert isinstance(layout_from_name("raid5", group=6), Raid5Layout)
+
+
+# ---------------------------------------------------------------------------
+# XOR reconstruction property (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _apply_writes_with_shadow(pl, script, ftls=None, ftl_params=None):
+    """Drive the planner with a write/trim script, maintaining a shadow
+    value store with XOR parity exactly as the emitted plans dictate, and
+    optionally pushing every member page write through real FTLs with GC
+    interleaved. Returns (data shadow {lba: value}, member shadow
+    {(ssd, mlba): value})."""
+    sm = pl.smap
+    data: dict[int, int] = {}
+    member: dict[tuple[int, int], int] = {}
+
+    def member_write(ssd, mlba):
+        if ftls is not None:
+            ftl = ftls[ssd]
+            ftl.user_write(mlba)
+            while ftl.need_gc() and not ftl.gc_satisfied():
+                ftl.gc_reclaim_one()
+
+    def apply_plan(plan, targets):
+        # member values before this plan's writes (for the RMW delta)
+        old_vals = {loc: member.get(loc, 0) for loc in targets}
+        reads = {(ssd, mlba) for phase in plan.phases[:-1]
+                 for ssd, mlba, kind in phase if kind == OP_READ}
+        for phase in plan.phases:
+            for ssd, mlba, kind in phase:
+                if kind == OP_TRIM:
+                    if ftls is not None:
+                        ftls[ssd].trim(mlba)
+                    continue
+                if kind != OP_WRITE:
+                    continue
+                member_write(ssd, mlba)
+                if (ssd, mlba) in targets:
+                    member[(ssd, mlba)] = targets[(ssd, mlba)]
+                elif (ssd, mlba) in reads:
+                    # RMW: delta against the STORED parity, exactly as the
+                    # controller computes it — if a deferred parity write
+                    # was ever silently dropped, the staleness propagates
+                    # and the reconstruction check below fails
+                    acc = member.get((ssd, mlba), 0)
+                    for loc, newv in targets.items():
+                        acc ^= old_vals[loc] ^ newv
+                    member[(ssd, mlba)] = acc
+                else:
+                    # full-stripe close / catch-up: recompute from the data
+                    # (the controller holds the run's partial parity and
+                    # reads the rest — same resulting value)
+                    g = ssd // sm.group
+                    acc = 0
+                    for i in range(sm.d):
+                        acc ^= data.get(sm.logical(g, mlba, i), 0)
+                    member[(ssd, mlba)] = acc
+
+    for lba, value, trim in script:
+        if trim:
+            plan, detached = pl.plan(Op(lba, False, kind=OP_TRIM))
+            # trim drops the data (parity intentionally not updated)
+            apply_plan(plan, {})
+            for d in detached or ():
+                apply_plan(d, {})
+            data.pop(lba, None)
+            member.pop(sm.locate(lba), None)
+            continue
+        plan, detached = pl.plan(Op(lba, False))
+        for d in detached or ():
+            apply_plan(d, {})            # catch-up parity BEFORE the new op
+        data[lba] = value
+        apply_plan(plan, {sm.locate(lba): value})
+    for d in pl.flush():
+        apply_plan(d, {})
+    return data, member
+
+
+_XOR_N, _XOR_GROUP, _XOR_ROWS = 6, 3, 64
+_XOR_PARAMS = SSDParams(capacity_pages=512, pages_per_block=16,
+                        gc_low_blocks=3, gc_high_blocks=5)
+_XOR_DATA_PAGES = (_XOR_N // _XOR_GROUP) * (_XOR_GROUP - 1) * _XOR_ROWS
+
+
+def _check_xor_script(script):
+    """After ANY interleaving of writes (random and sequential, any stripe),
+    XOR of the surviving members of every touched row must equal the lost
+    member's page — for every possible lost member — while member FTLs run
+    real GC underneath."""
+    pl = Raid5Layout(group=_XOR_GROUP).make_planner(_XOR_N, _XOR_ROWS)
+    sm = pl.smap
+    rng = np.random.default_rng(0)
+    ftls = [FTL(_XOR_PARAMS, rng) for _ in range(_XOR_N)]
+    for f in ftls:
+        f.prefill(_XOR_ROWS / _XOR_PARAMS.capacity_pages, churn=False)
+    data, member = _apply_writes_with_shadow(pl, script, ftls=ftls)
+    # every written member page still resolves through its FTL after GC
+    for (ssd, mlba) in member:
+        assert ftls[ssd].lba_loc[mlba] >= 0
+    # reconstruction: for every touched row and every lost member,
+    # XOR of the survivors equals the lost page
+    touched = {sm.row_of(l)[:2] for l in data}
+    for g, r in touched:
+        if any(t and sm.row_of(l)[:2] == (g, r) for l, _, t in script):
+            continue                      # parity is stale by design on TRIM
+        vals = {}
+        for ssd, mlba, is_par in sm.row_members(g, r):
+            if is_par:
+                vals[ssd] = member.get((ssd, mlba), 0)
+            else:
+                # data value by logical address (0 if never written)
+                loc_i = next(i for i in range(sm.d)
+                             if sm.data_member(g, r, i) == ssd)
+                vals[ssd] = data.get(sm.logical(g, r, loc_i), 0)
+        total = 0
+        for v in vals.values():
+            total ^= v
+        assert total == 0, f"row {(g, r)} parity inconsistent"
+        for lost, v in vals.items():
+            acc = 0
+            for o, ov in vals.items():
+                if o != lost:
+                    acc ^= ov
+            assert acc == v
+
+
+def test_xor_reconstruction_deterministic():
+    """Fixed scripts covering the planner's branch space: pure sequential
+    (full-stripe closes), pure random (RMW), broken runs mid-row
+    (flush/catch-up parity), trims, and a heavy mixed churn."""
+    rng = np.random.default_rng(3)
+    d = _XOR_GROUP - 1
+    scripts = [
+        [(l, l + 1, False) for l in range(8 * d)],           # sequential
+        [(0, 5, False), (1, 6, False), (2 * d + 1, 9, False)],  # broken run
+        [(int(rng.integers(_XOR_DATA_PAGES)),
+          int(rng.integers(1, 2**30)),
+          bool(rng.random() < 0.15)) for _ in range(200)],   # random + trim
+        [(l % _XOR_DATA_PAGES, l * 7 + 1, False)
+         for l in range(300)],                               # wrapping seq
+        [(0, 3, False), (1, 4, False), (1, 5, False),        # run collision:
+         (2, 6, False), (7, 8, False)],                      # rewrite of the
+                                                             # run's last page
+    ]
+    for script in scripts:
+        _check_xor_script(script)
+
+
+def test_xor_reconstruction_property():
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    script_st = st.lists(
+        st.tuples(st.integers(0, _XOR_DATA_PAGES - 1),
+                  st.integers(1, 2**30),
+                  st.booleans()),
+        min_size=1, max_size=120)
+
+    @settings(max_examples=20, deadline=None)
+    @given(script=script_st)
+    def check(script):
+        _check_xor_script(script)
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: ArraySim / ShardedArraySim integration
+# ---------------------------------------------------------------------------
+
+def test_raid5_small_writes_have_parity_wa_two():
+    r = ArraySim(6, SMALL, 0.6, Workload(w_total=96, qd_per_ssd=64,
+                                         n_streams=6), seed=1,
+                 layout=Raid5Layout(group=6)).run(4000)
+    assert r.layout == "raid5"
+    assert r.parity_wa == pytest.approx(2.0, abs=0.05)
+    assert r.array_wa == pytest.approx(r.parity_wa * r.gc_wa)
+    assert r.rmw_ops > 0 and r.full_stripe_rows == 0
+    assert r.stripe_stall_p99 > 0.0
+    assert r.p50_latency <= r.p95_latency <= r.p99_latency
+
+
+def test_raid5_sequential_coalescing_lowers_parity_wa():
+    uni = ArraySim(6, SMALL, 0.6, Workload(w_total=96, qd_per_ssd=64,
+                                           n_streams=6), seed=1,
+                   layout=Raid5Layout(group=6)).run(4000)
+    seq = ArraySim(6, SMALL, 0.6, Workload(w_total=96, qd_per_ssd=64,
+                                           n_streams=6, scenario="sequential",
+                                           seq_streams=4), seed=1,
+                   layout=Raid5Layout(group=6)).run(4000)
+    assert seq.full_stripe_rows > 0
+    assert seq.parity_wa < uni.parity_wa * 0.75
+    # (d+1)/d = 1.2 for group=6 plus first-row RMW noise
+    assert seq.parity_wa == pytest.approx(1.2, abs=0.1)
+
+
+def test_raid0_fans_out_and_tracks_stall():
+    r = ArraySim(6, SMALL, 0.6, Workload(w_total=96, qd_per_ssd=64,
+                                         n_streams=6), seed=1,
+                 layout=Raid0Layout(stripe_width=4, group=6)).run(4000)
+    assert r.layout == "raid0"
+    assert r.parity_wa == 1.0                # no parity
+    assert r.stripe_stall_p99 > 0.0          # but stripes still synchronize
+    assert r.iops > 0
+
+
+def test_degraded_raid5_runs_and_reconstructs():
+    # pure reads: the degraded comparison is strictly directional there
+    # (reconstruction fans 1 read into 5; degraded WRITES can actually get
+    # cheaper — parity-dead rows skip the RMW — so a mixed workload is not)
+    wl = Workload(w_total=96, qd_per_ssd=64, n_streams=6, read_frac=1.0)
+    healthy = ArraySim(6, SMALL, 0.6, wl, seed=1,
+                       layout=Raid5Layout(group=6)).run(4000)
+    degraded = ArraySim(6, SMALL, 0.6, wl, seed=1,
+                        layout=Raid5Layout(group=6, degraded=1)).run(4000)
+    assert degraded.degraded_reads > 0
+    assert degraded.iops < healthy.iops      # reconstruction costs throughput
+    # a mixed workload still reconstructs
+    mixed = ArraySim(6, SMALL, 0.6,
+                     Workload(w_total=96, qd_per_ssd=64, n_streams=6,
+                              read_frac=0.5), seed=1,
+                     layout=Raid5Layout(group=6, degraded=1)).run(4000)
+    assert mixed.degraded_reads > 0
+
+
+def test_rebuild_traffic_competes_with_foreground():
+    wl = Workload(w_total=96, qd_per_ssd=64, n_streams=6, read_frac=0.5)
+    base = ArraySim(6, SMALL, 0.6, wl, seed=1,
+                    layout=Raid5Layout(group=6, degraded=1)).run(4000)
+    reb = ArraySim(6, SMALL, 0.6, wl, seed=1,
+                   layout=Raid5Layout(group=6, degraded=1,
+                                      rebuild=True)).run(4000)
+    assert reb.rebuild_rows > 0
+    # the spare (dead member, index 5) serves rebuild writes — it is idle
+    # without the rebuild tenant
+    assert base.per_ssd_iops[5] == 0.0
+    assert reb.per_ssd_iops[5] > 0.0
+    # rebuild traffic is background load, NOT parity amplification: the
+    # foreground WA split must not move when the rebuild tenant turns on
+    assert reb.parity_wa == pytest.approx(base.parity_wa, rel=0.05)
+
+
+def test_degraded_trim_on_dead_member_does_not_stall():
+    """Regression: a TRIM whose only target page lives on the failed member
+    used to produce an empty plan that never completed, leaking the stream's
+    window slot until every stream stalled and the run returned garbage."""
+    r = ArraySim(6, SMALL, 0.6,
+                 Workload(w_total=48, qd_per_ssd=16, n_streams=6,
+                          trim_frac=0.3), seed=2,
+                 layout=Raid5Layout(group=6, degraded=1)).run(3000)
+    assert r.iops > 0.0
+    assert r.trims > 0
+
+
+def test_layout_run_zero_ops_is_noop():
+    r = ArraySim(6, SMALL, 0.6, Workload(w_total=8, qd_per_ssd=4,
+                                         n_streams=2), seed=0,
+                 layout=Raid5Layout(group=6)).run(0)
+    assert r.events == 0 and r.iops == 0.0
+
+
+def test_layout_runs_are_deterministic():
+    kw = dict(ssd=SMALL, occupancy=0.6,
+              workload=Workload(w_total=96, qd_per_ssd=32, n_streams=6))
+    a = ArraySim(6, seed=11, layout=Raid5Layout(group=6), **kw).run(3000)
+    b = ArraySim(6, seed=11, layout=Raid5Layout(group=6), **kw).run(3000)
+    assert a.iops == b.iops and a.p99_latency == b.p99_latency
+    assert a.stripe_stall_p99 == b.stripe_stall_p99
+    np.testing.assert_array_equal(a.per_ssd_iops, b.per_ssd_iops)
+
+
+def test_sharded_raid5_serial_equals_parallel():
+    """Stripe-group partitioning: the worker-process path must be
+    bit-identical to the same decomposition run in-process."""
+    wl = Workload(w_total=12 * 16, qd_per_ssd=16, n_streams=12)
+    lay = Raid5Layout(group=6)
+    a = ShardedArraySim(12, SMALL, 0.6, wl, seed=5, n_shards=2,
+                        parallel=True, layout=lay).run(6000)
+    b = ShardedArraySim(12, SMALL, 0.6, wl, seed=5, n_shards=2,
+                        parallel=False, layout=lay).run(6000)
+    assert a.iops == b.iops
+    assert a.p99_latency == b.p99_latency
+    assert a.stripe_stall_p99 == b.stripe_stall_p99
+    assert a.parity_wa == b.parity_wa
+    np.testing.assert_array_equal(a.per_ssd_iops, b.per_ssd_iops)
+    np.testing.assert_array_equal(a.gc_pause_frac, b.gc_pause_frac)
+
+
+def test_sharded_respects_stripe_groups():
+    wl = Workload(w_total=64, qd_per_ssd=16, n_streams=4)
+    s = ShardedArraySim(12, SMALL, 0.6, wl, n_shards=5,
+                        layout=Raid5Layout(group=6))
+    assert s.sizes == [6, 6]                 # whole groups only
+    with pytest.raises(ValueError):
+        ShardedArraySim(10, SMALL, 0.6, wl, layout=Raid5Layout(group=6))
+    # ungrouped RAID-5 couples the whole array -> one shard
+    assert ShardedArraySim(6, SMALL, 0.6, wl,
+                           layout=Raid5Layout()).sizes == [6]
+
+
+def test_jbod_layout_pins_pr2_golden():
+    """Passing JBODLayout explicitly must reproduce the PR 2 golden — the
+    fast path is untouched by the layout subsystem."""
+    from tests.test_golden_determinism import GOLDEN_ARRAY_UNIFORM, P
+    r = ArraySim(3, P, 0.6, Workload(w_total=96, qd_per_ssd=32, n_streams=3),
+                 seed=42, layout=JBODLayout()).run(6000)
+    assert r.iops == GOLDEN_ARRAY_UNIFORM["iops"]
+    assert r.p99_latency == GOLDEN_ARRAY_UNIFORM["p99"]
+    assert [float(x) for x in r.per_ssd_iops] == GOLDEN_ARRAY_UNIFORM["per_ssd"]
+    assert r.layout == "jbod" and r.parity_wa == 1.0
+
+
+# ---------------------------------------------------------------------------
+# TRIM groundwork
+# ---------------------------------------------------------------------------
+
+def test_ftl_trim_invalidates_mapping():
+    rng = np.random.default_rng(0)
+    ftl = FTL(SMALL, rng)
+    ftl.prefill(0.5, churn=False)
+    lba = 123
+    loc = ftl.lba_loc[lba]
+    assert loc >= 0
+    before = ftl.valid_count[loc // SMALL.pages_per_block]
+    ftl.trim(lba)
+    assert ftl.lba_loc[lba] == -1
+    assert ftl.page_lba[loc] == -1
+    assert ftl.valid_count[loc // SMALL.pages_per_block] == before - 1
+    assert ftl.trims == 1
+    ftl.trim(lba)                            # idempotent on unmapped LBAs
+    assert ftl.trims == 1
+    ftl.user_write(lba)                      # re-mapping works
+    assert ftl.lba_loc[lba] >= 0
+
+
+def test_trim_aware_gc_lowers_write_amplification():
+    """The arXiv:1208.1794 story: trimming invalidates pages before GC can
+    copy them, so GC-WA drops."""
+    was = []
+    for trim in (False, True):
+        rng = np.random.default_rng(1)
+        ftl = FTL(SMALL, rng)
+        ftl.prefill(0.8)
+        for _ in range(20000):
+            lba = int(rng.integers(ftl.live_lbas))
+            if trim and rng.random() < 0.3:
+                ftl.trim(lba)
+            else:
+                ftl.user_write(lba)
+            while ftl.need_gc() and not ftl.gc_satisfied():
+                ftl.gc_reclaim_one()
+        was.append((ftl.writes + ftl.gc_copies) / max(ftl.writes, 1))
+    assert was[1] < was[0]
+
+
+def test_trim_frac_emits_trims_without_perturbing_at_zero():
+    from repro.core.workloads import UniformSource
+    rng_a = np.random.default_rng(7)
+    rng_b = np.random.default_rng(7)
+    plain = UniformSource(1000, rng_a, read_frac=0.3)
+    zero = UniformSource(1000, rng_b, read_frac=0.3, trim_frac=0.0)
+    ops_a = [plain.next_op(0.0) for _ in range(500)]
+    ops_b = [zero.next_op(0.0) for _ in range(500)]
+    assert ops_a == ops_b                    # no extra RNG draw at 0.0
+    src = UniformSource(1000, np.random.default_rng(8), trim_frac=0.25)
+    ops = [src.next_op(0.0) for _ in range(2000)]
+    trims = [o for o in ops if o.kind == OP_TRIM]
+    assert 0.15 < len(trims) / len(ops) < 0.35
+    assert all(o.op_kind() == OP_TRIM and not o.is_read for o in trims)
+
+
+def test_trim_flows_through_array_sim():
+    r = ArraySim(2, SMALL, 0.7,
+                 Workload(w_total=64, qd_per_ssd=32, trim_frac=0.3),
+                 seed=3).run(8000)
+    assert r.trims > 0
+    base = ArraySim(2, SMALL, 0.7,
+                    Workload(w_total=64, qd_per_ssd=32), seed=3).run(8000)
+    assert base.trims == 0
+    assert r.gc_wa < base.gc_wa              # trim-aware GC-WA measurable
+
+
+@pytest.mark.slow
+def test_full_raid_sweep_checks_pass(tmp_path):
+    """Nightly: the full 18-SSD JBOD/RAID-0/RAID-5 sweep (the committed
+    BENCH_raid.json tier) must pass every built-in check — parity WA > 1 on
+    RAID-5 small writes, sequential coalescing lowering it, stripe stall
+    rising under active GC, degraded mode costing throughput."""
+    import json
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = tmp_path / "BENCH_raid.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.raid_sweep", "--out", str(out)],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(out.read_text())
+    assert payload["all_checks_pass"]
+    assert payload["n_ssds"] >= 18 and len(payload["qd_sweep"]) >= 3
+
+
+def test_op_kind_resolution_back_compat():
+    assert Op(5, True).op_kind() == OP_READ
+    assert Op(5, False).op_kind() == OP_WRITE
+    assert Op(5, False, kind=OP_TRIM).op_kind() == OP_TRIM
+    assert Op(5, False).kind == -1           # default stays AUTO
+    # positional construction used across the codebase still works
+    lba, is_read = Op(9, True)[:2]
+    assert (lba, is_read) == (9, True)
