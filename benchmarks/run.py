@@ -20,7 +20,7 @@ def main(argv=None):
     # worker pool can then use the fast 'fork' start method (forking after
     # the multithreaded JAX runtime initializes risks worker deadlock, and
     # the fallback 'spawn' pool is slower to start)
-    from . import perf_bench, raid_sweep, scale_sweep
+    from . import perf_bench, qos_sweep, raid_sweep, scale_sweep
 
     t0 = time.time()
     print("=" * 72)
@@ -33,6 +33,11 @@ def main(argv=None):
     print("SSArray layouts -- JBOD vs RAID-0 vs RAID-5 under active GC")
     print("=" * 72)
     rc |= raid_sweep.main(["--smoke"] if args.fast else [])
+    print()
+    print("=" * 72)
+    print("SSPer-tenant QoS -- weighted shares + SLO protection under GC")
+    print("=" * 72)
+    rc |= qos_sweep.main(["--smoke"] if args.fast else [])
     print()
 
     from . import paper_figs, paper_tables, roofline, serving_bench

@@ -427,11 +427,14 @@ class Workload:
                                      # hotspot.
     # -- scenario layer (core/workloads.py) ---------------------------------
     scenario: str = "random"         # "random" | "sequential" | "bursty" |
-                                     # "mixed" | "trace"
+                                     # "mixed" | "trace" | "delete_burst"
     seq_streams: int = 4             # sequential cursors for "sequential"
     burst_on: float = 2e-3           # ON window seconds for "bursty"
     burst_off: float = 2e-3          # OFF window seconds for "bursty"
     writer_frac: float = 0.5         # writer-tenant share for "mixed"
+    delete_pages: int = 64           # TRIM run length for "delete_burst"
+    delete_every: int = 256          # a burst fires on every delete_every-th
+                                     # op slot ("delete_burst")
 
 
 @dataclass
@@ -466,8 +469,14 @@ class ArrayResults:
     degraded_reads: int = 0          # reads served by reconstruction
     rebuild_rows: int = 0            # rebuild rows completed during run()
     trims: int = 0                   # TRIM invalidations applied (measured)
+    trim_parity_skipped: int = 0     # RAID-5 parity updates skipped on TRIM
+                                     # (modeling gap — see benchmarks/README)
     ftl_writes: int = 0              # measured user page programs (all SSDs)
     ftl_gc_copies: int = 0           # measured GC page copies (all SSDs)
+    # -- per-tenant QoS results (core/qos.py; None when qos is off) ----------
+    tenant_stats: "dict | None" = None   # tenant id -> qos.TenantStats
+    share_error: float = 0.0         # max |achieved - weight| share over
+                                     # tenants (weights-only runs)
 
 
 class SSDServer:
@@ -565,7 +574,8 @@ class ArraySim:
                  seed: int = 0, source: OpSource | None = None,
                  trace: np.ndarray | None = None,
                  prefill_cache: bool = False,
-                 layout: "Layout | None" = None):
+                 layout: "Layout | None" = None,
+                 qos: "QosPolicy | None" = None):
         from .raid import JBODLayout, Layout   # local: raid imports workloads
         self.n = n_ssds
         self.p = ssd
@@ -574,6 +584,20 @@ class ArraySim:
         if not isinstance(self.layout, Layout):
             raise TypeError(f"layout must be a core.raid.Layout, "
                             f"got {type(self.layout).__name__}")
+        self.qos = qos
+        if qos is not None:
+            # under QoS each tenant runs its own closed-loop source built
+            # from its TenantSpec; a caller-supplied source/trace/scenario
+            # would be silently ignored — refuse instead of lying
+            if source is not None or trace is not None:
+                raise ValueError("qos= builds per-tenant sources from the "
+                                 "TenantSpecs; source=/trace= would be "
+                                 "ignored — drop them or drop qos")
+            if workload.scenario != "random":
+                raise ValueError(f"qos= ignores workload.scenario="
+                                 f"{workload.scenario!r}; describe each "
+                                 f"tenant's workload in its TenantSpec")
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         key = (n_ssds, ssd, occupancy, seed) if prefill_cache else None
         snap = _PREFILL_CACHE.get(key) if key is not None else None
@@ -597,9 +621,12 @@ class ArraySim:
                                            trace=trace)
         self.last_latency: np.ndarray | None = None   # samples of last run()
         self.last_stall: np.ndarray | None = None     # stripe-stall samples
+        self.last_tenant_latency: dict[int, np.ndarray] | None = None
 
     # -- main loop -------------------------------------------------------------
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
+        if self.qos is not None:
+            return self._run_qos(measure_ops, warmup_ops)
         if not self.layout.trivial:
             return self._run_layout(measure_ops, warmup_ops)
         n, wl = self.n, self.wl
@@ -780,6 +807,7 @@ class ArraySim:
         summ = mw.latency.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = None
+        self.last_tenant_latency = None
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
@@ -1056,6 +1084,7 @@ class ArraySim:
         stall_summ = stall.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = stall.values()
+        self.last_tenant_latency = None
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
@@ -1092,8 +1121,385 @@ class ArraySim:
             degraded_reads=sd["degraded_reads"],
             rebuild_rows=rebuild_done[0],
             trims=trims,
+            trim_parity_skipped=sd["trim_parity_skipped"],
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
+        )
+
+    # -- QoS admission loop (per-tenant streams; core/qos.py) ----------------
+    def _run_qos(self, measure_ops: int,
+                 warmup_ops: int | None = None) -> ArrayResults:
+        """Run with a :class:`~.qos.QosPolicy` at the host admission point.
+
+        Each tenant is its own greedy closed-loop stream (source built from
+        its ``TenantSpec``); all tenants share the host window ``w_total``,
+        and whenever a window slot frees the ``QosScheduler`` — deficit
+        round robin over tenant classes, gated by token buckets, throttled
+        by the SLO controller — decides whose op is admitted next. Per-SSD
+        host queues, qd-bound parking, NCQ service, and the layout planner
+        machinery are exactly the `_run_layout` discipline (JBOD runs
+        through the trivial pass-through planner here; the ``qos=None``
+        JBOD path keeps the byte-identical fast loop).
+
+        The child-lifecycle helpers (enqueue_child / submit_phase / on_done /
+        try_drain / unpark) are deliberate copies of ``_run_layout``'s — the
+        run loops stay closure-flat on the hot path instead of sharing
+        through injected callbacks. A semantic fix to the child lifecycle in
+        either loop MUST be mirrored in the other; the fill policy and the
+        per-tenant telemetry are the only intended differences."""
+        from .qos import (QosScheduler, build_tenant_stats, tenant_rng_seed,
+                          tenant_source)
+        from .raid import RebuildSource
+        n, wl = self.n, self.wl
+        policy = self.qos
+        layout = self.layout
+        planner = layout.make_planner(n, self.live_per_ssd)
+        if warmup_ops is None:
+            warmup_ops = measure_ops // 2
+        total_ops = warmup_ops + measure_ops
+        loop = EventLoop()
+        qd = wl.qd_per_ssd
+        W = max(1, wl.w_total)
+
+        ids = list(policy.ids)
+        n_t = len(ids)
+        idx_of = {t: i for i, t in enumerate(ids)}
+        sched = QosScheduler(policy)
+        # per-tenant greedy sources on decorrelated RNG streams (the prefill
+        # RNG is untouched, so prefill state matches the qos=None build)
+        srcs: list = [
+            tenant_source(policy.spec(t), self.n_live,
+                          np.random.default_rng(tenant_rng_seed(self.seed, t)))
+            for t in ids
+        ]
+        rebuild_on = bool(getattr(planner, "rebuild", False))
+        n_streams = n_t + (1 if rebuild_on else 0)
+        if rebuild_on:
+            srcs.append(RebuildSource())
+
+        outstanding = [0] * n_streams
+        total_out = [0]              # tenant (non-rebuild) plans in flight
+        pending: list[deque] = [deque() for _ in range(n_streams)]
+        parked = [False] * n_streams
+        sleeping = [False] * n_streams
+        waiters: list[deque] = [deque() for _ in range(n)]
+        host_queues: list[deque] = [deque() for _ in range(n)]
+        ssds = self.ssds
+
+        measured = [0] * n
+        mr = [0, 0]
+        rebuild_done = [0]
+        ftl_snap = [(0, 0, 0)] * n
+        stall = LatencyRecorder()
+        stat_snap = [planner.snapshot()]
+        trec = {t: LatencyRecorder() for t in ids}
+        thr_snap = {t: 0.0 for t in ids}
+
+        def begin_measure():
+            measured[:] = [0] * n
+            mr[0] = mr[1] = 0
+            for ss in ssds:
+                ss.busy_time = 0.0
+                ss.gc_time = 0.0
+            ftl_snap[:] = [(s.ftl.writes, s.ftl.gc_copies, s.ftl.trims)
+                           for s in ssds]
+            stat_snap[0] = planner.snapshot()
+            stall.reset()
+            for r in trec.values():
+                r.reset()
+            now = loop.now
+            for t in ids:
+                thr_snap[t] = sched.throttle_time(t, now)
+
+        mw = MeasurementWindow(loop, warmup_ops, begin_measure,
+                               target=total_ops)
+        note_completion = mw.note_completion
+
+        def make_pull(i: int):
+            hq = host_queues[i]
+            return lambda: hq.popleft() if hq else None
+
+        def make_service_time(i: int):
+            t_read, t_prog = self.p.t_read, self.p.t_prog
+            t_coal, t_trim = self.p.t_coalesce, self.p.t_trim
+
+            def service_time(req):
+                if req[3]:
+                    return t_coal
+                k = req[2]
+                if k == OP_READ:
+                    return t_read
+                return t_trim if k == OP_TRIM else t_prog
+            return service_time
+
+        # child requests are (plan, member_lba, kind, coal)
+        def enqueue_child(plan, ssd_i: int, lba: int, kind: int):
+            coal = False
+            if kind == OP_WRITE:
+                pw = ssds[ssd_i].pending_writes
+                c = pw.get(lba)
+                if c is None:
+                    pw[lba] = 1
+                else:
+                    coal = True
+                    pw[lba] = c + 1
+            req = (plan, lba, kind, coal)
+            hq = host_queues[ssd_i]
+            dev = devices[ssd_i]
+            if hq:
+                hq.append(req)
+                dev.kick()
+            elif not dev.offer(req):
+                hq.append(req)
+
+        def submit_phase(plan):
+            children = plan.phases[plan.phase_i]
+            plan.remaining = len(children)
+            for ssd_i, lba, kind in children:
+                enqueue_child(plan, ssd_i, lba, kind)
+
+        def finish_plan(plan):
+            st = plan.stream
+            tenant_plan = 0 <= st < n_t
+            if st >= 0:
+                outstanding[st] -= 1
+                if tenant_plan:
+                    total_out[0] -= 1
+            if plan.measured:
+                now = loop.now
+                if tenant_plan:
+                    # the SLO controller sees the FULL latency stream
+                    # (warmup included) so throttling reaches steady state
+                    # before the measurement window opens
+                    sched.note_completion(ids[st], now - plan.t_issue, now)
+                if note_completion(plan.t_issue):
+                    if plan.kind == OP_READ:
+                        mr[0] += 1
+                    else:
+                        mr[1] += 1
+                    if tenant_plan:
+                        trec[ids[st]].record(now - plan.t_issue)
+                if plan.stall_track and mw.measuring and plan.t_first >= 0.0:
+                    stall.record(plan.t_last - plan.t_first)
+            elif plan.kind == OP_REBUILD:
+                rebuild_done[0] += 1
+            if tenant_plan:
+                qos_fill()
+            elif st >= 0:
+                rebuild_fill()
+
+        def make_on_done(i: int):
+            s = ssds[i]
+            ftl = s.ftl
+            program = ftl._program
+            pw = s.pending_writes
+            w = waiters[i]
+
+            def on_done(req):
+                plan, lba, kind, coal = req
+                if kind == OP_READ:
+                    s.served_reads += 1
+                elif kind == OP_TRIM:
+                    ftl.trim(lba)
+                    s.served_trims += 1
+                else:
+                    s.served_writes += 1
+                    c = pw[lba] - 1
+                    if c:
+                        pw[lba] = c
+                    else:
+                        del pw[lba]
+                    if not coal:      # inlined ftl.user_write
+                        program(lba)
+                        ftl.writes += 1
+                if mw.measuring:
+                    measured[i] += 1
+                now = loop.now
+                if plan.t_first < 0.0:
+                    plan.t_first = now
+                plan.t_last = now
+                r = plan.remaining - 1
+                plan.remaining = r
+                if r == 0:
+                    nxt = plan.phase_i + 1
+                    if nxt < len(plan.phases):
+                        plan.phase_i = nxt
+                        plan.t_first = -1.0
+                        submit_phase(plan)
+                    else:
+                        finish_plan(plan)
+                if w:
+                    unpark(i)
+            return on_done
+
+        devices = [DeviceModel(loop, ssds[i], make_pull(i),
+                               make_service_time(i), make_on_done(i),
+                               backlog=host_queues[i])
+                   for i in range(n)]
+
+        def try_drain(st: int) -> bool:
+            pend = pending[st]
+            while pend:
+                ssd_i, lba, kind, plan = pend[0]
+                dev = devices[ssd_i]
+                if len(host_queues[ssd_i]) + len(dev.admitted) \
+                        + dev.in_service < qd:
+                    pend.popleft()
+                    enqueue_child(plan, ssd_i, lba, kind)
+                else:
+                    parked[st] = True
+                    waiters[ssd_i].append(st)
+                    return False
+            return True
+
+        def issue_op(st: int, op) -> None:
+            plan, detached = planner.plan(op)
+            if plan is None:
+                return
+            plan.stream = st
+            plan.t_issue = loop.now
+            outstanding[st] += 1
+            if st < n_t:
+                total_out[0] += 1
+            if detached:
+                for d in detached:
+                    d.t_issue = loop.now
+                    submit_phase(d)
+            children = plan.phases[0]
+            plan.remaining = len(children)
+            pend = pending[st]
+            for ch in children:
+                pend.append((ch[0], ch[1], ch[2], plan))
+            try_drain(st)
+
+        def ready(t: int) -> bool:
+            """Tenant can take a window slot right now: not parked on a full
+            device queue, not sleeping on an open-loop arrival, no undrained
+            children (head-of-line)."""
+            i = idx_of[t]
+            return not (parked[i] or sleeping[i] or pending[i])
+
+        rate_wake = [False]
+
+        def rate_fire(_=None):
+            rate_wake[0] = False
+            qos_fill()
+
+        def tenant_wake(args):
+            st, op = args
+            sleeping[st] = False
+            issue_op(st, op)
+            qos_fill()
+
+        def qos_fill():
+            """Fill the shared window: the scheduler picks the next tenant
+            per admission until the window is full or nobody is eligible
+            (every ready tenant rate-blocked -> wake at the next token)."""
+            while total_out[0] < W:
+                now = loop.now
+                t = sched.pick(now, ready)
+                if t is None:
+                    if not rate_wake[0]:
+                        tr = sched.next_release(now, ready)
+                        if tr is not None:
+                            rate_wake[0] = True
+                            loop.call_at(tr, rate_fire)
+                    return
+                st = idx_of[t]
+                op = srcs[st].next_op(now)
+                if op.at > now:
+                    sleeping[st] = True
+                    loop.call_at(op.at, tenant_wake, (st, op))
+                    continue
+                issue_op(st, op)
+
+        def rebuild_fill():
+            st = n_t
+            if parked[st] or pending[st]:
+                return
+            win = max(1, layout.rebuild_window)
+            src = srcs[st]
+            while outstanding[st] < win:
+                issue_op(st, src.next_op(loop.now))
+                if parked[st]:
+                    return
+
+        def unpark(ssd_i: int):
+            w = waiters[ssd_i]
+            hq = host_queues[ssd_i]
+            dev = devices[ssd_i]
+            freed_tenant = False
+            while w and len(hq) + len(dev.admitted) + dev.in_service < qd:
+                st = w.popleft()
+                parked[st] = False
+                if try_drain(st):
+                    if st < n_t:
+                        freed_tenant = True
+                    else:
+                        rebuild_fill()
+            if freed_tenant:
+                qos_fill()
+
+        qos_fill()
+        if rebuild_on:
+            rebuild_fill()
+
+        t_wall = time.perf_counter()
+        events = loop.run() if total_ops > 0 else 0
+        wall_s = time.perf_counter() - t_wall
+
+        span = mw.span
+        summ = mw.latency.summary()
+        stall_summ = stall.summary()
+        self.last_latency = mw.latency.values()
+        self.last_stall = stall.values()
+        self.last_tenant_latency = {t: trec[t].values() for t in ids}
+        measured_arr = np.asarray(measured, dtype=np.int64)
+        util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
+            ssds, ftl_snap, span, self.p.channels)
+        sd = planner.delta(stat_snap[0])
+        parity_wa = sd["child_writes"] / sd["logical_writes"] \
+            if sd["logical_writes"] else 1.0
+        now = loop.now
+        throttle_times = {t: sched.throttle_time(t, now) - thr_snap[t]
+                          for t in ids}
+        tstats, share_error = build_tenant_stats(policy, trec, span,
+                                                 throttle_times)
+        return ArrayResults(
+            iops=float(summ.n / span),
+            per_ssd_iops=measured_arr / span,
+            read_iops=mr[0] / span,
+            write_iops=mr[1] / span,
+            util=util,
+            sim_time=span,
+            gc_pause_frac=np.array([s.gc_time / span for s in ssds]),
+            mean_latency=summ.mean,
+            p50_latency=summ.p50,
+            p95_latency=summ.p95,
+            p99_latency=summ.p99,
+            events=events,
+            wall_s=wall_s,
+            layout=layout.name,
+            parity_wa=parity_wa,
+            gc_wa=gc_wa,
+            array_wa=parity_wa * gc_wa,
+            stripe_stall_mean=stall_summ.mean,
+            stripe_stall_p99=stall_summ.p99,
+            util_spread=float(util.max() - util.min()) if n else 0.0,
+            logical_writes=sd["logical_writes"],
+            child_writes=sd["child_writes"],
+            child_reads=sd["child_reads"],
+            parity_writes=sd["parity_writes"],
+            full_stripe_rows=sd["full_stripe_rows"],
+            rmw_ops=sd["rmw_ops"],
+            degraded_reads=sd["degraded_reads"],
+            rebuild_rows=rebuild_done[0],
+            trims=trims,
+            trim_parity_skipped=sd["trim_parity_skipped"],
+            ftl_writes=ftl_w,
+            ftl_gc_copies=ftl_c,
+            tenant_stats=tstats,
+            share_error=share_error,
         )
 
 

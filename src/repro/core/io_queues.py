@@ -64,6 +64,9 @@ class IORequest:
     is_stale: Optional[Callable[[Any], bool]] = None
     on_complete: Optional[Callable[[Any], None]] = None
     on_discard: Optional[Callable[[Any], None]] = None
+    # tenant class for QoS-aware queues (core/qos.py TenantDualQueue);
+    # ignored by the plain DualQueue discipline
+    tenant: int = 0
 
 
 @dataclass

@@ -1,0 +1,609 @@
+"""Per-tenant QoS subsystem: weighted fair scheduling, SLO throttling, and
+per-tenant telemetry at the host admission point of both simulators.
+
+The paper's headline result (62% more throughput under mixed reads and
+writes while SSDs run active GC) is a multi-tenant story: a latency-
+sensitive reader shares an array with a random writer whose traffic drives
+the GC that hurts the reader's tail. The simulators reproduced the *sharing*
+(``Op.tenant``, the ``DualQueue`` HIGH/LOW split) but not the *isolation* —
+nothing enforced shares or protected a tenant's p99 when a neighbor's writes
+tripped the free-block watermark. This module adds that enforcement:
+
+* :class:`TenantSpec` / :class:`QosPolicy` — frozen, hashable, picklable
+  specs (safe for sharded worker processes): per-tenant weights, optional
+  token-bucket rate caps, optional p99 latency SLOs, and a small closed-loop
+  workload description (``ArraySim`` builds one op source per tenant from
+  it).
+* :class:`QosScheduler` — the admission arbiter: deficit-round-robin over
+  tenant classes (unit op cost, quantum ``policy.quantum * weight *
+  throttle``), gated by per-tenant token buckets, with an embedded
+  :class:`SloController` that measures per-tenant p99 over sliding windows
+  and multiplicatively throttles *unprotected* tenants while any protected
+  tenant's SLO is violated (GC-driven interference is the scenario that
+  trips it).
+* :class:`TenantDualQueue` — the SAFS-side admission point: a drop-in for
+  ``io_queues.DualQueue`` where the HIGH class becomes per-tenant queues
+  arbitrated by the shared scheduler; the flusher's background LOW queue and
+  the reserved-slot rule are unchanged.
+* :class:`TenantStats` + :func:`build_tenant_stats` /
+  :func:`merge_tenant_stats` — the per-tenant results block
+  (``tenant_throughput``, ``tenant_p50/p95/p99``, ``share_error``,
+  ``throttle_time``) built on per-tenant ``LatencyRecorder`` samples;
+  ``ShardedArraySim`` merges them EXACTLY from pooled raw samples (never
+  averaged percentiles).
+
+Everything here is deterministic: the scheduler consumes no RNG, so a fixed
+seed still produces byte-identical runs, and ``qos=None`` leaves every
+existing simulator path untouched (goldens pinned in
+``tests/test_golden_determinism.py`` / ``tests/test_qos.py``).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .engine import LatencyRecorder
+from .io_queues import HIGH, IOStats
+from .workloads import (OpSource, SequentialSource, UniformSource, ZipfSource,
+                        _mix64)
+
+__all__ = [
+    "QosPolicy", "QosScheduler", "SloController", "TenantDualQueue",
+    "TenantSpec", "TenantStats", "build_tenant_stats", "merge_tenant_stats",
+    "tenant_source",
+]
+
+# deep-throttle floor for the effective DRR quantum: keeps every pick() call
+# terminating in a bounded number of rotations (deficit grows by at least
+# this much per visit)
+_MIN_QUANTUM = 1.0 / 64.0
+
+
+# ---------------------------------------------------------------------------
+# Specs (frozen, hashable, picklable)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's QoS contract plus its closed-loop workload description.
+
+    ``weight`` sets the deficit-round-robin share; ``rate_iops`` (optional)
+    adds a hard token-bucket cap with ``burst`` ops of depth; ``slo_p99``
+    (optional) marks the tenant *protected* — when its sliding-window p99
+    exceeds the SLO, every unprotected tenant is throttled until it
+    recovers. The workload fields mirror the ``Workload`` knobs and are used
+    by ``ArraySim`` to build a per-tenant greedy closed-loop ``OpSource``
+    (``tenant_source``); ``SAFSSim`` tags tenants from its own op stream and
+    ignores them."""
+
+    tenant: int
+    weight: float = 1.0
+    rate_iops: Optional[float] = None
+    burst: float = 32.0
+    slo_p99: Optional[float] = None
+    # -- closed-loop workload of this tenant (ArraySim) ----------------------
+    read_frac: float = 0.0
+    dist: str = "uniform"            # "uniform" | "zipf" | "sequential"
+    zipf_s: float = 0.99
+    virtual_scale: int = 512
+    trim_frac: float = 0.0
+
+    @property
+    def protected(self) -> bool:
+        return self.slo_p99 is not None
+
+
+@dataclass(frozen=True)
+class QosPolicy:
+    """Array-wide QoS policy: the tenant set plus scheduler calibration.
+
+    ``quantum`` is the DRR quantum in op-cost units per unit weight (op cost
+    is 1, so any quantum >= 1 gives exact weighted shares at saturation).
+    The SLO controller evaluates every ``slo_check_ops`` completions over a
+    sliding window of the last ``slo_window_ops`` samples per protected
+    tenant (warmup included, so throttling reaches steady state before the
+    measurement window opens); violations halve the unprotected tenants'
+    throttle factor down to ``throttle_min``, and the factor doubles back
+    toward 1.0 only once every protected p99 is below ``throttle_recover *
+    slo_p99``."""
+
+    tenants: tuple[TenantSpec, ...]
+    quantum: float = 16.0
+    slo_window_ops: int = 256
+    slo_check_ops: int = 64
+    slo_min_samples: int = 64
+    throttle_min: float = 1.0 / 16.0
+    throttle_recover: float = 0.7
+
+    def __post_init__(self):
+        if not self.tenants:
+            raise ValueError("QosPolicy needs at least one TenantSpec")
+        ids = [s.tenant for s in self.tenants]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate tenant ids: {ids}")
+        for s in self.tenants:
+            if s.weight <= 0.0:
+                raise ValueError(f"tenant {s.tenant}: weight must be > 0")
+            if s.rate_iops is not None and s.rate_iops <= 0.0:
+                raise ValueError(f"tenant {s.tenant}: rate_iops must be > 0")
+
+    @property
+    def ids(self) -> tuple[int, ...]:
+        return tuple(s.tenant for s in self.tenants)
+
+    def spec(self, tenant: int) -> TenantSpec:
+        for s in self.tenants:
+            if s.tenant == tenant:
+                return s
+        raise KeyError(tenant)
+
+    def weight_share(self, tenant: int) -> float:
+        total = sum(s.weight for s in self.tenants)
+        return self.spec(tenant).weight / total
+
+
+def tenant_source(spec: TenantSpec, n_live: int,
+                  rng: np.random.Generator) -> OpSource:
+    """Greedy closed-loop op source for one tenant (``ArraySim`` QoS mode)."""
+    if spec.dist == "zipf":
+        return ZipfSource(n_live, rng, spec.read_frac, s=spec.zipf_s,
+                          virtual_scale=spec.virtual_scale,
+                          trim_frac=spec.trim_frac)
+    if spec.dist == "sequential":
+        return SequentialSource(n_live, rng, spec.read_frac)
+    if spec.dist == "uniform":
+        return UniformSource(n_live, rng, spec.read_frac,
+                             trim_frac=spec.trim_frac)
+    raise ValueError(f"tenant {spec.tenant}: unknown dist {spec.dist!r}")
+
+
+def tenant_rng_seed(seed: int, tenant: int) -> int:
+    """Decorrelated per-tenant RNG seed (same recipe as shard seeds: mix the
+    base before XORing the id so nearby pairs cannot collide)."""
+    return _mix64(_mix64((seed ^ 0x51EED) & 0xFFFFFFFFFFFFFFFF)
+                  ^ (tenant + 0x71))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler building blocks
+# ---------------------------------------------------------------------------
+
+class TokenBucket:
+    """Classic token bucket with lazy refill (``rate`` ops/s, ``burst`` op
+    depth, one token per admitted op)."""
+
+    __slots__ = ("rate", "burst", "tokens", "t")
+
+    def __init__(self, rate: float, burst: float, now: float = 0.0):
+        self.rate = rate
+        self.burst = max(1.0, burst)
+        self.tokens = self.burst
+        self.t = now
+
+    def _refill(self, now: float) -> None:
+        if now > self.t:
+            self.tokens = min(self.burst, self.tokens + (now - self.t) * self.rate)
+            self.t = now
+
+    def eligible(self, now: float) -> bool:
+        self._refill(now)
+        return self.tokens >= 1.0 - 1e-12
+
+    def take(self, now: float) -> None:
+        self._refill(now)
+        self.tokens -= 1.0
+
+    def next_release(self, now: float) -> float:
+        """Earliest time a full token is available (== ``now`` if already)."""
+        self._refill(now)
+        short = 1.0 - self.tokens
+        return now if short <= 0.0 else now + short / self.rate
+
+
+class DeficitRoundRobin:
+    """Incremental deficit round robin over tenant classes, unit op cost.
+
+    ``pick(eligible)`` returns the next tenant to admit one op (its deficit
+    already charged) or None when no tenant is eligible. A tenant's deficit
+    tops up by ``quantum_of(tenant)`` once per rotation visit; the pointer
+    stays on a tenant while it has deficit and work, so at saturation the
+    admitted-op shares converge to the (throttle-scaled) weight shares.
+    Blocked tenants (parked on a full device queue, rate-capped) are skipped
+    WITHOUT resetting their deficit — they resume with what they had. The
+    deficit is capped at two quanta so a long-blocked tenant cannot bank an
+    unbounded catch-up burst."""
+
+    __slots__ = ("_order", "_idx", "_fresh", "deficit", "_quantum_of")
+
+    def __init__(self, tenants, quantum_of: Callable[[int], float]):
+        self._order = list(tenants)
+        self._idx = 0
+        self._fresh = True
+        self.deficit = {t: 0.0 for t in self._order}
+        self._quantum_of = quantum_of
+
+    def pick(self, eligible: Callable[[int], bool]) -> Optional[int]:
+        order = self._order
+        n = len(order)
+        deficit = self.deficit
+        barren = 0                       # consecutive ineligible visits
+        while True:
+            t = order[self._idx]
+            if eligible(t):
+                barren = 0
+                if self._fresh:
+                    q = self._quantum_of(t)
+                    if q < _MIN_QUANTUM:
+                        q = _MIN_QUANTUM
+                    d = deficit[t] + q
+                    cap = 2.0 * q
+                    if cap < 2.0:
+                        cap = 2.0
+                    deficit[t] = d if d < cap else cap
+                    self._fresh = False
+                if deficit[t] >= 1.0:
+                    deficit[t] -= 1.0
+                    return t
+            else:
+                barren += 1
+                if barren >= n:          # full rotation, nobody eligible
+                    return None
+            self._idx = (self._idx + 1) % n
+            self._fresh = True
+
+
+class SloController:
+    """Sliding-window p99 measurement + multiplicative throttle.
+
+    Each protected tenant keeps a window of its last ``slo_window_ops``
+    completion latencies (warmup included). Every ``slo_check_ops``
+    completions the controller evaluates: if any protected tenant with
+    enough samples exceeds its SLO, every unprotected tenant's throttle
+    factor is halved (floored at ``throttle_min``); once every protected
+    tenant is back under ``throttle_recover * slo_p99`` the factors double
+    back toward 1.0. The factor scales the tenant's effective DRR quantum,
+    shifting admission share away from the over-share tenants while the
+    protected tenant's tail is hurting. ``throttle_time(t, now)`` integrates
+    the simulated seconds tenant ``t`` spent at a factor < 1."""
+
+    __slots__ = ("policy", "throttle", "_win", "_unprot", "_prot", "_n",
+                 "_since", "_acc", "checks", "violations")
+
+    def __init__(self, policy: QosPolicy):
+        self.policy = policy
+        self._prot = [s for s in policy.tenants if s.protected]
+        self._unprot = [s.tenant for s in policy.tenants if not s.protected]
+        self._win = {s.tenant: deque(maxlen=policy.slo_window_ops)
+                     for s in self._prot}
+        self.throttle = {s.tenant: 1.0 for s in policy.tenants}
+        self._n = 0
+        self._since: dict[int, float] = {}   # throttle episode start per tenant
+        self._acc = {s.tenant: 0.0 for s in policy.tenants}
+        self.checks = 0
+        self.violations = 0
+
+    @staticmethod
+    def _p99(win) -> float:
+        a = sorted(win)
+        return a[min(len(a) - 1, int(len(a) * 0.99))]
+
+    def note(self, tenant: int, latency: float, now: float) -> None:
+        w = self._win.get(tenant)
+        if w is not None:
+            w.append(latency)
+        self._n += 1
+        if self._prot and self._n % self.policy.slo_check_ops == 0:
+            self._evaluate(now)
+
+    def _evaluate(self, now: float) -> None:
+        self.checks += 1
+        p = self.policy
+        violated = False
+        all_clear = True
+        for s in self._prot:
+            w = self._win[s.tenant]
+            if len(w) < p.slo_min_samples:
+                all_clear = False
+                continue
+            q99 = self._p99(w)
+            if q99 > s.slo_p99:
+                violated = True
+            if q99 > s.slo_p99 * p.throttle_recover:
+                all_clear = False
+        if violated:
+            self.violations += 1
+            for t in self._unprot:
+                self._set(t, max(p.throttle_min, self.throttle[t] * 0.5), now)
+        elif all_clear:
+            # asymmetric AIMD-style release: halve on violation, +25% on a
+            # clear check — a fast release re-admits the writer before the
+            # protected tail has actually cleared (GC episodes return and
+            # the controller oscillates at ~50% duty cycle)
+            for t in self._unprot:
+                f = self.throttle[t]
+                if f < 1.0:
+                    self._set(t, min(1.0, f * 1.25), now)
+
+    def _set(self, t: int, f: float, now: float) -> None:
+        old = self.throttle[t]
+        if f == old:
+            return
+        if old >= 1.0 > f:
+            self._since[t] = now
+        elif f >= 1.0 > old:
+            self._acc[t] += now - self._since.pop(t)
+        self.throttle[t] = f
+
+    def throttle_time(self, tenant: int, now: float) -> float:
+        acc = self._acc.get(tenant, 0.0)
+        since = self._since.get(tenant)
+        return acc if since is None else acc + (now - since)
+
+
+class QosScheduler:
+    """The admission arbiter both simulators plug in at their host admission
+    point: DRR over tenant classes, gated by per-tenant token buckets,
+    throttled by the embedded :class:`SloController`.
+
+    ``pick(now, ready)`` — ``ready(t)`` says tenant ``t`` could submit one op
+    right now (has work, not parked) — returns the admitted tenant with its
+    deficit charged and rate token consumed, or None. When None is returned
+    because every ready tenant is rate-blocked, ``next_release(now, ready)``
+    gives the earliest wakeup time to re-try (the run loops schedule a kick
+    there, so a rate-capped tenant never stalls forever). Feed every
+    completion to ``note_completion`` so the SLO controller sees the full
+    latency stream (including warmup)."""
+
+    __slots__ = ("policy", "ids", "slo", "drr", "_buckets", "_base_q",
+                 "admitted")
+
+    def __init__(self, policy: QosPolicy, now: float = 0.0):
+        self.policy = policy
+        self.ids = list(policy.ids)
+        self.slo = SloController(policy)
+        self._buckets = {s.tenant: TokenBucket(s.rate_iops, s.burst, now)
+                         for s in policy.tenants if s.rate_iops is not None}
+        self._base_q = {s.tenant: policy.quantum * s.weight
+                       for s in policy.tenants}
+        self.drr = DeficitRoundRobin(self.ids, self._quantum_of)
+        self.admitted = {t: 0 for t in self.ids}
+
+    def _quantum_of(self, t: int) -> float:
+        return self._base_q[t] * self.slo.throttle[t]
+
+    def rate_ok(self, t: int, now: float) -> bool:
+        b = self._buckets.get(t)
+        return b is None or b.eligible(now)
+
+    def pick(self, now: float, ready: Callable[[int], bool]) -> Optional[int]:
+        t = self.drr.pick(lambda x: ready(x) and self.rate_ok(x, now))
+        if t is not None:
+            b = self._buckets.get(t)
+            if b is not None:
+                b.take(now)
+            self.admitted[t] += 1
+        return t
+
+    def next_release(self, now: float,
+                     ready: Callable[[int], bool]) -> Optional[float]:
+        """Earliest future time a ready-but-rate-blocked tenant regains a
+        token (None when no ready tenant is rate-blocked)."""
+        out = None
+        for t, b in self._buckets.items():
+            if ready(t) and not b.eligible(now):
+                r = b.next_release(now)
+                if out is None or r < out:
+                    out = r
+        return out
+
+    def note_completion(self, tenant: int, latency: float, now: float) -> None:
+        self.slo.note(tenant, latency, now)
+
+    def throttle_time(self, tenant: int, now: float) -> float:
+        return self.slo.throttle_time(tenant, now)
+
+    def throttle_of(self, tenant: int) -> float:
+        return self.slo.throttle[tenant]
+
+
+# ---------------------------------------------------------------------------
+# SAFS admission point: per-tenant HIGH classes over the DualQueue discipline
+# ---------------------------------------------------------------------------
+
+class TenantDualQueue:
+    """Drop-in for ``io_queues.DualQueue`` when a :class:`QosPolicy` is
+    active: the HIGH class becomes per-tenant queues arbitrated by the shared
+    :class:`QosScheduler` (demand reads/writebacks are classed by the app
+    tenant that triggered them); the flusher's background LOW queue keeps its
+    single class, its stale-discard-at-dequeue, and the reserved-slot rule.
+
+    Discipline change vs the paper's §3.2 queue: LOW may also issue when
+    every *waiting* HIGH class is rate-blocked (the device is not idled by a
+    tenant's token bucket — background writebacks are exactly the work to do
+    with the spare capacity); ``on_rate_blocked(t_release)`` fires so the
+    simulator can schedule a device kick at the earliest token release."""
+
+    __slots__ = ("loop", "sched", "max_inflight", "reserved", "high", "low",
+                 "inflight_high", "inflight_low", "stats", "refill",
+                 "on_rate_blocked", "_n_high")
+
+    def __init__(self, loop, sched: QosScheduler, max_inflight: int,
+                 reserved: int,
+                 on_rate_blocked: Optional[Callable[[float], None]] = None):
+        self.loop = loop
+        self.sched = sched
+        self.max_inflight = max_inflight
+        self.reserved = reserved
+        self.high: dict[int, deque] = {t: deque() for t in sched.ids}
+        self.low: deque = deque()
+        self.inflight_high = 0
+        self.inflight_low = 0
+        self.stats = IOStats()
+        self.refill: Optional[Callable[[], None]] = None
+        self.on_rate_blocked = on_rate_blocked
+        self._n_high = 0
+
+    def submit(self, req) -> bool:
+        if req.priority == HIGH:
+            q = self.high.get(req.tenant)
+            if q is None:               # tenant outside the policy: class 0
+                q = self.high[self.sched.ids[0]]
+            q.append(req)
+            self._n_high += 1
+        else:
+            self.low.append(req)
+        return True
+
+    def _ready(self, t: int) -> bool:
+        q = self.high.get(t)
+        return bool(q)
+
+    def pop_next(self):
+        """Apply the policy; drops stale low-priority heads (counts them)."""
+        discarded = False
+        sched = self.sched
+        while True:
+            inflight = self.inflight_high + self.inflight_low
+            req = None
+            if self._n_high and inflight < self.max_inflight:
+                now = self.loop.now
+                t = sched.pick(now, self._ready)
+                if t is not None:
+                    req = self.high[t].popleft()
+                    self._n_high -= 1
+                    self.inflight_high += 1
+                    self.stats.issued_high += 1
+                elif self.on_rate_blocked is not None:
+                    tr = sched.next_release(now, self._ready)
+                    if tr is not None:
+                        self.on_rate_blocked(tr)
+            if req is None and self.low \
+                    and inflight < self.max_inflight - self.reserved:
+                r = self.low.popleft()
+                if r.is_stale is not None and r.is_stale(r.payload):
+                    self.stats.discarded_stale += 1
+                    discarded = True
+                    if r.on_discard:
+                        r.on_discard(r.payload)
+                    continue
+                req = r
+                self.inflight_low += 1
+                self.stats.issued_low += 1
+            if discarded and self.refill:
+                self.refill()
+            return req
+
+    def complete(self, req) -> None:
+        if req.priority == HIGH:
+            self.inflight_high -= 1
+        else:
+            self.inflight_low -= 1
+        self.stats.completed += 1
+        if req.on_complete:
+            req.on_complete(req.payload)
+
+
+# ---------------------------------------------------------------------------
+# Per-tenant results block
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TenantStats:
+    """One tenant's measured-window telemetry (the results block the ISSUE's
+    acceptance sweeps gate on). ``share`` is the achieved fraction of all
+    measured completions; ``weight_share`` the configured fraction —
+    ``share_error`` on the parent results is ``max |share - weight_share|``
+    over the tenants (meaningful when weights are the only active control:
+    rate caps and SLO throttling shift shares by design)."""
+
+    tenant: int
+    weight: float
+    ops: int
+    throughput: float                # measured completions / s
+    mean_latency: float
+    p50_latency: float
+    p95_latency: float
+    p99_latency: float
+    share: float
+    weight_share: float
+    throttle_time: float             # sim-seconds spent SLO-throttled
+    slo_p99: Optional[float] = None
+    rate_iops: Optional[float] = None
+
+
+def build_tenant_stats(policy: QosPolicy,
+                       recorders: dict[int, LatencyRecorder], span: float,
+                       throttle_times: dict[int, float],
+                       ) -> tuple[dict[int, TenantStats], float]:
+    """Per-tenant stats from the measurement window's recorders; returns
+    ``(stats_by_tenant, share_error)``."""
+    total = sum(len(r) for r in recorders.values())
+    out: dict[int, TenantStats] = {}
+    share_error = 0.0
+    for s in policy.tenants:
+        rec = recorders[s.tenant]
+        summ = rec.summary()
+        share = summ.n / total if total else 0.0
+        wshare = policy.weight_share(s.tenant)
+        share_error = max(share_error, abs(share - wshare))
+        out[s.tenant] = TenantStats(
+            tenant=s.tenant, weight=s.weight, ops=summ.n,
+            throughput=summ.n / span,
+            mean_latency=summ.mean, p50_latency=summ.p50,
+            p95_latency=summ.p95, p99_latency=summ.p99,
+            share=share, weight_share=wshare,
+            throttle_time=throttle_times.get(s.tenant, 0.0),
+            slo_p99=s.slo_p99, rate_iops=s.rate_iops,
+        )
+    return out, share_error
+
+
+def merge_tenant_stats(policy: QosPolicy,
+                       parts: list[dict[int, TenantStats]],
+                       pooled: dict[int, np.ndarray],
+                       ) -> tuple[dict[int, TenantStats], float]:
+    """Merge per-shard tenant stats: ops and throughput add, percentiles are
+    EXACT over the pooled raw samples, shares are recomputed from the pooled
+    op counts, and ``throttle_time`` takes the worst (max) shard — each shard
+    runs its own SLO controller over its slice of the array."""
+    total = sum(sum(p[t].ops for t in p) for p in parts)
+    out: dict[int, TenantStats] = {}
+    share_error = 0.0
+    for s in policy.tenants:
+        t = s.tenant
+        samples = pooled.get(t)
+        if samples is not None and samples.size:
+            p50, p95, p99 = np.percentile(samples, [50.0, 95.0, 99.0])
+            mean = float(samples.mean())
+        else:
+            p50 = p95 = p99 = mean = 0.0
+        ops = sum(p[t].ops for p in parts if t in p)
+        share = ops / total if total else 0.0
+        wshare = policy.weight_share(t)
+        share_error = max(share_error, abs(share - wshare))
+        out[t] = TenantStats(
+            tenant=t, weight=s.weight, ops=ops,
+            throughput=sum(p[t].throughput for p in parts if t in p),
+            mean_latency=mean, p50_latency=float(p50), p95_latency=float(p95),
+            p99_latency=float(p99), share=share, weight_share=wshare,
+            throttle_time=max((p[t].throttle_time for p in parts if t in p),
+                              default=0.0),
+            slo_p99=s.slo_p99, rate_iops=s.rate_iops,
+        )
+    return out, share_error
+
+
+def pool_tenant_samples(parts: list[Optional[dict[int, np.ndarray]]],
+                        ) -> dict[int, np.ndarray]:
+    """Concatenate per-shard per-tenant latency samples in shard order."""
+    out: dict[int, list[np.ndarray]] = {}
+    for p in parts:
+        if not p:
+            continue
+        for t, a in p.items():
+            if a is not None and a.size:
+                out.setdefault(t, []).append(a)
+    return {t: np.concatenate(chunks) for t, chunks in out.items()}

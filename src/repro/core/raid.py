@@ -179,13 +179,28 @@ def _new_stats() -> dict:
         "catchup_rows": 0,        # broken-run rows finished by catch-up plans
         "degraded_reads": 0,      # reads served by reconstruction
         "trims": 0,               # logical trims planned
+        "trim_parity_skipped": 0, # RAID-5 TRIMs whose parity update was
+                                  # skipped (modeling gap: parity left stale
+                                  # for the trimmed pages; see benchmarks/
+                                  # README.md)
         "rebuild_rows": 0,        # rebuild rows planned
         "rebuild_reads": 0,       # survivor reads issued by the rebuild tenant
         "rebuild_writes": 0,      # spare writes issued by the rebuild tenant
     }
 
 
-class _BasePlanner:
+class _PlannerStats:
+    """Shared per-run stats bookkeeping (the snapshot/delta contract the
+    run loops and sharded merges rely on)."""
+
+    def snapshot(self) -> dict:
+        return dict(self.stats)
+
+    def delta(self, snap: dict) -> dict:
+        return {k: v - snap[k] for k, v in self.stats.items()}
+
+
+class _BasePlanner(_PlannerStats):
     """Shared planner state: stripe map, per-run stats, degraded member."""
 
     def __init__(self, smap: StripeMap, rows: int, stripe_width: int,
@@ -219,11 +234,38 @@ class _BasePlanner:
     def _dead_ssd(self, g: int) -> int:
         return g * self.smap.group + self.dead_local
 
-    def snapshot(self) -> dict:
-        return dict(self.stats)
 
-    def delta(self, snap: dict) -> dict:
-        return {k: v - snap[k] for k, v in self.stats.items()}
+class _JBODPlanner(_PlannerStats):
+    """Trivial pass-through planner: one 1-page child per logical op, using
+    the fast path's round-robin mapping (``ssd = lba % n``, member LBA
+    ``lba // n``). Exists for the QoS admission loop
+    (``ArraySim._run_qos``), where per-tenant arbitration — not striping —
+    is the point; the ``qos=None`` JBOD path keeps the byte-identical fast
+    loop and never builds a planner."""
+
+    rebuild = False
+
+    def __init__(self, n: int):
+        self.n = n
+        self.stats = _new_stats()
+
+    def plan(self, op: Op):
+        kind = op.op_kind()
+        ssd, lba = op.lba % self.n, op.lba // self.n
+        st = self.stats
+        if kind == OP_READ:
+            st["logical_reads"] += 1
+            st["child_reads"] += 1
+        elif kind == OP_TRIM:
+            st["trims"] += 1
+        else:
+            kind = OP_WRITE
+            st["logical_writes"] += 1
+            st["child_writes"] += 1
+        return Plan([[(ssd, lba, kind)]], kind), None
+
+    def flush(self):
+        return []
 
 
 class _Raid0Planner(_BasePlanner):
@@ -388,8 +430,15 @@ class _Raid5Planner(_BasePlanner):
 
         if trim:
             # TRIM invalidates the data pages; parity upkeep is skipped (the
-            # modeled cost of trimming is mapping-table-only on the members)
+            # modeled cost of trimming is mapping-table-only on the members).
+            # The skip is a modeling gap — the row's parity goes stale for
+            # the trimmed pages until the next write re-establishes it — so
+            # it is COUNTED (one skipped update per data page whose row still
+            # has live parity) and surfaced as
+            # ``ArrayResults.trim_parity_skipped``.
             st["trims"] += k
+            if not parity_dead:
+                st["trim_parity_skipped"] += k
             children = [(smap.data_member(g, r, i), r, OP_TRIM)
                         for i in range(s_i, e_i)
                         if smap.data_member(g, r, i) != dead]
@@ -532,8 +581,9 @@ class JBODLayout(Layout):
     def data_members(self, n: int) -> int:
         return n
 
-    def make_planner(self, n: int, rows: int):
-        raise RuntimeError("JBOD runs on the ArraySim fast path; no planner")
+    def make_planner(self, n: int, rows: int) -> _JBODPlanner:
+        # only the QoS loop plans JBOD ops; qos=None keeps the fast path
+        return _JBODPlanner(n)
 
 
 @dataclass(frozen=True)

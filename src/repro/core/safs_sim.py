@@ -216,6 +216,9 @@ class SAFSResults:
     p99_latency: float = 0.0
     events: int = 0                # engine events dispatched during run()
     wall_s: float = 0.0            # host wall-clock seconds of run()
+    # -- per-tenant QoS results (core/qos.py; None when qos is off) ----------
+    tenant_stats: "dict | None" = None   # tenant id -> qos.TenantStats
+    share_error: float = 0.0
 
 
 class _Device:
@@ -237,7 +240,8 @@ class SAFSSim:
                  t_cpu: float = 10e-6, n_cpu: int = 16, seed: int = 0,
                  reserved_slots: int = policies.RESERVED_SLOTS,
                  source: OpSource | None = None,
-                 trace: np.ndarray | None = None):
+                 trace: np.ndarray | None = None,
+                 qos: "QosPolicy | None" = None):
         self.n = n_ssds
         self.p = ssd
         self.wl = workload
@@ -245,11 +249,32 @@ class SAFSSim:
         self.t_cpu, self.n_cpu = t_cpu, n_cpu
         self.use_flusher = use_flusher
         self.loop = EventLoop()
+        self.qos = qos
+
+        if qos is not None:
+            # per-tenant HIGH classes at the DualQueue admission point: one
+            # scheduler (DRR deficits, token buckets, SLO throttle) shared by
+            # every device queue, so fairness is array-wide
+            from .qos import QosScheduler, TenantDualQueue
+            from .engine import LatencyRecorder
+            self.sched = QosScheduler(qos)
+            self._trec = {t: LatencyRecorder() for t in qos.ids}
+            self._thr_snap = {t: 0.0 for t in qos.ids}
+            make_queue = lambda i: TenantDualQueue(
+                self.loop, self.sched, max_inflight=ssd.device_slots,
+                reserved=reserved_slots,
+                on_rate_blocked=self._rate_blocked_for(i))
+        else:
+            self.sched = None
+            self._trec = None
+            self._thr_snap = None
+            make_queue = lambda i: DualQueue(max_inflight=ssd.device_slots,
+                                             reserved=reserved_slots)
+        self._rate_wake = [False] * n_ssds
 
         self.devices = [
             _Device(self.loop, SSDServer(ssd, occupancy, self.rng),
-                    DualQueue(max_inflight=ssd.device_slots,
-                              reserved=reserved_slots),
+                    make_queue(i),
                     self._service_time_for(i), self._on_done_for(i))
             for i in range(n_ssds)
         ]
@@ -293,6 +318,21 @@ class SAFSSim:
         return self._mw.completed if self._mw else 0
 
     # -- device plumbing -----------------------------------------------------
+    def _rate_blocked_for(self, dev_i: int):
+        """Wake callback for a QoS queue whose waiting HIGH classes are all
+        rate-blocked: kick the device again at the earliest token release
+        (guarded so at most one wake is pending per device)."""
+        def on_blocked(t_release: float) -> None:
+            if self._rate_wake[dev_i]:
+                return
+            self._rate_wake[dev_i] = True
+
+            def fire(_=None):
+                self._rate_wake[dev_i] = False
+                self.devices[dev_i].model.kick()
+            self.loop.call_at(t_release, fire)
+        return on_blocked
+
     def _service_time_for(self, dev_i: int):
         def service_time(req: IORequest) -> float:
             s = self.devices[dev_i].server
@@ -394,24 +434,39 @@ class SAFSSim:
         for d in self.devices:
             d.server.busy_time = 0.0
             d.server.gc_time = 0.0
+        if self._trec is not None:
+            now = self.loop.now
+            for t, r in self._trec.items():
+                r.reset()
+                self._thr_snap[t] = self.sched.throttle_time(t, now)
 
-    def _complete_op(self, t_start: float) -> None:
-        self._mw.note_completion(t_start)
+    def _complete_op(self, t_start: float, tenant: int = 0) -> None:
+        measured = self._mw.note_completion(t_start)
+        if self.sched is not None:
+            now = self.loop.now
+            self.sched.note_completion(tenant, now - t_start, now)
+            if measured:
+                rec = self._trec.get(tenant)
+                if rec is not None:
+                    rec.record(now - t_start)
         self._spawn_op()
 
     def _spawn_op(self) -> None:
         op = self.source.next_op(self.loop.now)
         if op.at > self.loop.now:
-            self.loop.call_at(op.at, self._admit_deferred, (op.lba, op.is_read))
+            self.loop.call_at(op.at, self._admit_deferred,
+                              (op.lba, op.is_read, op.tenant))
         else:
-            self._schedule_cpu(self._process_op, (op.lba, op.is_read, self.loop.now))
+            self._schedule_cpu(self._process_op,
+                               (op.lba, op.is_read, self.loop.now, op.tenant))
 
     def _admit_deferred(self, args) -> None:
-        tag, is_read = args
-        self._schedule_cpu(self._process_op, (tag, is_read, self.loop.now))
+        tag, is_read, tenant = args
+        self._schedule_cpu(self._process_op,
+                           (tag, is_read, self.loop.now, tenant))
 
     def _process_op(self, args) -> None:
-        tag, is_read, t0 = args
+        tag, is_read, t0, tenant = args
         s, slot = self.cache.lookup(tag)
         if slot >= 0:
             if not is_read:
@@ -419,7 +474,7 @@ class SAFSSim:
                 self.cache.mark_dirty(s, slot)
                 if not already:
                     self._note_write(s)
-            self._complete_op(t0)
+            self._complete_op(t0, tenant)
             return
         # miss: allocate a frame (clean-first GClock)
         needs_fill = is_read or self.wl.unaligned
@@ -430,25 +485,26 @@ class SAFSSim:
             if not is_read:
                 self.cache.mark_dirty(s, slot)
                 self._note_write(s)
-            self._complete_op(t0)
+            self._complete_op(t0, tenant)
 
         def do_fill(_=None):
             if needs_fill:
                 self._submit(dev, IORequest(
                     payload={"op": "read", "lba": tag // self.n},
-                    priority=HIGH, on_complete=after_fill))
+                    priority=HIGH, on_complete=after_fill, tenant=tenant))
             else:
                 if not is_read:
                     self._note_write(s)
-                self._complete_op(t0)
+                self._complete_op(t0, tenant)
 
         if victim_dirty:
-            # demand writeback: the application op blocks on it (paper §3.3)
+            # demand writeback: the application op blocks on it (paper §3.3),
+            # so it is classed by the tenant whose op triggered the eviction
             self.demand_writes += 1
             vdev = victim_tag % self.n
             self._submit(vdev, IORequest(
                 payload={"op": "write", "lba": victim_tag // self.n},
-                priority=HIGH, on_complete=do_fill))
+                priority=HIGH, on_complete=do_fill, tenant=tenant))
         else:
             do_fill()
 
@@ -468,6 +524,14 @@ class SAFSSim:
         span = mw.span
         b = self._base
         summ = mw.latency.summary()
+        tstats, share_error = None, 0.0
+        if self.qos is not None:
+            from .qos import build_tenant_stats
+            now = self.loop.now
+            throttle_times = {t: self.sched.throttle_time(t, now)
+                              - self._thr_snap[t] for t in self.qos.ids}
+            tstats, share_error = build_tenant_stats(
+                self.qos, self._trec, span, throttle_times)
         return SAFSResults(
             app_iops=summ.n / span,
             hit_rate=(self.cache.hit_count - b["hits"]) /
@@ -488,4 +552,6 @@ class SAFSSim:
             p99_latency=summ.p99,
             events=events,
             wall_s=wall_s,
+            tenant_stats=tstats,
+            share_error=share_error,
         )

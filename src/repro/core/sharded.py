@@ -86,13 +86,28 @@ def _shard_workload(wl: Workload, sz: int, n_ssds: int) -> Workload:
     )
 
 
+def _shard_qos(qos, sz: int, n_ssds: int):
+    """Scale per-tenant token-bucket rate caps to the shard's share of the
+    array. Weights and SLOs are ratios/targets and stay shard-local, but a
+    ``rate_iops`` cap is an ARRAY-WIDE budget: shipping it verbatim would
+    have every shard enforce the full cap and admit up to
+    ``n_shards * rate_iops`` array-wide."""
+    if qos is None or all(s.rate_iops is None for s in qos.tenants):
+        return qos
+    tenants = tuple(
+        replace(s, rate_iops=s.rate_iops * sz / n_ssds)
+        if s.rate_iops is not None else s
+        for s in qos.tenants)
+    return replace(qos, tenants=tenants)
+
+
 def _run_shard(args):
     (sz, ssd, occupancy, wl, seed, measure_ops, warmup_ops,
-     prefill_cache, layout) = args
+     prefill_cache, layout, qos) = args
     sim = ArraySim(sz, ssd, occupancy, wl, seed=seed,
-                   prefill_cache=prefill_cache, layout=layout)
+                   prefill_cache=prefill_cache, layout=layout, qos=qos)
     res = sim.run(measure_ops, warmup_ops)
-    return res, sim.last_latency, sim.last_stall
+    return res, sim.last_latency, sim.last_stall, sim.last_tenant_latency
 
 
 def pool_samples(samples: list[np.ndarray | None]) -> np.ndarray:
@@ -102,11 +117,17 @@ def pool_samples(samples: list[np.ndarray | None]) -> np.ndarray:
 
 
 def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
-                  stall_pooled: np.ndarray | None = None) -> ArrayResults:
+                  stall_pooled: np.ndarray | None = None,
+                  tenant_pooled: "dict[int, np.ndarray] | None" = None,
+                  qos=None) -> ArrayResults:
     """Merge per-shard results: rates and layout counters add, per-SSD
     arrays concatenate, write-amplification ratios are recomputed from the
     pooled counters (never averaged), and latency / stripe-stall percentiles
-    are exact over the pooled raw samples (``pool_samples``)."""
+    are exact over the pooled raw samples (``pool_samples``). With a
+    ``qos`` policy, the per-tenant block merges the same way: tenant ops and
+    throughput add, tenant percentiles are exact over ``tenant_pooled``
+    (``qos.pool_tenant_samples``), shares/share_error are recomputed from
+    the pooled op counts, and ``throttle_time`` reports the worst shard."""
     if pooled.size:
         p50, p95, p99 = np.percentile(pooled, [50.0, 95.0, 99.0])
         summ = LatencySummary(mean=float(pooled.mean()), p50=float(p50),
@@ -125,6 +146,12 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
     ftl_gc_copies = sum(p.ftl_gc_copies for p in parts)
     parity_wa = child_writes / logical_writes if logical_writes else 1.0
     gc_wa = (ftl_writes + ftl_gc_copies) / ftl_writes if ftl_writes else 1.0
+    tstats, share_error = None, 0.0
+    if qos is not None:
+        from .qos import merge_tenant_stats
+        tstats, share_error = merge_tenant_stats(
+            qos, [p.tenant_stats for p in parts if p.tenant_stats],
+            tenant_pooled or {})
     return ArrayResults(
         iops=float(sum(p.iops for p in parts)),
         per_ssd_iops=np.concatenate([p.per_ssd_iops for p in parts]),
@@ -155,8 +182,11 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
         degraded_reads=sum(p.degraded_reads for p in parts),
         rebuild_rows=sum(p.rebuild_rows for p in parts),
         trims=sum(p.trims for p in parts),
+        trim_parity_skipped=sum(p.trim_parity_skipped for p in parts),
         ftl_writes=ftl_writes,
         ftl_gc_copies=ftl_gc_copies,
+        tenant_stats=tstats,
+        share_error=share_error,
     )
 
 
@@ -215,9 +245,12 @@ class ShardedArraySim:
                  occupancy: float = 0.6, workload: Workload = Workload(),
                  seed: int = 0, n_shards: int | None = None,
                  parallel: bool = True, prefill_cache: bool = True,
-                 layout=None):
+                 layout=None, qos=None):
         from .raid import JBODLayout
         self.layout = layout if layout is not None else JBODLayout()
+        self.qos = qos               # QosPolicy | None (frozen — ships to
+                                     # workers; each shard runs its own
+                                     # scheduler over its slice)
         unit = self.layout.shard_unit(n_ssds)   # SSDs per stripe group
         if n_ssds % unit:
             raise ValueError(f"n_ssds={n_ssds} not a multiple of the "
@@ -236,6 +269,7 @@ class ShardedArraySim:
         self.sizes = [u * unit for u in shard_sizes(units, n_shards)]
         self.last_latency: np.ndarray | None = None
         self.last_stall: np.ndarray | None = None
+        self.last_tenant_latency: dict[int, np.ndarray] | None = None
         self.last_wall_s = 0.0       # observed wall clock of the last run()
 
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
@@ -248,7 +282,8 @@ class ShardedArraySim:
             (sz, self.p, self.occupancy,
              _shard_workload(self.wl, sz, self.n),
              shard_seed(self.seed, k), measures[k], warmups[k],
-             self.prefill_cache, self.layout)
+             self.prefill_cache, self.layout,
+             _shard_qos(self.qos, sz, self.n))
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -261,10 +296,16 @@ class ShardedArraySim:
         else:
             out = [_run_shard(a) for a in args]
         self.last_wall_s = time.perf_counter() - t0
-        parts = [r for r, _, _ in out]
-        pooled = pool_samples([s for _, s, _ in out])
-        stall_pooled = pool_samples([s for _, _, s in out])
-        merged = merge_results(parts, pooled, stall_pooled)
+        parts = [r for r, _, _, _ in out]
+        pooled = pool_samples([s for _, s, _, _ in out])
+        stall_pooled = pool_samples([s for _, _, s, _ in out])
+        tenant_pooled = None
+        if self.qos is not None:
+            from .qos import pool_tenant_samples
+            tenant_pooled = pool_tenant_samples([tl for _, _, _, tl in out])
+        merged = merge_results(parts, pooled, stall_pooled, tenant_pooled,
+                               self.qos)
         self.last_latency = pooled if pooled.size else None
         self.last_stall = stall_pooled if stall_pooled.size else None
+        self.last_tenant_latency = tenant_pooled
         return merged

@@ -15,6 +15,8 @@ Scenarios:
   windows ``Op.at`` jumps to the next ON window (open-loop lulls).
 * ``mixed`` — two tenants: a Zipf-hot reader tenant and a random writer
   tenant, mixed by ``writer_frac``.
+* ``delete_burst`` — trim-heavy file-delete bursts: the base op stream with
+  a contiguous run of TRIMs (one unlinked file's extent) every N ops.
 * ``trace`` — replay of a ``(time, lba, op)`` array, looping with a time
   offset when exhausted.
 
@@ -200,6 +202,48 @@ class BurstySource(OpSource):
         return op
 
 
+class DeleteBurstSource(OpSource):
+    """Trim-heavy file-delete bursts around a base source.
+
+    Models a filesystem unlinking files: the op stream is the base source's,
+    but every ``every``-th op slot fires a burst — a contiguous run of
+    ``pages`` TRIMs starting at a ``pages``-aligned random LBA (one deleted
+    file's extent lowered to an LBA-range deallocate) — so consecutive
+    bursts are separated by ``every - 1`` base ops. A run is truncated at
+    the end of the LBA space (the tail extent may be short) rather than
+    wrapped, so every run stays contiguous and aligned. The extra RNG draw
+    (the extent start) happens only when a burst fires, and the scenario is
+    opt-in (``scenario="delete_burst"``) — every other scenario's op stream
+    (and every seeded golden) is untouched."""
+
+    def __init__(self, base: OpSource, n_live: int, rng: np.random.Generator,
+                 pages: int = 64, every: int = 256):
+        assert n_live > 0
+        self.base, self.n_live, self.rng = base, n_live, rng
+        self.pages = max(1, min(pages, n_live))
+        self.every = max(1, every)
+        self._count = 0
+        self._run_left = 0
+        self._run_lba = 0
+
+    def next_op(self, now: float) -> Op:
+        if self._run_left:
+            self._run_left -= 1
+            lba = self._run_lba
+            self._run_lba = lba + 1
+            return Op(lba, False, kind=OP_TRIM)
+        self._count += 1
+        if self._count >= self.every:
+            self._count = 0
+            start = int(self.rng.integers(self.n_live))
+            start -= start % self.pages          # file extents are aligned
+            end = min(start + self.pages, self.n_live)   # short tail extent
+            self._run_left = end - start - 1
+            self._run_lba = start + 1
+            return Op(start, False, kind=OP_TRIM)
+        return self.base.next_op(now)
+
+
 class MixedTenantSource(OpSource):
     """Multi-tenant mix: tenant 0 is a Zipf-hot reader, tenant 1 a random
     writer; each op is drawn from one tenant with probability
@@ -279,6 +323,10 @@ def source_for(wl, n_live: int, rng: np.random.Generator,
         writer = UniformSource(n_live, rng, read_frac=0.0)
         return MixedTenantSource(reader, writer, rng,
                                  writer_frac=getattr(wl, "writer_frac", 0.5))
+    if scenario == "delete_burst":
+        return DeleteBurstSource(random_base(), n_live, rng,
+                                 pages=getattr(wl, "delete_pages", 64),
+                                 every=getattr(wl, "delete_every", 256))
     if scenario == "trace":
         assert trace is not None, "scenario='trace' needs a trace array"
         return TraceSource(trace, n_live)

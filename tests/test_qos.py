@@ -1,0 +1,427 @@
+"""Per-tenant QoS subsystem (core/qos.py): scheduler mechanics, weighted
+fair shares, rate caps, SLO throttling under GC interference, per-tenant
+telemetry, sharded merging, and the qos=None byte-identity guarantee."""
+import numpy as np
+import pytest
+
+from repro.core.engine import EventLoop
+from repro.core.gc_sim import ArraySim, SSDParams, Workload
+from repro.core.io_queues import HIGH, LOW, IORequest
+from repro.core.qos import (DeficitRoundRobin, QosPolicy, QosScheduler,
+                            SloController, TenantDualQueue, TenantSpec,
+                            TokenBucket, build_tenant_stats,
+                            merge_tenant_stats, pool_tenant_samples)
+from repro.core.raid import Raid5Layout
+from repro.core.safs_sim import SAFSSim, SAFSWorkload
+from repro.core.sharded import ShardedArraySim
+
+from test_golden_determinism import (GOLDEN_ARRAY_UNIFORM,
+                                     GOLDEN_SAFS_UNIFORM, _array_counters)
+
+P = SSDParams(capacity_pages=4096)
+
+# window below n*qd: host queues keep headroom, so the shared window W is
+# the binding constraint and the DRR sets admission shares (at W == n*qd
+# parking dynamics would override the scheduler — see qos_sweep)
+WL = Workload(w_total=48, qd_per_ssd=128)
+
+
+def two_writers(w0: float, w1: float, **kw) -> QosPolicy:
+    return QosPolicy(tenants=(TenantSpec(0, weight=w0, **kw),
+                              TenantSpec(1, weight=w1)))
+
+
+# ---------------------------------------------------------------------------
+# scheduler building blocks
+# ---------------------------------------------------------------------------
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        QosPolicy(tenants=())
+    with pytest.raises(ValueError):
+        QosPolicy(tenants=(TenantSpec(0), TenantSpec(0)))
+    with pytest.raises(ValueError):
+        QosPolicy(tenants=(TenantSpec(0, weight=0.0),))
+    with pytest.raises(ValueError):
+        QosPolicy(tenants=(TenantSpec(0, rate_iops=-1.0),))
+    pol = two_writers(3.0, 1.0)
+    assert pol.weight_share(0) == 0.75 and pol.weight_share(1) == 0.25
+    assert pol.spec(1).tenant == 1
+    # frozen + hashable + picklable (ships to sharded workers)
+    import pickle
+    assert pickle.loads(pickle.dumps(pol)) == pol
+    hash(pol)
+
+
+def test_qos_rejects_conflicting_workload_inputs():
+    """qos= builds per-tenant sources from the specs; a caller-supplied
+    source/trace or a scenario'd Workload would be silently ignored, so the
+    constructor refuses the combination."""
+    from repro.core.workloads import UniformSource
+    pol = two_writers(1.0, 1.0)
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="source"):
+        ArraySim(2, P, 0.6, WL, seed=0, qos=pol,
+                 source=UniformSource(100, rng))
+    with pytest.raises(ValueError, match="scenario"):
+        ArraySim(2, P, 0.6, Workload(scenario="mixed"), seed=0, qos=pol)
+
+
+def test_token_bucket():
+    b = TokenBucket(rate=100.0, burst=2.0, now=0.0)
+    assert b.eligible(0.0)
+    b.take(0.0)
+    b.take(0.0)
+    assert not b.eligible(0.0)
+    # next full token 0.01s out; refill makes it eligible again
+    assert b.next_release(0.0) == pytest.approx(0.01)
+    assert b.eligible(0.011)
+    # burst caps accumulation
+    b2 = TokenBucket(rate=100.0, burst=2.0, now=0.0)
+    b2._refill(10.0)
+    assert b2.tokens == 2.0
+
+
+def test_drr_exact_weighted_shares():
+    drr = DeficitRoundRobin([0, 1, 2], lambda t: {0: 4.0, 1: 2.0, 2: 1.0}[t])
+    picks = [drr.pick(lambda t: True) for _ in range(7000)]
+    counts = [picks.count(t) for t in (0, 1, 2)]
+    assert counts == [4000, 2000, 1000]
+
+
+def test_drr_skips_blocked_without_losing_deficit():
+    drr = DeficitRoundRobin([0, 1], lambda t: 2.0)
+    # tenant 0 blocked: all service goes to tenant 1
+    assert [drr.pick(lambda t: t == 1) for _ in range(4)] == [1] * 4
+    # nobody eligible -> None (no spin)
+    assert drr.pick(lambda t: False) is None
+    # tenant 0 returns and is served again
+    assert 0 in {drr.pick(lambda t: True) for _ in range(4)}
+
+
+def test_slo_controller_throttles_and_recovers():
+    pol = QosPolicy(
+        tenants=(TenantSpec(0, slo_p99=1e-3), TenantSpec(1)),
+        slo_window_ops=64, slo_check_ops=16, slo_min_samples=16,
+        throttle_min=0.25)
+    c = SloController(pol)
+    now = 0.0
+    # violating latencies: throttle halves down to the floor
+    for i in range(64):
+        now += 1e-4
+        c.note(0, 5e-3, now)
+    assert c.throttle[1] == 0.25
+    assert c.violations > 0
+    t_thr = c.throttle_time(1, now)
+    assert t_thr > 0.0
+    # recovery: p99 well under the SLO -> factor doubles back to 1.0
+    for i in range(256):
+        now += 1e-4
+        c.note(0, 1e-5, now)
+    assert c.throttle[1] == 1.0
+    # throttle_time stops integrating once recovered
+    assert c.throttle_time(1, now + 1.0) == c.throttle_time(1, now)
+
+
+def test_scheduler_rate_cap_and_release():
+    pol = QosPolicy(tenants=(TenantSpec(0, rate_iops=10.0, burst=1.0),
+                             TenantSpec(1)))
+    s = QosScheduler(pol)
+    ready = lambda t: t == 0          # only the capped tenant has work
+    assert s.pick(0.0, ready) == 0    # burst token
+    assert s.pick(0.0, ready) is None
+    nr = s.next_release(0.0, ready)
+    assert nr == pytest.approx(0.1)
+    assert s.pick(nr, ready) == 0
+
+
+# ---------------------------------------------------------------------------
+# ArraySim integration
+# ---------------------------------------------------------------------------
+
+def test_qos_none_is_byte_identical_to_golden():
+    """Explicit no-QoS golden: ``qos=None`` must keep the fast path (and the
+    SAFS stack) byte-for-byte on the PR 2 goldens."""
+    sim = ArraySim(3, P, 0.6, Workload(w_total=96, qd_per_ssd=32, n_streams=3),
+                   seed=42, qos=None)
+    r = sim.run(6000)
+    got = _array_counters(sim, r)
+    for k, want in GOLDEN_ARRAY_UNIFORM.items():
+        if k == "per_ssd":
+            continue
+        assert got[k] == want, f"{k}: {got[k]!r} != golden {want!r}"
+    assert r.tenant_stats is None and r.share_error == 0.0
+
+    s = SAFSSim(n_ssds=2, ssd=P, occupancy=0.6,
+                workload=SAFSWorkload(concurrency=64), cache_frac=0.1,
+                seed=3, qos=None)
+    rs = s.run(4000)
+    assert rs.app_iops == GOLDEN_SAFS_UNIFORM["app_iops"]
+    assert rs.p99_latency == GOLDEN_SAFS_UNIFORM["p99"]
+    assert rs.tenant_stats is None
+
+
+@pytest.mark.parametrize("w0,w1", [(1.0, 1.0), (2.0, 1.0), (4.0, 1.0)])
+def test_weighted_shares_track_weights(w0, w1):
+    """At saturation (window-bound), achieved tenant shares track the
+    configured DRR weights within 10% relative."""
+    r = ArraySim(3, P, 0.6, WL, seed=42, qos=two_writers(w0, w1)).run(8000)
+    for t in (0, 1):
+        st = r.tenant_stats[t]
+        assert st.ops > 0
+        assert abs(st.share / st.weight_share - 1.0) < 0.10, \
+            f"tenant {t}: share {st.share:.3f} vs weight {st.weight_share:.3f}"
+    assert r.share_error < 0.05
+    total = sum(st.share for st in r.tenant_stats.values())
+    assert total == pytest.approx(1.0)
+
+
+def test_rate_cap_bounds_tenant_throughput():
+    """A token-bucket cap holds a tenant's measured throughput at the cap
+    while the uncapped tenant takes the rest of the array."""
+    cap = 8000.0
+    pol = QosPolicy(tenants=(TenantSpec(0, rate_iops=cap, burst=16.0),
+                             TenantSpec(1)))
+    r = ArraySim(3, P, 0.6, WL, seed=42, qos=pol).run(8000)
+    s0, s1 = r.tenant_stats[0], r.tenant_stats[1]
+    assert s0.throughput <= cap * 1.10
+    assert s0.throughput >= cap * 0.5          # not starved either
+    assert s1.throughput > s0.throughput       # uncapped tenant dominates
+
+
+def test_slo_throttle_protects_reader_under_gc():
+    """The ISSUE's protection scenario: a Zipf reader with a p99 SLO shares
+    the array with a random writer whose flush traffic drives active GC.
+    With the SLO set, the controller throttles the writer and the reader's
+    p99 must improve vs the neutral (telemetry-only) policy."""
+    reader = dict(read_frac=1.0, dist="zipf")
+    base = QosPolicy(tenants=(TenantSpec(0, weight=1.0, **reader),
+                              TenantSpec(1, weight=1.0)))
+    slo = QosPolicy(tenants=(TenantSpec(0, weight=1.0, slo_p99=0.5e-3,
+                                        **reader),
+                             TenantSpec(1, weight=1.0)))
+    r_base = ArraySim(3, P, 0.6, WL, seed=42, qos=base).run(10000)
+    r_slo = ArraySim(3, P, 0.6, WL, seed=42, qos=slo).run(10000)
+    p99_base = r_base.tenant_stats[0].p99_latency
+    p99_slo = r_slo.tenant_stats[0].p99_latency
+    assert r_base.tenant_stats[1].throttle_time == 0.0
+    assert r_slo.tenant_stats[1].throttle_time > 0.0
+    assert r_slo.tenant_stats[1].share < r_base.tenant_stats[1].share
+    assert p99_slo < p99_base, \
+        f"SLO throttling did not protect the reader: {p99_slo} vs {p99_base}"
+
+
+def test_qos_deterministic_rerun():
+    pol = two_writers(2.0, 1.0)
+    a = ArraySim(3, P, 0.6, WL, seed=11, qos=pol).run(5000)
+    b = ArraySim(3, P, 0.6, WL, seed=11, qos=pol).run(5000)
+    assert a.iops == b.iops
+    for t in (0, 1):
+        assert a.tenant_stats[t].ops == b.tenant_stats[t].ops
+        assert a.tenant_stats[t].p99_latency == b.tenant_stats[t].p99_latency
+
+
+def test_qos_on_raid5_layout():
+    """QoS composes with striped layouts: the admission loop drives the
+    RAID-5 planner (RMW, parity WA) while tracking per-tenant latency."""
+    pol = QosPolicy(tenants=(TenantSpec(0, weight=2.0, read_frac=0.5),
+                             TenantSpec(1, weight=1.0)))
+    r = ArraySim(6, P, 0.6, Workload(w_total=48, qd_per_ssd=64), seed=7,
+                 layout=Raid5Layout(group=6), qos=pol).run(5000)
+    assert r.layout == "raid5"
+    assert r.parity_wa > 1.5                   # small writes paid the RMW
+    assert r.rmw_ops > 0
+    assert all(r.tenant_stats[t].ops > 0 for t in (0, 1))
+    assert sum(st.ops for st in r.tenant_stats.values()) > 0
+
+
+def test_qos_rebuild_runs_outside_tenant_classes():
+    """The background rebuild stream coexists with QoS tenants (it keeps its
+    own window and never consumes tenant tokens)."""
+    pol = two_writers(1.0, 1.0)
+    r = ArraySim(6, P, 0.6, Workload(w_total=32, qd_per_ssd=64), seed=3,
+                 layout=Raid5Layout(group=6, degraded=1, rebuild=True),
+                 qos=pol).run(3000)
+    assert r.rebuild_rows > 0
+    assert all(r.tenant_stats[t].ops > 0 for t in (0, 1))
+
+
+# ---------------------------------------------------------------------------
+# sharded merging
+# ---------------------------------------------------------------------------
+
+def test_sharded_qos_serial_equals_parallel():
+    """Per-tenant stats must be bit-identical between the worker-process
+    path and the same shard decomposition run in-process."""
+    pol = QosPolicy(tenants=(TenantSpec(0, weight=2.0, read_frac=1.0,
+                                        dist="zipf", slo_p99=1e-3),
+                             TenantSpec(1, weight=1.0)))
+    wl = Workload(w_total=32, qd_per_ssd=64, n_streams=4)
+    a = ShardedArraySim(4, P, 0.6, wl, seed=5, n_shards=2, parallel=True,
+                        qos=pol).run(6000)
+    b = ShardedArraySim(4, P, 0.6, wl, seed=5, n_shards=2, parallel=False,
+                        qos=pol).run(6000)
+    assert a.iops == b.iops
+    assert a.share_error == b.share_error
+    for t in (0, 1):
+        sa, sb = a.tenant_stats[t], b.tenant_stats[t]
+        assert (sa.ops, sa.throughput, sa.mean_latency, sa.p50_latency,
+                sa.p95_latency, sa.p99_latency, sa.throttle_time) == \
+               (sb.ops, sb.throughput, sb.mean_latency, sb.p50_latency,
+                sb.p95_latency, sb.p99_latency, sb.throttle_time)
+
+
+def test_sharded_rate_cap_scales_to_shard_share():
+    """An array-wide ``rate_iops`` cap stays array-wide under sharding:
+    each shard enforces its proportional slice (regression: shipping the
+    policy verbatim gave every shard the FULL cap, admitting up to
+    n_shards x rate_iops)."""
+    cap = 12000.0
+    pol = QosPolicy(tenants=(TenantSpec(0, rate_iops=cap, burst=16.0),
+                             TenantSpec(1)))
+    sim = ShardedArraySim(4, P, 0.6, Workload(w_total=32, qd_per_ssd=64),
+                          seed=5, n_shards=2, parallel=False, qos=pol)
+    shard_pols = [a[9] for a in sim._shard_args(4000, None)]
+    assert sum(p.spec(0).rate_iops for p in shard_pols) == pytest.approx(cap)
+    assert all(p.spec(1).rate_iops is None for p in shard_pols)
+    r = sim.run(8000)
+    assert r.tenant_stats[0].throughput <= cap * 1.15
+    assert r.tenant_stats[0].rate_iops == cap   # merged stats: array-wide cap
+
+
+def test_merge_tenant_stats_pools_exactly():
+    pol = two_writers(1.0, 1.0)
+    from repro.core.engine import LatencyRecorder
+
+    def part(lat0, lat1, ttime1):
+        r0, r1 = LatencyRecorder(), LatencyRecorder()
+        for v in lat0:
+            r0.record(v)
+        for v in lat1:
+            r1.record(v)
+        stats, _ = build_tenant_stats(pol, {0: r0, 1: r1}, 2.0,
+                                      {1: ttime1})
+        return stats
+
+    p1 = part([1.0, 2.0], [5.0], 0.5)
+    p2 = part([3.0, 4.0], [6.0, 7.0], 2.0)
+    pooled = pool_tenant_samples([
+        {0: np.array([1.0, 2.0]), 1: np.array([5.0])},
+        {0: np.array([3.0, 4.0]), 1: np.array([6.0, 7.0])}])
+    merged, share_err = merge_tenant_stats(pol, [p1, p2], pooled)
+    assert merged[0].ops == 4 and merged[1].ops == 3
+    assert merged[0].p50_latency == 2.5        # exact over pooled samples
+    assert merged[1].throttle_time == 2.0      # worst shard
+    assert merged[0].throughput == pytest.approx(4 / 2.0)
+    assert share_err == pytest.approx(abs(4 / 7 - 0.5))
+
+
+# ---------------------------------------------------------------------------
+# SAFS integration (TenantDualQueue at the pop_next admission point)
+# ---------------------------------------------------------------------------
+
+def _req(tenant, prio=HIGH, payload=None, **kw):
+    return IORequest(payload=payload, priority=prio, tenant=tenant, **kw)
+
+
+def test_tenant_dual_queue_weighted_high_classes():
+    loop = EventLoop()
+    # small quantum so the 2:1 weighting shows within 30 pops (the DRR
+    # serves one quantum's worth per class visit)
+    pol = QosPolicy(tenants=(TenantSpec(0, weight=2.0), TenantSpec(1)),
+                    quantum=2.0)
+    q = TenantDualQueue(loop, QosScheduler(pol), max_inflight=64, reserved=2)
+    for i in range(30):
+        q.submit(_req(0, payload=("a", i)))
+        q.submit(_req(1, payload=("b", i)))
+    served = [q.pop_next().tenant for _ in range(30)]
+    # 2:1 weighted interleave across the per-tenant HIGH classes
+    assert served.count(0) == 20 and served.count(1) == 10
+
+
+def test_tenant_dual_queue_low_discipline_and_stale():
+    loop = EventLoop()
+    pol = two_writers(1.0, 1.0)
+    q = TenantDualQueue(loop, QosScheduler(pol), max_inflight=4, reserved=2)
+    discarded = []
+    q.submit(_req(0, prio=LOW, payload=0, is_stale=lambda p: True,
+                  on_discard=discarded.append))
+    q.submit(_req(0, prio=LOW, payload=1, is_stale=lambda p: False))
+    q.submit(_req(0, prio=HIGH, payload="h"))
+    # HIGH beats LOW
+    assert q.pop_next().payload == "h"
+    # stale LOW head is dropped (counted), next live LOW issues
+    r = q.pop_next()
+    assert r.payload == 1 and discarded == [0]
+    assert q.stats.discarded_stale == 1
+    # reserved slots: with 2 inflight of max 4 and reserved 2, LOW blocks
+    q.submit(_req(0, prio=LOW, payload=2))
+    assert q.pop_next() is None
+    q.complete(r)
+    assert q.pop_next().payload == 2   # freed below the reserve line: LOW ok
+    # unknown tenant falls back to the first class instead of KeyError
+    q.submit(_req(99, prio=HIGH, payload="x"))
+    assert q.pop_next().payload == "x"
+
+
+def test_tenant_dual_queue_rate_block_wakes():
+    loop = EventLoop()
+    pol = QosPolicy(tenants=(TenantSpec(0, rate_iops=10.0, burst=1.0),))
+    wakes = []
+    q = TenantDualQueue(loop, QosScheduler(pol), max_inflight=8, reserved=0,
+                        on_rate_blocked=wakes.append)
+    q.submit(_req(0, payload=0))
+    q.submit(_req(0, payload=1))
+    assert q.pop_next().payload == 0   # burst token
+    assert q.pop_next() is None        # rate-blocked
+    assert wakes and wakes[0] == pytest.approx(0.1)
+
+
+def test_safs_qos_end_to_end():
+    pol = QosPolicy(tenants=(TenantSpec(0, weight=2.0), TenantSpec(1)))
+    sim = SAFSSim(n_ssds=2, ssd=P, occupancy=0.6,
+                  workload=SAFSWorkload(concurrency=64, scenario="mixed",
+                                        writer_frac=0.5),
+                  cache_frac=0.1, seed=3, qos=pol)
+    r = sim.run(6000)
+    assert r.app_iops > 0
+    assert set(r.tenant_stats) == {0, 1}
+    assert all(st.ops > 0 for st in r.tenant_stats.values())
+    assert sum(st.ops for st in r.tenant_stats.values()) <= r.app_ops
+    # deterministic rerun
+    sim2 = SAFSSim(n_ssds=2, ssd=P, occupancy=0.6,
+                   workload=SAFSWorkload(concurrency=64, scenario="mixed",
+                                         writer_frac=0.5),
+                   cache_frac=0.1, seed=3, qos=pol)
+    r2 = sim2.run(6000)
+    assert r2.tenant_stats[0].p99_latency == r.tenant_stats[0].p99_latency
+
+
+# ---------------------------------------------------------------------------
+# nightly: the full qos acceptance sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_qos_sweep_full_tier(tmp_path):
+    """Nightly: the full 12-SSD qos sweep (the committed BENCH_qos.json
+    tier) must pass every built-in check — shares within 10% of weights,
+    SLO protection improving the reader's p99 under active GC, the writer
+    actually throttled, serial == sharded per-tenant stats."""
+    import json
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = tmp_path / "BENCH_qos.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.qos_sweep", "--out", str(out)],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(out.read_text())
+    assert payload["all_checks_pass"]
+    assert payload["n_ssds"] >= 12 and len(payload["weight_sweep"]) >= 3
+    sp = payload["slo_protection"]
+    assert sp["qos"]["reader_p99_ms"] < sp["no_qos"]["reader_p99_ms"]

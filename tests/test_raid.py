@@ -232,6 +232,25 @@ def test_trim_plan_invalidates_without_parity():
     assert [len(p) for p in plan.phases] == [1]
     assert plan.phases[0][0][2] == OP_TRIM
     assert pl.stats["trims"] == 1 and pl.stats["parity_writes"] == 0
+    # the skipped parity update is a counted modeling gap, not a silent one
+    assert pl.stats["trim_parity_skipped"] == 1
+
+
+def test_trim_parity_skipped_surfaces_in_results():
+    """RAID-5 TRIMs skip the parity update (mapping-only cost model); the
+    skip count must surface end-to-end as ArrayResults.trim_parity_skipped
+    (and stay zero when parity is dead on the trimmed row or on layouts
+    without parity)."""
+    wl = Workload(w_total=48, qd_per_ssd=32, n_streams=6, trim_frac=0.3)
+    r = ArraySim(6, SMALL, 0.6, wl, seed=2, layout=Raid5Layout(group=6)
+                 ).run(4000)
+    assert r.trims > 0
+    # planner-side count (at plan time) tracks the FTL-side trims (at
+    # service time) up to in-flight boundary effects
+    assert r.trim_parity_skipped > 0
+    r0 = ArraySim(6, SMALL, 0.6, wl, seed=2,
+                  layout=Raid0Layout(stripe_width=2, group=6)).run(2000)
+    assert r0.trim_parity_skipped == 0
 
 
 def test_layout_spec_validation():

@@ -3,7 +3,8 @@ import numpy as np
 import pytest
 
 from repro.core.gc_sim import ArraySim, SSDParams, Workload
-from repro.core.workloads import (TRACE_READ, TRACE_WRITE, BurstySource,
+from repro.core.workloads import (OP_TRIM, TRACE_READ, TRACE_WRITE,
+                                  BurstySource, DeleteBurstSource,
                                   MixedTenantSource, Op, SequentialSource,
                                   TraceSource, UniformSource, ZipfSource,
                                   source_for)
@@ -62,6 +63,78 @@ def test_trace_source_replays_and_loops():
 def test_trace_source_folds_lbas():
     trace = np.array([[0.0, 1005, TRACE_WRITE]])
     assert TraceSource(trace, n_live=100).next_op(0.0).lba == 5
+
+
+def test_delete_burst_source_emits_aligned_trim_runs():
+    rng = np.random.default_rng(7)
+    src = DeleteBurstSource(UniformSource(1024, rng), 1024, rng,
+                            pages=8, every=4)
+    # one cycle = 3 base ops + an 8-TRIM burst (the 4th call fires it)
+    ops = [src.next_op(0.0) for _ in range(4 * 11)]
+    trims = [o for o in ops if o.kind == OP_TRIM]
+    base = [o for o in ops if o.kind != OP_TRIM]
+    assert trims and base
+    # TRIMs come in contiguous runs of `pages`, starting page-aligned
+    runs, cur = [], []
+    for o in ops:
+        if o.kind == OP_TRIM:
+            cur.append(o.lba)
+        elif cur:
+            runs.append(cur)
+            cur = []
+    if cur:
+        runs.append(cur)
+    assert len(runs) == 4 and len(base) == 12
+    for run in runs:
+        assert len(run) == 8
+        assert run[0] % 8 == 0
+        assert run == list(range(run[0], run[0] + 8))
+
+
+def test_delete_burst_truncates_tail_extent():
+    """When the aligned extent start is within `pages` of the end of the
+    LBA space, the run truncates (short tail extent) instead of wrapping —
+    every run stays contiguous, in-bounds, and aligned at its start."""
+    rng = np.random.default_rng(0)
+    n_live = 100                       # not a multiple of pages=64
+    src = DeleteBurstSource(UniformSource(n_live, rng), n_live, rng,
+                            pages=64, every=3)
+    runs, cur = [], []
+    for _ in range(300):
+        o = src.next_op(0.0)
+        if o.kind == OP_TRIM:
+            cur.append(o.lba)
+        elif cur:
+            runs.append(cur)
+            cur = []
+    assert runs
+    for run in runs:
+        assert run[0] % 64 == 0
+        assert run == list(range(run[0], run[0] + len(run)))   # contiguous
+        assert run[-1] < n_live
+    assert any(len(run) < 64 for run in runs)   # the truncated tail extent
+
+
+def test_delete_burst_rng_untouched_when_disabled():
+    """The delete_burst machinery draws RNG only inside its own scenario:
+    every other scenario's op stream is bit-identical to before."""
+    a = np.random.default_rng(9)
+    b = np.random.default_rng(9)
+    plain = UniformSource(512, a)
+    wrapped_base = UniformSource(512, b)     # same stream, never bursts
+    src = DeleteBurstSource(wrapped_base, 512, b, pages=4, every=10**9)
+    for _ in range(200):
+        x, y = plain.next_op(0.0), src.next_op(0.0)
+        assert (x.lba, x.is_read) == (y.lba, y.is_read)
+
+
+def test_array_sim_delete_burst_scenario_trims_end_to_end():
+    wl = Workload(w_total=64, qd_per_ssd=32, scenario="delete_burst",
+                  delete_pages=32, delete_every=64)
+    r = ArraySim(2, SMALL, 0.6, wl, seed=8).run(6000)
+    assert r.trims > 0
+    # trim-aware GC: invalidated pages are never copied, so WA stays sane
+    assert r.gc_wa >= 1.0
 
 
 def test_source_for_dispatch():
