@@ -4,7 +4,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.gc_sim import ArraySim, SSDParams, Workload
+from repro.core.gc_sim import ArraySim, Workload
 from repro.core.safs_sim import SAFSSim, SAFSWorkload
 
 from .common import PAPER, SSD, save

@@ -20,7 +20,8 @@ def main(argv=None):
     # worker pool can then use the fast 'fork' start method (forking after
     # the multithreaded JAX runtime initializes risks worker deadlock, and
     # the fallback 'spawn' pool is slower to start)
-    from . import perf_bench, qos_sweep, raid_sweep, scale_sweep
+    from . import gc_coord_sweep, perf_bench, qos_sweep, raid_sweep, \
+        scale_sweep
 
     t0 = time.time()
     print("=" * 72)
@@ -38,6 +39,11 @@ def main(argv=None):
     print("SSPer-tenant QoS -- weighted shares + SLO protection under GC")
     print("=" * 72)
     rc |= qos_sweep.main(["--smoke"] if args.fast else [])
+    print()
+    print("=" * 72)
+    print("SSGC coordination -- staggered/idle policies vs reactive trigger")
+    print("=" * 72)
+    rc |= gc_coord_sweep.main(["--smoke"] if args.fast else [])
     print()
 
     from . import paper_figs, paper_tables, roofline, serving_bench

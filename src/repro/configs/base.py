@@ -8,7 +8,7 @@ odd layers) still scan over homogeneous parameter groups.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

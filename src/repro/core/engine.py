@@ -290,6 +290,13 @@ class DeviceModel:
     starts; once the channels drain the full episode runs with the device
     (all channels) preempted, exactly once per trip.
 
+    GC coordination (``core/gc_coord.py``): with a ``gc_coord`` attached the
+    trigger decision is delegated — ``coord.gate(self)`` may *defer* the
+    episode (the device keeps serving under an array-wide GC lease) and
+    ``coord.idle_probe(self)`` may start a bounded *idle* reclaim step when a
+    kick leaves the device empty. ``gc_coord=None`` (the default) keeps the
+    self-triggering path above byte-identical.
+
     ``server.busy_time`` accumulates channel-seconds (a request of duration
     ``dt`` adds ``dt``; a GC episode adds ``dt * channels``), so utilization
     is ``busy_time / (span * channels)``.
@@ -304,13 +311,14 @@ class DeviceModel:
 
     __slots__ = ("loop", "server", "pull", "service_time", "on_done",
                  "admitted", "in_service", "in_gc", "_slots", "_channels",
-                 "backlog")
+                 "backlog", "gc_coord", "dev_id", "gc_granted")
 
     def __init__(self, loop: EventLoop, server: Any,
                  pull: Callable[[], Optional[Any]],
                  service_time: Callable[[Any], float],
                  on_done: Callable[[Any], None],
-                 backlog: Any = None) -> None:
+                 backlog: Any = None,
+                 gc_coord: Any = None, dev_id: int = 0) -> None:
         self.loop = loop
         self.server = server
         self.pull = pull
@@ -324,6 +332,11 @@ class DeviceModel:
         # optional host-side container backing ``pull``: when given and
         # falsy (empty), kick() skips the pull loop without calling it
         self.backlog = backlog
+        # optional array-level GC coordinator (core/gc_coord.py); None keeps
+        # the self-triggering drain-then-collect path byte-identical
+        self.gc_coord = gc_coord
+        self.dev_id = dev_id
+        self.gc_granted = False      # holds a GC lease (draining toward it)
 
     @property
     def occupancy(self) -> int:
@@ -348,11 +361,18 @@ class DeviceModel:
         if self.in_gc:
             return
         server = self.server
-        if server.ftl.need_gc():
-            if in_service == 0:
-                self._start_gc()
-            return  # drain channels first; completion re-kicks
+        coord = self.gc_coord
+        if coord is None:
+            if server.ftl.need_gc():
+                if in_service == 0:
+                    self._start_gc()
+                return  # drain channels first; completion re-kicks
+        elif coord.gate(self):
+            return      # granted: draining (or the episode just started)
         if not admitted or in_service >= self._channels:
+            if coord is not None and not admitted and in_service == 0 \
+                    and not self.in_gc:
+                coord.idle_probe(self)
             return
         loop = self.loop
         call_at = loop.call_at
@@ -382,9 +402,13 @@ class DeviceModel:
         if self.in_gc:
             return True
         server = self.server
-        if server.ftl.need_gc():
-            if in_service == 0:
-                self._start_gc()
+        coord = self.gc_coord
+        if coord is None:
+            if server.ftl.need_gc():
+                if in_service == 0:
+                    self._start_gc()
+                return True
+        elif coord.gate(self):
             return True
         channels = self._channels
         if in_service < channels:
@@ -409,11 +433,31 @@ class DeviceModel:
         s.in_gc = True
         s.gc_time += dt
         s.busy_time += dt * s.p.channels
+        if self.gc_coord is not None:
+            self.gc_coord.on_gc_start(self, dt)
+        self.loop.schedule(dt, self._gc_done)
+
+    def _start_idle_gc(self, blocks: int) -> None:
+        """Bounded idle-GC step (coordinator-initiated): reclaim up to
+        ``blocks`` blocks with the device preempted, like a (short) regular
+        episode. Only called by the coordinator's idle probe, i.e. with no
+        admitted or in-service requests."""
+        s = self.server
+        dt = s.gc_idle_time(blocks)
+        if dt <= 0.0:
+            return
+        self.in_gc = True
+        s.in_gc = True
+        s.gc_time += dt
+        s.busy_time += dt * s.p.channels
+        self.gc_coord.on_gc_start(self, dt, idle=True)
         self.loop.schedule(dt, self._gc_done)
 
     def _gc_done(self) -> None:
         self.in_gc = False
         self.server.in_gc = False
+        if self.gc_coord is not None:
+            self.gc_coord.on_gc_end(self)
         self.kick()
 
     def _complete(self, req: Any) -> None:

@@ -14,7 +14,7 @@ from __future__ import annotations
 import threading
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Iterable, Protocol
+from typing import Callable, Protocol
 
 from .policies import FLUSHES_PER_VISIT, FLUSH_TRIGGER, MAX_PENDING_FLUSH_PER_DEV
 

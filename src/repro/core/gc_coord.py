@@ -1,0 +1,368 @@
+"""Array-level GC coordination: WHEN each member collects, not just what.
+
+The paper's problem is that per-SSD garbage collection is *unsynchronized*:
+at any instant some members stall in a GC episode while others idle, and
+striping magnifies the imbalance (a stripe write completes at the MAX of its
+members, so one mid-GC straggler stalls every stripe touching it). The FTL
+deciding on its own — ``need_gc()`` trips, the device drains and runs the
+whole episode — is exactly that failure mode. This module lifts the decision
+to the array:
+
+* :class:`GcPolicy` — frozen, picklable policy specs (safe for prefill-cache
+  keys and for shipping to sharded worker processes):
+
+  - :class:`ReactiveGc` — today's per-device threshold trigger, byte-identical
+    to ``gc=None`` (goldens pinned in ``tests/test_gc_coord.py``).
+  - :class:`StaggeredGc` — an array-wide GC lease: at most ``max_concurrent``
+    members collect at once; a member whose watermark trips while the leases
+    are taken *keeps serving* and waits its turn (the wait is recorded as
+    ``stagger_wait``). A device at the free-block hard floor
+    (``floor_blocks``) overrides the lease so forward progress is never
+    blocked.
+  - :class:`IdleGc` — preemptive early GC: whenever a device goes idle with
+    free blocks at or below ``watermark``, it reclaims ``step_blocks`` blocks
+    off the critical path (block-granular, so a new burst waits at most one
+    step). The reactive threshold stays armed as a backstop under sustained
+    load.
+
+  Every policy may also enable **GC-aware host steering** (``steer=True``):
+  window admission caps members currently in — or waiting to enter — GC at
+  ``steer_qd`` outstanding requests (instead of the workload's
+  ``qd_per_ssd``), so the host's long-queue budget is spent on members that
+  can actually serve; and the RAID-5 planner redirects reads targeting a
+  GC-busy member to reconstruction from its row siblings
+  (``ArrayResults.steered_reads``).
+
+* :class:`GcCoordinator` — the per-run runtime object. ``DeviceModel`` asks
+  it to ``gate`` every GC decision (grant / defer / force) and reports
+  episode start/end; the coordinator keeps the lease queue, the concurrency
+  time-integral behind ``gc_overlap_frac``, the ``stagger_wait`` recorder,
+  and the per-policy counters surfaced in the ``ArrayResults`` coordination
+  block.
+
+Determinism: the coordinator consumes no RNG and its lease queue is FIFO, so
+seed-for-seed byte identity holds under every policy; with ``ReactiveGc`` the
+grant is unconditional and the event sequence is identical to ``gc=None``.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+from .engine import LatencyRecorder
+
+__all__ = [
+    "GcCoordinator", "GcPolicy", "IdleGc", "ReactiveGc", "StaggeredGc",
+    "gc_policy_from_name",
+]
+
+
+# ---------------------------------------------------------------------------
+# Policy specs (frozen, hashable, picklable)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class GcPolicy:
+    """Base spec: steering knobs shared by every policy.
+
+    ``steer=True`` enables GC-aware host steering: admission to a GC-busy
+    member (in GC, draining for GC, or lease-waiting) is capped at
+    ``steer_qd`` outstanding requests, and the RAID-5 planner serves reads of
+    GC-busy members by reconstruction from row siblings. ``floor_blocks`` is
+    the free-block hard floor below which a device starts GC regardless of
+    any lease — forward progress is never blocked by coordination."""
+
+    steer: bool = False
+    steer_qd: int = 4
+    floor_blocks: int = 4
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__.replace("Gc", "").lower()
+
+    def make_coordinator(self, n: int, loop, unit: int = 1) -> "GcCoordinator":
+        """``unit`` is the layout's stripe-group size (``shard_unit``) — the
+        lease-domain size for ``StaggeredGc(scope="group")``."""
+        return GcCoordinator(self, n, loop, unit)
+
+
+@dataclass(frozen=True)
+class ReactiveGc(GcPolicy):
+    """Per-device threshold trigger — the historical behavior, made an
+    explicit policy. Byte-identical to ``gc=None`` (the coordinator only
+    accounts; it never defers or preempts)."""
+
+
+@dataclass(frozen=True)
+class StaggeredGc(GcPolicy):
+    """GC lease: at most ``max_concurrent`` members of a lease *domain* in
+    (or draining toward) a GC episode at once. Deferred members keep
+    serving; leases hand over FIFO on episode end; the ``floor_blocks``
+    hard floor overrides the lease.
+
+    ``scope`` picks the domain: ``"array"`` is one global lease pool;
+    ``"group"`` is one pool per stripe group (``layout.shard_unit``) — the
+    stripe-aware variant. GC is per-device work, so an array-wide lease
+    caps AGGREGATE reclaim bandwidth at ``max_concurrent`` devices' worth
+    and throttles a write-saturated array; what a striped layout actually
+    needs is that no two members of the *same group* pause together (a
+    stripe completes at the max of its members). Group scope delivers
+    exactly that while keeping one lease per group of reclaim parallelism.
+    On JBOD (group size 1) ``"group"`` degenerates to uncoordinated — use
+    ``"array"`` there.
+
+    ``early_blocks`` makes the rotation *proactive* (Nagel et al.'s lever —
+    schedule collection ahead of need): a member whose free blocks are
+    within ``early_blocks`` of the reactive watermark takes a FREE lease
+    immediately instead of waiting for ``need_gc()`` to trip. Episodes then
+    start shallow (short pauses) and spread around the rotation, instead of
+    every member deferring to the floor and paying one long episode; 0
+    disables the early trigger (pure deferral staggering)."""
+
+    max_concurrent: int = 1
+    scope: str = "array"
+    early_blocks: int = 2
+
+
+@dataclass(frozen=True)
+class IdleGc(GcPolicy):
+    """Preemptive early GC during idle windows: when a device goes idle
+    while its free blocks are at or below ``watermark``, it reclaims
+    ``step_blocks`` blocks. Steps repeat while the device stays idle and
+    below the watermark, so collection migrates off the critical path; the
+    reactive threshold remains armed as a backstop.
+
+    ``qd_idle`` is the maximum occupancy (admitted + in-service) still
+    considered idle. NOTE: the current engine preempts ALL channels for a
+    GC episode and only probes a fully drained device, so occupancy at the
+    probe point is always 0 and values > 0 behave exactly like 0; the knob
+    is honored by the coordinator's check and becomes meaningful only with
+    a partial-preemption service model."""
+
+    watermark: int = 24
+    qd_idle: int = 0
+    step_blocks: int = 1
+
+
+def gc_policy_from_name(name: str, **kw) -> GcPolicy:
+    """Benchmark/CLI convenience: ``"reactive" | "staggered" | "idle"``."""
+    table = {"reactive": ReactiveGc, "staggered": StaggeredGc, "idle": IdleGc}
+    try:
+        return table[name](**kw)
+    except KeyError:
+        raise ValueError(f"unknown GC policy {name!r} "
+                         f"(expected one of {sorted(table)})") from None
+
+
+# ---------------------------------------------------------------------------
+# Runtime coordinator
+# ---------------------------------------------------------------------------
+
+class GcCoordinator:
+    """Per-run array GC state machine + accounting.
+
+    The protocol with ``engine.DeviceModel`` (one device per member):
+
+    * ``gate(dev)`` — called whenever the device could start new service.
+      Returns True when the device must *stop* admitting service because it
+      is draining toward (or already granted) a GC episode; False when it
+      should keep serving (no GC needed, or the lease deferred it).
+    * ``idle_probe(dev)`` — called when a kick leaves the device with no
+      admitted work; may start a bounded idle-GC step (:class:`IdleGc`).
+    * ``on_gc_start(dev, dt, idle)`` / ``on_gc_end(dev)`` — episode
+      bookkeeping; ``on_gc_end`` hands the freed lease to the next FIFO
+      waiter and kicks it, and notifies the host (``on_release``) so
+      steering-parked streams re-place.
+
+    ``begin_measure(now)`` resets the window counters/integrals exactly like
+    the simulators' other measurement snapshots; ``finalize(now)`` closes the
+    open concurrency interval before results are read.
+    """
+
+    __slots__ = ("policy", "n", "loop", "devices", "gc_busy", "dom",
+                 "active", "waiting", "is_waiting", "wait_since", "wait_rec",
+                 "starts", "forced", "idle_starts", "gc_time", "gc_time_idle",
+                 "_count", "_last_t", "_t_overlap", "on_release",
+                 "_max_conc", "_idle", "_floor", "_early", "steer",
+                 "steer_qd")
+
+    def __init__(self, policy: GcPolicy, n: int, loop, unit: int = 1) -> None:
+        self.policy = policy
+        self.n = n
+        self.loop = loop
+        self.devices: list = [None] * n
+        # member is in GC, draining toward it, or lease-waiting ("about to
+        # enter") — the steering predicate, indexed by device id
+        self.gc_busy = [False] * n
+        if isinstance(policy, StaggeredGc):
+            self._max_conc = policy.max_concurrent
+            if policy.scope == "group":
+                unit = max(1, unit)
+                self.dom = [i // unit for i in range(n)]
+            elif policy.scope == "array":
+                self.dom = [0] * n
+            else:
+                raise ValueError(f"StaggeredGc.scope must be 'array' or "
+                                 f"'group', got {policy.scope!r}")
+        else:
+            self._max_conc = n + 1   # never defers
+            self.dom = [0] * n
+        n_dom = (self.dom[-1] + 1) if n else 1
+        self.active = [0] * n_dom    # granted leases per domain
+        self.waiting: list[deque[int]] = [deque() for _ in range(n_dom)]
+        self.is_waiting = [False] * n
+        self.wait_since = [0.0] * n
+        self.wait_rec = LatencyRecorder()
+        self.starts = 0              # episodes started (incl. idle steps)
+        self.forced = 0              # hard-floor lease overrides
+        self.idle_starts = 0         # idle-GC steps started
+        self.gc_time = 0.0           # sum of episode durations
+        self.gc_time_idle = 0.0      # ... started by the idle probe
+        self._count = 0              # members currently in a GC episode
+        self._last_t = 0.0
+        self._t_overlap = 0.0        # time integral with >= 2 members in GC
+        self.on_release = None       # host hook: ssd_i -> None (unpark)
+        self._idle = policy if isinstance(policy, IdleGc) else None
+        self._floor = policy.floor_blocks
+        self._early = policy.early_blocks \
+            if isinstance(policy, StaggeredGc) else 0
+        self.steer = policy.steer
+        self.steer_qd = policy.steer_qd
+
+    def attach(self, dev, dev_id: int) -> None:
+        self.devices[dev_id] = dev
+
+    # -- measurement window --------------------------------------------------
+    def begin_measure(self, now: float) -> None:
+        self._advance(now)
+        self._t_overlap = 0.0
+        self.wait_rec.reset()
+        self.starts = 0
+        self.forced = 0
+        self.idle_starts = 0
+        self.gc_time = 0.0
+        self.gc_time_idle = 0.0
+
+    def finalize(self, now: float) -> None:
+        self._advance(now)
+
+    def _advance(self, now: float) -> None:
+        if self._count >= 2:
+            self._t_overlap += now - self._last_t
+        self._last_t = now
+
+    # -- device protocol -----------------------------------------------------
+    def gate(self, dev) -> bool:
+        """True -> the device must not start new service (GC granted or
+        draining); False -> keep serving (healthy, or lease-deferred)."""
+        if dev.gc_granted:
+            if dev.in_service == 0:
+                dev._start_gc()
+            return True
+        ftl = dev.server.ftl
+        if not ftl.need_gc():
+            early = self._early
+            if early and len(ftl.free_blocks) <= ftl._gc_low + early \
+                    and not ftl.gc_satisfied():
+                d = self.dom[dev.dev_id]
+                if self.active[d] < self._max_conc:
+                    # proactive rotation: take the free lease now, while the
+                    # episode is still shallow (short pause), instead of
+                    # deferring everyone to the watermark at once
+                    self._grant(dev, dev.dev_id, d)
+                    return True
+            return False
+        i = dev.dev_id
+        d = self.dom[i]
+        if self.active[d] < self._max_conc:
+            self._grant(dev, i, d)
+            return True
+        if len(ftl.free_blocks) <= self._floor:
+            # hard floor: forward progress beats the lease
+            self.forced += 1
+            self._grant(dev, i, d)
+            return True
+        if not self.is_waiting[i]:
+            self.is_waiting[i] = True
+            self.wait_since[i] = self.loop.now
+            self.waiting[d].append(i)
+            self.gc_busy[i] = True   # "about to enter" for steering
+        return False
+
+    def _grant(self, dev, i: int, d: int) -> None:
+        self.active[d] += 1
+        dev.gc_granted = True
+        self.gc_busy[i] = True
+        if self.is_waiting[i]:
+            self.is_waiting[i] = False
+            self.wait_rec.record(self.loop.now - self.wait_since[i])
+        if dev.in_service == 0:
+            dev._start_gc()
+
+    def idle_probe(self, dev) -> None:
+        """Start a bounded idle-GC step if the policy wants one. Called when
+        a kick leaves the device with nothing admitted."""
+        pol = self._idle
+        if pol is None or dev.gc_granted:
+            return
+        if dev.in_service or len(dev.admitted) > pol.qd_idle:
+            return
+        ftl = dev.server.ftl
+        if len(ftl.free_blocks) > pol.watermark or not len(ftl.seal_fifo):
+            return
+        dev._start_idle_gc(pol.step_blocks)
+
+    def on_gc_start(self, dev, dt: float, idle: bool = False) -> None:
+        now = self.loop.now
+        self._advance(now)
+        self._count += 1
+        self.starts += 1
+        self.gc_time += dt
+        if idle:
+            self.idle_starts += 1
+            self.gc_time_idle += dt
+            self.active[self.dom[dev.dev_id]] += 1   # idle steps hold a lease
+            self.gc_busy[dev.dev_id] = True
+
+    def on_gc_end(self, dev) -> None:
+        now = self.loop.now
+        self._advance(now)
+        self._count -= 1
+        i = dev.dev_id
+        d = self.dom[i]
+        self.active[d] -= 1
+        dev.gc_granted = False
+        self.gc_busy[i] = False
+        # hand the freed lease to the domain's next waiter that still needs it
+        waiting = self.waiting[d]
+        while waiting and self.active[d] < self._max_conc:
+            j = waiting.popleft()
+            if not self.is_waiting[j]:
+                continue             # force-started meanwhile
+            w = self.devices[j]
+            if w.server.ftl.need_gc():
+                self._grant(w, j, d)
+                if w.in_service != 0:
+                    # draining: stop further admissions via its next gate
+                    w.kick()
+            else:
+                self.is_waiting[j] = False
+                self.gc_busy[j] = False
+                if self.on_release is not None:
+                    self.on_release(j)
+        if self.steer and self.on_release is not None:
+            self.on_release(i)
+
+    # -- results -------------------------------------------------------------
+    def window_stats(self, span: float) -> dict:
+        w = self.wait_rec.summary()
+        return {
+            "gc_policy": self.policy.name,
+            "gc_overlap_frac": self._t_overlap / span if span > 0 else 0.0,
+            "stagger_wait_mean": w.mean,
+            "stagger_wait_p99": w.p99,
+            "gc_starts": self.starts,
+            "gc_forced": self.forced,
+            "idle_gc_frac": (self.gc_time_idle / self.gc_time
+                             if self.gc_time > 0 else 0.0),
+        }

@@ -42,7 +42,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from .engine import DeviceModel, EventLoop, LatencyRecorder, MeasurementWindow
-from .workloads import (OP_READ, OP_REBUILD, OP_TRIM, OP_WRITE, Op, OpSource,
+from .workloads import (OP_READ, OP_REBUILD, OP_TRIM, OP_WRITE, OpSource,
                         ZipfSampler, _mix64, source_for)
 
 __all__ = [
@@ -477,6 +477,20 @@ class ArrayResults:
     tenant_stats: "dict | None" = None   # tenant id -> qos.TenantStats
     share_error: float = 0.0         # max |achieved - weight| share over
                                      # tenants (weights-only runs)
+    # -- GC coordination results (core/gc_coord.py; defaults = reactive) -----
+    gc_policy: str = "reactive"      # active policy name ("reactive" too
+                                     # when gc=None: same behavior)
+    gc_overlap_frac: float = 0.0     # fraction of the window with >= 2
+                                     # members simultaneously in GC
+    stagger_wait_mean: float = 0.0   # lease wait (trip -> GC start) under
+    stagger_wait_p99: float = 0.0    #   StaggeredGc deferral
+    util_min: float = 0.0            # min per-SSD utilization (the member
+                                     # coordination is meant to lift)
+    gc_starts: int = 0               # GC episodes started in-window
+    gc_forced: int = 0               # hard-floor lease overrides
+    idle_gc_frac: float = 0.0        # fraction of GC time from idle steps
+    steered_reads: int = 0           # RAID-5 reads redirected around a
+                                     # GC-busy member (steer=True)
 
 
 class SSDServer:
@@ -530,6 +544,25 @@ class SSDServer:
             t += t_erase
         return t
 
+    def gc_idle_time(self, max_blocks: int) -> float:
+        """Bounded idle-GC step (``gc_coord.IdleGc``): reclaim up to
+        ``max_blocks`` blocks regardless of the watermarks (the coordinator
+        has already decided collection is worthwhile) and return the wall
+        time, same per-block cost model as a regular episode."""
+        t = 0.0
+        ftl = self.ftl
+        p = self.p
+        t_rw = p.t_read + p.t_prog
+        channels = p.channels
+        t_erase = p.t_erase / channels
+        for _ in range(max_blocks):
+            if not len(ftl.seal_fifo):
+                break
+            copies = ftl.gc_reclaim_one()
+            t += copies * t_rw / channels
+            t += t_erase
+        return t
+
 
 # Prefill snapshot cache: benchmark sweeps construct the *same* array (same
 # params/occupancy/seed) once per sweep point; prefill+churn dominates that
@@ -575,7 +608,9 @@ class ArraySim:
                  trace: np.ndarray | None = None,
                  prefill_cache: bool = False,
                  layout: "Layout | None" = None,
-                 qos: "QosPolicy | None" = None):
+                 qos: "QosPolicy | None" = None,
+                 gc: "GcPolicy | None" = None):
+        from .gc_coord import GcPolicy
         from .raid import JBODLayout, Layout   # local: raid imports workloads
         self.n = n_ssds
         self.p = ssd
@@ -584,6 +619,10 @@ class ArraySim:
         if not isinstance(self.layout, Layout):
             raise TypeError(f"layout must be a core.raid.Layout, "
                             f"got {type(self.layout).__name__}")
+        self.gc = gc
+        if gc is not None and not isinstance(gc, GcPolicy):
+            raise TypeError(f"gc must be a core.gc_coord.GcPolicy, "
+                            f"got {type(gc).__name__}")
         self.qos = qos
         if qos is not None:
             # under QoS each tenant runs its own closed-loop source built
@@ -622,6 +661,7 @@ class ArraySim:
         self.last_latency: np.ndarray | None = None   # samples of last run()
         self.last_stall: np.ndarray | None = None     # stripe-stall samples
         self.last_tenant_latency: dict[int, np.ndarray] | None = None
+        self.last_gc_wait: np.ndarray | None = None   # stagger-wait samples
 
     # -- main loop -------------------------------------------------------------
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
@@ -635,6 +675,11 @@ class ArraySim:
         total_ops = warmup_ops + measure_ops
         loop = EventLoop()
         qd = wl.qd_per_ssd
+        coord = self.gc.make_coordinator(n, loop, self.layout.shard_unit(n)) \
+            if self.gc is not None else None
+        steer_on = coord is not None and coord.steer
+        steer_qd = min(qd, coord.steer_qd) if steer_on else qd
+        gc_busy = coord.gc_busy if coord is not None else None
 
         # Submitter streams: each has a window of w_total/n_streams tokens and
         # a single submission sequence. A full target queue parks the whole
@@ -661,6 +706,8 @@ class ArraySim:
                 ss.gc_time = 0.0
             ftl_snap[:] = [(s.ftl.writes, s.ftl.gc_copies, s.ftl.trims)
                            for s in ssds]
+            if coord is not None:
+                coord.begin_measure(loop.now)
 
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
@@ -722,8 +769,12 @@ class ArraySim:
 
         devices = [DeviceModel(loop, ssds[i], make_pull(i),
                                make_service_time(i), make_on_done(i),
-                               backlog=host_queues[i])
+                               backlog=host_queues[i],
+                               gc_coord=coord, dev_id=i)
                    for i in range(n)]
+        if coord is not None:
+            for i, d in enumerate(devices):
+                coord.attach(d, i)
 
         def enqueue(stream: int, ssd_i: int, lba: int, is_read: bool,
                     kind: int):
@@ -749,9 +800,12 @@ class ArraySim:
 
         def place(stream: int, ssd_i: int, lba: int, is_read: bool,
                   kind: int) -> bool:
-            """Enqueue or park; True if the stream may keep submitting."""
+            """Enqueue or park; True if the stream may keep submitting.
+            GC-aware steering caps admission to a GC-busy member at
+            ``steer_qd`` so the window's slots go to members that serve."""
             dev = devices[ssd_i]
-            if len(host_queues[ssd_i]) + len(dev.admitted) + dev.in_service < qd:
+            q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+            if len(host_queues[ssd_i]) + len(dev.admitted) + dev.in_service < q:
                 enqueue(stream, ssd_i, lba, is_read, kind)
                 return True
             parked[stream] = (ssd_i, lba, is_read, kind)
@@ -788,13 +842,18 @@ class ArraySim:
             w = waiters[ssd_i]
             hq = host_queues[ssd_i]
             dev = devices[ssd_i]
-            while w and len(hq) + len(dev.admitted) + dev.in_service < qd:
+            while w:
+                q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+                if len(hq) + len(dev.admitted) + dev.in_service >= q:
+                    break
                 stream = w.popleft()
                 tgt, lba, is_read, kind = parked[stream]
                 parked[stream] = None
                 enqueue(stream, tgt, lba, is_read, kind)
                 stream_fill(stream)
 
+        if coord is not None:
+            coord.on_release = unpark
         for si in range(n_streams):
             stream_fill(si)
 
@@ -811,6 +870,7 @@ class ArraySim:
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
+        gkw = self._gc_window_stats(coord, loop, span)
         return ArrayResults(
             iops=float(measured_arr.sum() / span),
             per_ssd_iops=measured_arr / span,
@@ -828,10 +888,24 @@ class ArraySim:
             gc_wa=gc_wa,
             array_wa=gc_wa,
             util_spread=float(util.max() - util.min()) if n else 0.0,
+            util_min=float(util.min()) if n else 0.0,
             trims=trims,
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
+            **gkw,
         )
+
+    def _gc_window_stats(self, coord, loop, span: float) -> dict:
+        """Close the coordinator's window and return the ``ArrayResults``
+        coordination kwargs (empty for ``gc=None`` — dataclass defaults
+        describe the reactive story). Also latches ``last_gc_wait`` for the
+        sharded pooled-sample merge."""
+        if coord is None:
+            self.last_gc_wait = None
+            return {}
+        coord.finalize(loop.now)
+        self.last_gc_wait = coord.wait_rec.values()
+        return coord.window_stats(span)
 
 
     # -- layout-general loop (RAID-0 / RAID-5; JBOD keeps the fast path) -----
@@ -856,6 +930,15 @@ class ArraySim:
         total_ops = warmup_ops + measure_ops
         loop = EventLoop()
         qd = wl.qd_per_ssd
+        coord = self.gc.make_coordinator(n, loop, self.layout.shard_unit(n)) \
+            if self.gc is not None else None
+        steer_on = coord is not None and coord.steer
+        steer_qd = min(qd, coord.steer_qd) if steer_on else qd
+        gc_busy = coord.gc_busy if coord is not None else None
+        if steer_on:
+            # RAID-5 read redirection: the planner serves reads of a GC-busy
+            # member by reconstruction from its row siblings
+            planner.gc_busy = gc_busy
 
         n_fg = max(1, wl.n_streams)
         rebuild_on = bool(getattr(planner, "rebuild", False))
@@ -892,6 +975,8 @@ class ArraySim:
                            for s in ssds]
             stat_snap[0] = planner.snapshot()
             stall.reset()
+            if coord is not None:
+                coord.begin_measure(loop.now)
 
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
@@ -1003,18 +1088,24 @@ class ArraySim:
 
         devices = [DeviceModel(loop, ssds[i], make_pull(i),
                                make_service_time(i), make_on_done(i),
-                               backlog=host_queues[i])
+                               backlog=host_queues[i],
+                               gc_coord=coord, dev_id=i)
                    for i in range(n)]
+        if coord is not None:
+            for i, d in enumerate(devices):
+                coord.attach(d, i)
 
         def try_drain(st: int) -> bool:
             """Place the stream's pending children in order; parks the stream
-            (False) when a target host queue is at the qd bound."""
+            (False) when a target host queue is at the qd bound (steering
+            caps GC-busy members at ``steer_qd``)."""
             pend = pending[st]
             while pend:
                 ssd_i, lba, kind, plan = pend[0]
                 dev = devices[ssd_i]
+                q = steer_qd if steer_on and gc_busy[ssd_i] else qd
                 if len(host_queues[ssd_i]) + len(dev.admitted) \
-                        + dev.in_service < qd:
+                        + dev.in_service < q:
                     pend.popleft()
                     enqueue_child(plan, ssd_i, lba, kind)
                 else:
@@ -1066,12 +1157,17 @@ class ArraySim:
             w = waiters[ssd_i]
             hq = host_queues[ssd_i]
             dev = devices[ssd_i]
-            while w and len(hq) + len(dev.admitted) + dev.in_service < qd:
+            while w:
+                q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+                if len(hq) + len(dev.admitted) + dev.in_service >= q:
+                    break
                 st = w.popleft()
                 parked[st] = False
                 if try_drain(st):
                     stream_fill(st)
 
+        if coord is not None:
+            coord.on_release = unpark
         for si in range(n_streams):
             stream_fill(si)
 
@@ -1091,6 +1187,7 @@ class ArraySim:
         sd = planner.delta(stat_snap[0])
         parity_wa = sd["child_writes"] / sd["logical_writes"] \
             if sd["logical_writes"] else 1.0
+        gkw = self._gc_window_stats(coord, loop, span)
         return ArrayResults(
             iops=float(summ.n / span),
             per_ssd_iops=measured_arr / span,
@@ -1112,6 +1209,7 @@ class ArraySim:
             stripe_stall_mean=stall_summ.mean,
             stripe_stall_p99=stall_summ.p99,
             util_spread=float(util.max() - util.min()) if n else 0.0,
+            util_min=float(util.min()) if n else 0.0,
             logical_writes=sd["logical_writes"],
             child_writes=sd["child_writes"],
             child_reads=sd["child_reads"],
@@ -1122,8 +1220,10 @@ class ArraySim:
             rebuild_rows=rebuild_done[0],
             trims=trims,
             trim_parity_skipped=sd["trim_parity_skipped"],
+            steered_reads=sd["steered_reads"],
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
+            **gkw,
         )
 
     # -- QoS admission loop (per-tenant streams; core/qos.py) ----------------
@@ -1160,6 +1260,13 @@ class ArraySim:
         loop = EventLoop()
         qd = wl.qd_per_ssd
         W = max(1, wl.w_total)
+        coord = self.gc.make_coordinator(n, loop, self.layout.shard_unit(n)) \
+            if self.gc is not None else None
+        steer_on = coord is not None and coord.steer
+        steer_qd = min(qd, coord.steer_qd) if steer_on else qd
+        gc_busy = coord.gc_busy if coord is not None else None
+        if steer_on:
+            planner.gc_busy = gc_busy
 
         ids = list(policy.ids)
         n_t = len(ids)
@@ -1210,6 +1317,8 @@ class ArraySim:
             now = loop.now
             for t in ids:
                 thr_snap[t] = sched.throttle_time(t, now)
+            if coord is not None:
+                coord.begin_measure(loop.now)
 
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
@@ -1334,16 +1443,21 @@ class ArraySim:
 
         devices = [DeviceModel(loop, ssds[i], make_pull(i),
                                make_service_time(i), make_on_done(i),
-                               backlog=host_queues[i])
+                               backlog=host_queues[i],
+                               gc_coord=coord, dev_id=i)
                    for i in range(n)]
+        if coord is not None:
+            for i, d in enumerate(devices):
+                coord.attach(d, i)
 
         def try_drain(st: int) -> bool:
             pend = pending[st]
             while pend:
                 ssd_i, lba, kind, plan = pend[0]
                 dev = devices[ssd_i]
+                q = steer_qd if steer_on and gc_busy[ssd_i] else qd
                 if len(host_queues[ssd_i]) + len(dev.admitted) \
-                        + dev.in_service < qd:
+                        + dev.in_service < q:
                     pend.popleft()
                     enqueue_child(plan, ssd_i, lba, kind)
                 else:
@@ -1429,7 +1543,10 @@ class ArraySim:
             hq = host_queues[ssd_i]
             dev = devices[ssd_i]
             freed_tenant = False
-            while w and len(hq) + len(dev.admitted) + dev.in_service < qd:
+            while w:
+                q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+                if len(hq) + len(dev.admitted) + dev.in_service >= q:
+                    break
                 st = w.popleft()
                 parked[st] = False
                 if try_drain(st):
@@ -1440,6 +1557,8 @@ class ArraySim:
             if freed_tenant:
                 qos_fill()
 
+        if coord is not None:
+            coord.on_release = unpark
         qos_fill()
         if rebuild_on:
             rebuild_fill()
@@ -1465,6 +1584,7 @@ class ArraySim:
                           for t in ids}
         tstats, share_error = build_tenant_stats(policy, trec, span,
                                                  throttle_times)
+        gkw = self._gc_window_stats(coord, loop, span)
         return ArrayResults(
             iops=float(summ.n / span),
             per_ssd_iops=measured_arr / span,
@@ -1486,6 +1606,7 @@ class ArraySim:
             stripe_stall_mean=stall_summ.mean,
             stripe_stall_p99=stall_summ.p99,
             util_spread=float(util.max() - util.min()) if n else 0.0,
+            util_min=float(util.min()) if n else 0.0,
             logical_writes=sd["logical_writes"],
             child_writes=sd["child_writes"],
             child_reads=sd["child_reads"],
@@ -1496,10 +1617,12 @@ class ArraySim:
             rebuild_rows=rebuild_done[0],
             trims=trims,
             trim_parity_skipped=sd["trim_parity_skipped"],
+            steered_reads=sd["steered_reads"],
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
             tenant_stats=tstats,
             share_error=share_error,
+            **gkw,
         )
 
 

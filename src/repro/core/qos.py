@@ -36,11 +36,19 @@ Everything here is deterministic: the scheduler consumes no RNG, so a fixed
 seed still produces byte-identical runs, and ``qos=None`` leaves every
 existing simulator path untouched (goldens pinned in
 ``tests/test_golden_determinism.py`` / ``tests/test_qos.py``).
+
+Composition with GC coordination (``core/gc_coord.py``): QoS arbitrates
+WHICH tenant's op takes the next host window slot; a ``GcPolicy`` decides
+WHEN each member collects (and, with ``steer=True``, caps admission to
+GC-busy members). The two compose orthogonally in ``ArraySim(qos=...,
+gc=...)`` — the scheduler's pick happens at window admission, the
+coordinator's gate at device service — and the composition is pinned by
+``tests/test_gc_coord.py::test_qos_raid5_staggered_composition``.
 """
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np

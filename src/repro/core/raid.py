@@ -178,6 +178,8 @@ def _new_stats() -> dict:
         "deferred_writes": 0,     # seq-run writes that skipped the RMW
         "catchup_rows": 0,        # broken-run rows finished by catch-up plans
         "degraded_reads": 0,      # reads served by reconstruction
+        "steered_reads": 0,       # healthy reads redirected to reconstruction
+                                  # around a GC-busy member (gc_coord steer)
         "trims": 0,               # logical trims planned
         "trim_parity_skipped": 0, # RAID-5 TRIMs whose parity update was
                                   # skipped (modeling gap: parity left stale
@@ -313,6 +315,13 @@ class _Raid5Planner(_BasePlanner):
     parity) so parity is eventually consistent for every touched row.
     """
 
+    # GC-aware read steering (core/gc_coord.py, ``steer=True``): the run
+    # loop points this at the coordinator's per-SSD busy list; reads whose
+    # target member is in (or about to enter) GC are then served by
+    # reconstruction from the row's siblings instead of waiting out the
+    # pause. None (the default) keeps planning pure and byte-identical.
+    gc_busy: "list[bool] | None" = None
+
     def __init__(self, smap: StripeMap, rows: int, stripe_width: int,
                  degraded: int, rebuild: bool):
         super().__init__(smap, rows, stripe_width, degraded)
@@ -345,6 +354,9 @@ class _Raid5Planner(_BasePlanner):
         k = e_i - s_i
         st["logical_reads"] += k
         if not self.degraded:
+            busy = self.gc_busy
+            if busy is not None:
+                return self._plan_read_steered(g, r, s_i, e_i, busy)
             children = [(smap.data_member(g, r, i), r, OP_READ)
                         for i in range(s_i, e_i)]
             st["child_reads"] += k
@@ -366,6 +378,41 @@ class _Raid5Planner(_BasePlanner):
                         seen.add(o_ssd)
                         need.append((o_ssd, o_lba))
         st["degraded_reads"] += reconstructed
+        st["child_reads"] += len(need)
+        children = [(ssd, lba, OP_READ) for ssd, lba in need]
+        return Plan([children], OP_READ)
+
+    def _plan_read_steered(self, g: int, r: int, s_i: int, e_i: int,
+                           busy: list) -> Plan:
+        """Healthy-array read with GC-aware steering: a page whose member is
+        GC-busy is reconstructed from the row's other members (data XOR
+        parity) — g-1 short reads on serving members instead of one read
+        parked behind a multi-ms GC pause — but only when EVERY sibling is
+        itself GC-free (otherwise reconstruction would just move the wait).
+        Degraded arrays skip steering: the read path is already rebuilt
+        around the dead member and has no redundancy left to steer with."""
+        smap = self.smap
+        st = self.stats
+        need: list[tuple[int, int]] = []     # ordered, deduped (ssd, lba)
+        seen: set[int] = set()
+        steered = 0
+        for i in range(s_i, e_i):
+            ssd = smap.data_member(g, r, i)
+            if busy[ssd]:
+                sibs = [(o_ssd, o_lba)
+                        for o_ssd, o_lba, _ in smap.row_members(g, r)
+                        if o_ssd != ssd]
+                if all(not busy[o_ssd] for o_ssd, _ in sibs):
+                    steered += 1
+                    for o_ssd, o_lba in sibs:
+                        if o_ssd not in seen:
+                            seen.add(o_ssd)
+                            need.append((o_ssd, o_lba))
+                    continue
+            if ssd not in seen:
+                seen.add(ssd)
+                need.append((ssd, r))
+        st["steered_reads"] += steered
         st["child_reads"] += len(need)
         children = [(ssd, lba, OP_READ) for ssd, lba in need]
         return Plan([children], OP_READ)

@@ -103,11 +103,12 @@ def _shard_qos(qos, sz: int, n_ssds: int):
 
 def _run_shard(args):
     (sz, ssd, occupancy, wl, seed, measure_ops, warmup_ops,
-     prefill_cache, layout, qos) = args
+     prefill_cache, layout, qos, gc) = args
     sim = ArraySim(sz, ssd, occupancy, wl, seed=seed,
-                   prefill_cache=prefill_cache, layout=layout, qos=qos)
+                   prefill_cache=prefill_cache, layout=layout, qos=qos, gc=gc)
     res = sim.run(measure_ops, warmup_ops)
-    return res, sim.last_latency, sim.last_stall, sim.last_tenant_latency
+    return (res, sim.last_latency, sim.last_stall, sim.last_tenant_latency,
+            sim.last_gc_wait)
 
 
 def pool_samples(samples: list[np.ndarray | None]) -> np.ndarray:
@@ -119,7 +120,8 @@ def pool_samples(samples: list[np.ndarray | None]) -> np.ndarray:
 def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
                   stall_pooled: np.ndarray | None = None,
                   tenant_pooled: "dict[int, np.ndarray] | None" = None,
-                  qos=None) -> ArrayResults:
+                  qos=None,
+                  gc_wait_pooled: np.ndarray | None = None) -> ArrayResults:
     """Merge per-shard results: rates and layout counters add, per-SSD
     arrays concatenate, write-amplification ratios are recomputed from the
     pooled counters (never averaged), and latency / stripe-stall percentiles
@@ -127,7 +129,14 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
     ``qos`` policy, the per-tenant block merges the same way: tenant ops and
     throughput add, tenant percentiles are exact over ``tenant_pooled``
     (``qos.pool_tenant_samples``), shares/share_error are recomputed from
-    the pooled op counts, and ``throttle_time`` reports the worst shard."""
+    the pooled op counts, and ``throttle_time`` reports the worst shard.
+
+    GC-coordination block (``core/gc_coord.py``): each shard runs its own
+    coordinator (stripe groups never span shards, so neither do leases);
+    ``stagger_wait`` percentiles are exact over ``gc_wait_pooled``,
+    ``gc_overlap_frac`` merges span-weighted, ``idle_gc_frac`` merges
+    weighted by each shard's GC seconds, counters add, and ``util_min`` is
+    the min over the concatenated per-SSD utilizations."""
     if pooled.size:
         p50, p95, p99 = np.percentile(pooled, [50.0, 95.0, 99.0])
         summ = LatencySummary(mean=float(pooled.mean()), p50=float(p50),
@@ -152,6 +161,19 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
         tstats, share_error = merge_tenant_stats(
             qos, [p.tenant_stats for p in parts if p.tenant_stats],
             tenant_pooled or {})
+    if gc_wait_pooled is not None and gc_wait_pooled.size:
+        wait_mean = float(gc_wait_pooled.mean())
+        wait_p99 = float(np.percentile(gc_wait_pooled, 99.0))
+    else:
+        wait_mean = wait_p99 = 0.0
+    span_total = sum(p.sim_time for p in parts)
+    overlap = sum(p.gc_overlap_frac * p.sim_time for p in parts) \
+        / span_total if span_total > 0 else 0.0
+    # per-shard GC seconds (window accounting) weight the idle fraction
+    gc_secs = [float(p.gc_pause_frac.sum()) * p.sim_time for p in parts]
+    gc_sec_total = sum(gc_secs)
+    idle_frac = sum(p.idle_gc_frac * w for p, w in zip(parts, gc_secs)) \
+        / gc_sec_total if gc_sec_total > 0 else 0.0
     return ArrayResults(
         iops=float(sum(p.iops for p in parts)),
         per_ssd_iops=np.concatenate([p.per_ssd_iops for p in parts]),
@@ -183,10 +205,19 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
         rebuild_rows=sum(p.rebuild_rows for p in parts),
         trims=sum(p.trims for p in parts),
         trim_parity_skipped=sum(p.trim_parity_skipped for p in parts),
+        steered_reads=sum(p.steered_reads for p in parts),
         ftl_writes=ftl_writes,
         ftl_gc_copies=ftl_gc_copies,
         tenant_stats=tstats,
         share_error=share_error,
+        gc_policy=parts[0].gc_policy if parts else "reactive",
+        gc_overlap_frac=overlap,
+        stagger_wait_mean=wait_mean,
+        stagger_wait_p99=wait_p99,
+        util_min=float(util.min()) if util.size else 0.0,
+        gc_starts=sum(p.gc_starts for p in parts),
+        gc_forced=sum(p.gc_forced for p in parts),
+        idle_gc_frac=idle_frac,
     )
 
 
@@ -245,12 +276,16 @@ class ShardedArraySim:
                  occupancy: float = 0.6, workload: Workload = Workload(),
                  seed: int = 0, n_shards: int | None = None,
                  parallel: bool = True, prefill_cache: bool = True,
-                 layout=None, qos=None):
+                 layout=None, qos=None, gc=None):
         from .raid import JBODLayout
         self.layout = layout if layout is not None else JBODLayout()
         self.qos = qos               # QosPolicy | None (frozen — ships to
                                      # workers; each shard runs its own
                                      # scheduler over its slice)
+        self.gc = gc                 # GcPolicy | None (frozen — ships to
+                                     # workers; each shard runs its own
+                                     # coordinator: stripe groups never span
+                                     # shards, so neither do GC leases)
         unit = self.layout.shard_unit(n_ssds)   # SSDs per stripe group
         if n_ssds % unit:
             raise ValueError(f"n_ssds={n_ssds} not a multiple of the "
@@ -267,9 +302,20 @@ class ShardedArraySim:
         self.prefill_cache = prefill_cache
         # partition whole stripe groups, then scale back to SSD counts
         self.sizes = [u * unit for u in shard_sizes(units, n_shards)]
+        if gc is not None and len(self.sizes) > 1:
+            from .gc_coord import StaggeredGc
+            if isinstance(gc, StaggeredGc) and gc.scope == "array":
+                # coordinators are per-shard, so an "array"-wide lease would
+                # silently become per-shard (n_shards x max_concurrent
+                # concurrent collectors) — refuse instead of mislabeling
+                raise ValueError(
+                    "StaggeredGc(scope='array') couples every SSD through "
+                    "one lease pool and cannot be sharded; use "
+                    "scope='group' (lease per stripe group) or n_shards=1")
         self.last_latency: np.ndarray | None = None
         self.last_stall: np.ndarray | None = None
         self.last_tenant_latency: dict[int, np.ndarray] | None = None
+        self.last_gc_wait: np.ndarray | None = None
         self.last_wall_s = 0.0       # observed wall clock of the last run()
 
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
@@ -283,7 +329,7 @@ class ShardedArraySim:
              _shard_workload(self.wl, sz, self.n),
              shard_seed(self.seed, k), measures[k], warmups[k],
              self.prefill_cache, self.layout,
-             _shard_qos(self.qos, sz, self.n))
+             _shard_qos(self.qos, sz, self.n), self.gc)
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -296,16 +342,18 @@ class ShardedArraySim:
         else:
             out = [_run_shard(a) for a in args]
         self.last_wall_s = time.perf_counter() - t0
-        parts = [r for r, _, _, _ in out]
-        pooled = pool_samples([s for _, s, _, _ in out])
-        stall_pooled = pool_samples([s for _, _, s, _ in out])
+        parts = [r for r, _, _, _, _ in out]
+        pooled = pool_samples([s for _, s, _, _, _ in out])
+        stall_pooled = pool_samples([s for _, _, s, _, _ in out])
+        gc_wait_pooled = pool_samples([s for _, _, _, _, s in out])
         tenant_pooled = None
         if self.qos is not None:
             from .qos import pool_tenant_samples
-            tenant_pooled = pool_tenant_samples([tl for _, _, _, tl in out])
+            tenant_pooled = pool_tenant_samples([tl for _, _, _, tl, _ in out])
         merged = merge_results(parts, pooled, stall_pooled, tenant_pooled,
-                               self.qos)
+                               self.qos, gc_wait_pooled)
         self.last_latency = pooled if pooled.size else None
         self.last_stall = stall_pooled if stall_pooled.size else None
         self.last_tenant_latency = tenant_pooled
+        self.last_gc_wait = gc_wait_pooled if gc_wait_pooled.size else None
         return merged

@@ -4,5 +4,5 @@ from .collectives import (CompressionState, cross_pod_grad_reduce,
                           init_compression)
 
 __all__ = ["MeshAxes", "cache_specs", "data_spec", "param_specs",
-           "shape_shardings", "CompressionState", "compressed_psum",
+           "shape_shardings", "CompressionState", "cross_pod_grad_reduce",
            "init_compression"]

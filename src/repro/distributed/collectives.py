@@ -16,13 +16,11 @@ lineage). Used by ``launch/train.py`` under ``--compress-grads``.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
-from jax.sharding import PartitionSpec as P
 
 
 class CompressionState(NamedTuple):

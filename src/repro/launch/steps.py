@@ -6,8 +6,6 @@ plus the shard_map inside ``moe_ffn``.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp

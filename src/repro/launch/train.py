@@ -17,7 +17,6 @@ import time
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 

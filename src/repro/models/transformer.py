@@ -16,7 +16,6 @@ All functions are pure; distribution comes from the shardings pjit places on
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax

@@ -23,7 +23,7 @@ TPU-resident twin for scoring at scale.
 from __future__ import annotations
 
 import threading
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
@@ -193,7 +193,6 @@ class PagedAllocator:
 
     def flush_candidates(self, set_idx: int):
         sl = self._slots(set_idx)
-        base = set_idx * self.set_size
         tags = self.tags[sl]
         flushable = self.dirty[sl] & self.full[sl] & (tags != -1)
         if not flushable.any():

@@ -8,7 +8,6 @@ writes are in-place on device.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -9,8 +9,8 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import get_config, reduced
 from repro.distributed.sharding import (_fix_divisibility, data_spec,
                                         param_specs)
-from repro.launch.hlo_cost import analyze, parse_hlo
-from repro.optim import adamw_init, adamw_update, cosine_schedule, global_norm
+from repro.launch.hlo_cost import analyze
+from repro.optim import adamw_init, adamw_update, cosine_schedule
 
 
 def test_fix_divisibility_drops_nonfitting_axes():
@@ -118,7 +118,6 @@ def test_hlo_cost_parser_counts_loops():
 
 
 def test_hlo_cost_parser_collectives():
-    import os
     from repro.launch.hlo_cost import analyze as _an
     # single-device module: no collectives
     c = jax.jit(lambda x: x @ x).lower(

@@ -1,7 +1,6 @@
 """Dirty-page flusher policy tests (paper §3.3)."""
 from collections import defaultdict
 
-import pytest
 
 from repro.core.flusher import DirtyPageFlusher, FlushRequest, StalenessChecker
 

@@ -1,0 +1,443 @@
+"""Array-level GC coordination (core/gc_coord.py): policy units, golden
+byte-identity of gc=None / ReactiveGc, staggered lease semantics, idle-GC
+triggering, steering, QoS/RAID composition, and the sharded merge of the
+new counters."""
+import numpy as np
+import pytest
+
+from repro.core.engine import EventLoop
+from repro.core.gc_coord import (IdleGc, ReactiveGc, StaggeredGc,
+                                 gc_policy_from_name)
+from repro.core.gc_sim import ArraySim, SSDParams, Workload
+from repro.core.qos import QosPolicy, TenantSpec
+from repro.core.raid import Raid5Layout
+from repro.core.sharded import ShardedArraySim
+
+from test_golden_determinism import GOLDEN_ARRAY_UNIFORM, GOLDEN_RAID5, P
+
+SMALL = SSDParams(capacity_pages=4096)
+WL3 = Workload(w_total=96, qd_per_ssd=32, n_streams=3)
+
+
+# ---------------------------------------------------------------------------
+# policy specs
+# ---------------------------------------------------------------------------
+
+def test_policies_frozen_hashable_picklable():
+    import pickle
+    for pol in (ReactiveGc(), StaggeredGc(max_concurrent=2, scope="group"),
+                IdleGc(watermark=20, qd_idle=1), ReactiveGc(steer=True)):
+        assert pickle.loads(pickle.dumps(pol)) == pol
+        hash(pol)
+        with pytest.raises(Exception):
+            pol.max_concurrent = 9   # frozen
+
+    assert ReactiveGc().name == "reactive"
+    assert StaggeredGc().name == "staggered"
+    assert IdleGc().name == "idle"
+    assert gc_policy_from_name("staggered", max_concurrent=3) \
+        == StaggeredGc(max_concurrent=3)
+    with pytest.raises(ValueError):
+        gc_policy_from_name("nope")
+
+
+def test_bad_policy_rejected():
+    with pytest.raises(TypeError):
+        ArraySim(2, SMALL, 0.6, WL3, gc="staggered")
+    with pytest.raises(ValueError):
+        # bad scope surfaces at coordinator build
+        StaggeredGc(scope="rack").make_coordinator(4, EventLoop())
+
+
+# ---------------------------------------------------------------------------
+# lease accounting (coordinator unit tests on stub devices)
+# ---------------------------------------------------------------------------
+
+class _StubFtl:
+    def __init__(self, free=20, low=12):
+        self.free_blocks = list(range(free))
+        self._gc_low = low
+
+    def need_gc(self):
+        return len(self.free_blocks) <= self._gc_low
+
+    def gc_satisfied(self):
+        return True
+
+
+class _StubServer:
+    def __init__(self, free=20):
+        self.ftl = _StubFtl(free)
+
+
+class _StubDev:
+    """Just enough of DeviceModel for GcCoordinator.gate()."""
+
+    def __init__(self, dev_id, free=20):
+        self.dev_id = dev_id
+        self.server = _StubServer(free)
+        self.in_service = 0
+        self.gc_granted = False
+        self.started = 0
+        self.kicked = 0
+
+    def _start_gc(self):
+        self.started += 1
+
+    def kick(self):
+        self.kicked += 1
+
+
+def _coord(policy, n, unit=1):
+    loop = EventLoop()
+    c = policy.make_coordinator(n, loop, unit)
+    devs = [_StubDev(i) for i in range(n)]
+    for i, d in enumerate(devs):
+        c.attach(d, i)
+    return c, devs, loop
+
+
+def test_staggered_lease_accounting():
+    c, devs, loop = _coord(StaggeredGc(max_concurrent=1, early_blocks=0), 3)
+    for d in devs:
+        d.server.ftl.free_blocks = list(range(10))   # all need GC
+    assert c.gate(devs[0]) is True                   # first grab wins
+    assert devs[0].gc_granted and devs[0].started == 1
+    assert c.gate(devs[1]) is False                  # deferred, keeps serving
+    assert c.gate(devs[2]) is False
+    assert c.active == [1] and list(c.waiting[0]) == [1, 2]
+    assert c.gate(devs[1]) is False                  # no duplicate enqueue
+    assert list(c.waiting[0]) == [1, 2]
+    assert c.gc_busy == [True, True, True]           # all in-or-about-to-enter
+
+    c.on_gc_start(devs[0], dt=1e-3)
+    loop.now = 5e-3
+    c.on_gc_end(devs[0])                             # FIFO handover -> dev 1
+    assert not devs[0].gc_granted
+    assert devs[1].gc_granted and devs[1].started == 1
+    assert devs[2].started == 0 and list(c.waiting[0]) == [2]
+    assert len(c.wait_rec) == 1                      # dev 1's wait recorded
+    assert c.wait_rec.values()[0] == pytest.approx(5e-3)
+
+
+def test_staggered_hard_floor_override():
+    pol = StaggeredGc(max_concurrent=1, floor_blocks=4, early_blocks=0)
+    c, devs, loop = _coord(pol, 2)
+    devs[0].server.ftl.free_blocks = list(range(10))
+    devs[1].server.ftl.free_blocks = list(range(10))
+    assert c.gate(devs[0]) is True
+    assert c.gate(devs[1]) is False                  # lease taken
+    devs[1].server.ftl.free_blocks = list(range(4))  # at the floor
+    assert c.gate(devs[1]) is True                   # forced through
+    assert devs[1].started == 1
+    assert c.forced == 1
+    assert c.active == [2]                           # override exceeds the cap
+
+
+def test_staggered_group_scope_domains():
+    pol = StaggeredGc(max_concurrent=1, scope="group", early_blocks=0)
+    c, devs, loop = _coord(pol, 4, unit=2)
+    assert c.dom == [0, 0, 1, 1]
+    for d in devs:
+        d.server.ftl.free_blocks = list(range(10))
+    assert c.gate(devs[0]) is True                   # group 0 lease
+    assert c.gate(devs[2]) is True                   # group 1 lease (separate)
+    assert c.gate(devs[1]) is False                  # group 0 full
+    assert c.active == [1, 1]
+
+
+def test_staggered_early_trigger_takes_free_lease():
+    pol = StaggeredGc(max_concurrent=1, early_blocks=2)
+    c, devs, loop = _coord(pol, 2)
+    f = devs[0].server.ftl
+    f.free_blocks = list(range(14))                  # low(12) + 2: early zone
+    f.gc_satisfied = lambda: False
+    assert not f.need_gc()
+    assert c.gate(devs[0]) is True                   # proactive grant
+    assert devs[0].started == 1
+    # a second device in the early zone defers silently (lease busy, no
+    # reactive pressure -> not queued)
+    g = devs[1].server.ftl
+    g.free_blocks = list(range(14))
+    g.gc_satisfied = lambda: False
+    assert c.gate(devs[1]) is False
+    assert not c.waiting[0]
+
+
+def test_reactive_gate_never_defers():
+    c, devs, loop = _coord(ReactiveGc(), 3)
+    for d in devs:
+        d.server.ftl.free_blocks = list(range(5))
+    assert all(c.gate(d) for d in devs)
+    assert all(d.started == 1 for d in devs)
+
+
+def test_overlap_integral():
+    c, devs, loop = _coord(ReactiveGc(), 2)
+    loop.now = 0.0
+    c.on_gc_start(devs[0], dt=1.0)
+    loop.now = 1.0
+    c.on_gc_start(devs[1], dt=1.0)                   # 2 in GC from t=1
+    loop.now = 3.0
+    c.on_gc_end(devs[0])                             # overlap [1, 3] = 2.0
+    loop.now = 4.0
+    c.on_gc_end(devs[1])
+    c.finalize(4.0)
+    assert c.window_stats(4.0)["gc_overlap_frac"] == pytest.approx(0.5)
+
+
+# ---------------------------------------------------------------------------
+# golden byte-identity: gc=None == ReactiveGc == historical goldens
+# ---------------------------------------------------------------------------
+
+def test_reactive_reproduces_golden_uniform():
+    """ReactiveGc (and the whole coordinator plumbing) may not perturb the
+    fast path: the PR 2 golden must reproduce byte-for-byte."""
+    for gc in (None, ReactiveGc()):
+        sim = ArraySim(3, P, 0.6, WL3, seed=42, gc=gc)
+        r = sim.run(6000)
+        assert r.iops == GOLDEN_ARRAY_UNIFORM["iops"]
+        assert r.p99_latency == GOLDEN_ARRAY_UNIFORM["p99"]
+        assert r.sim_time == GOLDEN_ARRAY_UNIFORM["sim_time"]
+        assert sum(s.ftl.writes for s in sim.ssds) \
+            == GOLDEN_ARRAY_UNIFORM["writes"]
+        assert sum(s.ftl.gc_copies for s in sim.ssds) \
+            == GOLDEN_ARRAY_UNIFORM["gc_copies"]
+        assert [float(x) for x in r.per_ssd_iops] \
+            == GOLDEN_ARRAY_UNIFORM["per_ssd"]
+
+
+def test_reactive_reproduces_golden_raid5():
+    """Same identity through the layout loop (planner + coordination)."""
+    wl = Workload(w_total=96, qd_per_ssd=32, n_streams=6, read_frac=0.3)
+    for gc in (None, ReactiveGc()):
+        r = ArraySim(6, P, 0.6, wl, seed=7, layout=Raid5Layout(group=6),
+                     gc=gc).run(5000)
+        for k, want in GOLDEN_RAID5.items():
+            assert getattr(r, k) == want, f"{k} (gc={gc})"
+        assert r.steered_reads == 0
+
+
+def test_reactive_coordination_block_populated():
+    r = ArraySim(3, P, 0.6, WL3, seed=42, gc=ReactiveGc()).run(6000)
+    assert r.gc_policy == "reactive"
+    assert r.gc_starts > 0
+    assert r.gc_forced == 0
+    assert r.stagger_wait_mean == 0.0        # reactive never waits
+    assert r.idle_gc_frac == 0.0
+    assert 0.0 < r.util_min <= r.util.min() + 1e-12
+    # gc=None leaves the defaults
+    r0 = ArraySim(3, P, 0.6, WL3, seed=42).run(6000)
+    assert r0.gc_starts == 0 and r0.gc_overlap_frac == 0.0
+    assert r0.util_min == pytest.approx(float(r0.util.min()))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end policy behavior
+# ---------------------------------------------------------------------------
+
+def test_staggered_array_scope_kills_overlap():
+    """k=1 array-wide: at most one member in GC at any instant, so the
+    overlap integral is zero unless the hard floor forces through."""
+    wl = Workload(w_total=64, qd_per_ssd=16, n_streams=4)
+    r_re = ArraySim(4, SMALL, 0.6, wl, seed=5, gc=ReactiveGc()).run(8000)
+    r_st = ArraySim(4, SMALL, 0.6, wl, seed=5,
+                    gc=StaggeredGc(max_concurrent=1)).run(8000)
+    assert r_re.gc_overlap_frac > 0.0
+    if r_st.gc_forced == 0:
+        assert r_st.gc_overlap_frac == 0.0
+    assert r_st.gc_overlap_frac < r_re.gc_overlap_frac
+    assert len(ArraySim(4, SMALL, 0.6, wl, seed=5).run(0).per_ssd_iops) == 4
+
+
+def test_staggered_records_waits_and_makes_progress():
+    wl = Workload(w_total=64, qd_per_ssd=16, n_streams=4)
+    sim = ArraySim(4, SMALL, 0.6, wl, seed=5,
+                   gc=StaggeredGc(max_concurrent=1, early_blocks=0))
+    r = sim.run(8000)
+    assert r.iops > 0
+    assert r.stagger_wait_p99 >= r.stagger_wait_mean > 0.0
+    assert sim.last_gc_wait is not None and sim.last_gc_wait.size > 0
+    # every device kept collecting (no member starved of GC)
+    assert all(s.ftl.erases > 0 for s in sim.ssds)
+    # the hard floor held: no device ever ran out of free blocks
+    assert all(s.ftl.n_free_blocks > 0 for s in sim.ssds)
+
+
+def test_idle_gc_triggers_in_idle_windows():
+    """Bursty load: IdleGc moves collection into the OFF windows (all GC
+    time is idle-attributed) and cuts the p99 the reactive pauses caused."""
+    wl = Workload(w_total=64, qd_per_ssd=32, n_streams=2, scenario="bursty",
+                  burst_on=2e-3, burst_off=4e-3)
+    r_re = ArraySim(2, SMALL, 0.6, wl, seed=3, gc=ReactiveGc()).run(4000)
+    r_id = ArraySim(2, SMALL, 0.6, wl, seed=3,
+                    gc=IdleGc(watermark=24)).run(4000)
+    assert r_id.idle_gc_frac > 0.9
+    assert r_re.idle_gc_frac == 0.0
+    assert r_id.gc_starts > r_re.gc_starts        # many small steps
+    assert r_id.p99_latency < r_re.p99_latency
+
+
+def test_idle_probe_preconditions():
+    """The idle probe only fires on a truly idle device below the watermark
+    with sealed blocks to reclaim."""
+    pol = IdleGc(watermark=24, qd_idle=0)
+    c, devs, loop = _coord(pol, 1)
+    d = devs[0]
+    started = []
+    d._start_idle_gc = lambda blocks: started.append(blocks)
+    d.admitted = []
+    f = d.server.ftl
+    f.free_blocks = list(range(20))                  # below watermark
+    f.seal_fifo = [1, 2, 3]
+    c.idle_probe(d)
+    assert started == [pol.step_blocks]              # fires
+    d.in_service = 1
+    c.idle_probe(d)                                  # busy -> no
+    d.in_service = 0
+    d.admitted = [object()]
+    c.idle_probe(d)                                  # queued work -> no
+    d.admitted = []
+    f.free_blocks = list(range(30))                  # above watermark -> no
+    c.idle_probe(d)
+    f.free_blocks = list(range(20))
+    f.seal_fifo = []                                 # nothing sealed -> no
+    c.idle_probe(d)
+    assert started == [pol.step_blocks]
+    f.seal_fifo = [1]
+    d.gc_granted = True                              # already leased -> no
+    c.idle_probe(d)
+    assert started == [pol.step_blocks]
+
+
+def test_steering_admission_cap_and_read_redirect():
+    """steer=True: admission to GC-busy members is capped and RAID-5 reads
+    of a GC-busy member are served by sibling reconstruction."""
+    wl = Workload(w_total=96, qd_per_ssd=32, n_streams=6, read_frac=0.5)
+    gc = StaggeredGc(max_concurrent=1, scope="group", steer=True, steer_qd=2)
+    sim = ArraySim(6, SMALL, 0.6, wl, seed=2, layout=Raid5Layout(group=6),
+                   gc=gc)
+    r = sim.run(8000)
+    assert r.steered_reads > 0
+    assert r.iops > 0
+    # steering must not break plan accounting: reads+writes balance
+    assert r.child_reads > 0 and r.child_writes > 0
+    r_off = ArraySim(6, SMALL, 0.6, wl, seed=2, layout=Raid5Layout(group=6),
+                     gc=StaggeredGc(max_concurrent=1, scope="group")).run(8000)
+    assert r_off.steered_reads == 0
+
+
+def test_qos_raid5_staggered_composition():
+    """QoS weighted tenants + RAID-5 + staggered coordination compose: the
+    run completes, shares are enforced, and the coordination block reports
+    the staggered policy."""
+    pol = QosPolicy(tenants=(TenantSpec(0, weight=3.0),
+                             TenantSpec(1, weight=1.0)))
+    r = ArraySim(6, SMALL, 0.6, Workload(w_total=48, qd_per_ssd=48),
+                 seed=3, layout=Raid5Layout(group=6), qos=pol,
+                 gc=StaggeredGc(max_concurrent=1, scope="group")).run(12000)
+    assert r.gc_policy == "staggered"
+    assert r.gc_starts > 0
+    assert r.tenant_stats is not None
+    s0, s1 = r.tenant_stats[0], r.tenant_stats[1]
+    assert s0.ops > s1.ops                 # weight 3 beats weight 1
+    assert r.share_error < 0.15
+    # reactive-vs-none identity holds under QoS too
+    a = ArraySim(6, SMALL, 0.6, Workload(w_total=48, qd_per_ssd=48),
+                 seed=3, layout=Raid5Layout(group=6), qos=pol).run(6000)
+    b = ArraySim(6, SMALL, 0.6, Workload(w_total=48, qd_per_ssd=48),
+                 seed=3, layout=Raid5Layout(group=6), qos=pol,
+                 gc=ReactiveGc()).run(6000)
+    assert a.iops == b.iops and a.p99_latency == b.p99_latency
+
+
+# ---------------------------------------------------------------------------
+# sharded: serial == parallel bit-identity for the new counters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gc", [
+    StaggeredGc(max_concurrent=1, scope="group"),
+    StaggeredGc(max_concurrent=1, scope="group", steer=True),
+    IdleGc(watermark=24),
+])
+def test_sharded_serial_equals_parallel_gc(gc):
+    wl = Workload(w_total=48, qd_per_ssd=16, n_streams=6)
+    kw = dict(layout=Raid5Layout(group=3), gc=gc, seed=5, n_shards=2)
+    a = ShardedArraySim(6, SMALL, 0.6, wl, parallel=True, **kw).run(6000)
+    b = ShardedArraySim(6, SMALL, 0.6, wl, parallel=False, **kw).run(6000)
+    assert a.iops == b.iops
+    assert a.p99_latency == b.p99_latency
+    np.testing.assert_array_equal(a.per_ssd_iops, b.per_ssd_iops)
+    # the coordination block merges bit-identically
+    assert a.gc_policy == b.gc_policy == gc.name
+    assert a.gc_overlap_frac == b.gc_overlap_frac
+    assert a.stagger_wait_mean == b.stagger_wait_mean
+    assert a.stagger_wait_p99 == b.stagger_wait_p99
+    assert a.gc_starts == b.gc_starts > 0
+    assert a.gc_forced == b.gc_forced
+    assert a.idle_gc_frac == b.idle_gc_frac
+    assert a.util_min == b.util_min
+    assert a.steered_reads == b.steered_reads
+
+
+def test_sharded_gc_merge_values():
+    """Spot-check the merge arithmetic against the per-shard parts."""
+    wl = Workload(w_total=48, qd_per_ssd=16, n_streams=6)
+    sim = ShardedArraySim(6, SMALL, 0.6, wl, seed=5, n_shards=2,
+                          layout=Raid5Layout(group=3),
+                          gc=StaggeredGc(max_concurrent=1, scope="group"),
+                          parallel=False)
+    r = sim.run(6000)
+    from repro.core.sharded import _run_shard
+    parts = [_run_shard(a) for a in sim._shard_args(6000, None)]
+    assert r.gc_starts == sum(p[0].gc_starts for p in parts)
+    assert r.util_min == min(float(np.asarray(p[0].util).min())
+                             for p in parts)
+    waits = np.concatenate([p[4] for p in parts if p[4] is not None
+                            and p[4].size]) \
+        if any(p[4] is not None and p[4].size for p in parts) else None
+    if waits is not None and waits.size:
+        assert r.stagger_wait_p99 == float(np.percentile(waits, 99.0))
+
+
+# ---------------------------------------------------------------------------
+# nightly: the full gc-coordination acceptance sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_gc_coord_sweep_full_tier(tmp_path):
+    """Nightly: the full 18-SSD gc-coord sweep (the committed
+    BENCH_gc_coord.json tier) must pass every built-in check — staggered
+    raising util_min and cutting stripe_stall_p99 vs reactive, idle GC
+    shifting collection off the busy phase, reactive matching the golden."""
+    import json
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = tmp_path / "BENCH_gc_coord.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.gc_coord_sweep",
+         "--out", str(out)],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(out.read_text())
+    assert payload["all_checks_pass"]
+    assert payload["n_ssds"] >= 18
+    st = payload["staggered"]
+    assert st["staggered"]["mean"]["util_min"] \
+        > st["reactive"]["mean"]["util_min"]
+
+
+def test_sharded_rejects_array_scope_staggering():
+    """An 'array'-wide lease cannot span shard processes — sharding it would
+    silently become per-shard staggering; one shard is fine."""
+    wl = Workload(w_total=32, qd_per_ssd=16, n_streams=4)
+    with pytest.raises(ValueError, match="scope='array'"):
+        ShardedArraySim(4, SMALL, 0.6, wl, n_shards=2,
+                        gc=StaggeredGc(max_concurrent=1, scope="array"))
+    ShardedArraySim(4, SMALL, 0.6, wl, n_shards=1,
+                    gc=StaggeredGc(max_concurrent=1, scope="array"))

@@ -6,7 +6,6 @@ hypothesis = pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import policies, sa_cache

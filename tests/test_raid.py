@@ -416,7 +416,7 @@ def test_xor_reconstruction_deterministic():
 
 
 def test_xor_reconstruction_property():
-    hypothesis = pytest.importorskip(
+    pytest.importorskip(
         "hypothesis",
         reason="property tests need hypothesis (requirements-dev.txt)")
     from hypothesis import given, settings, strategies as st

@@ -7,7 +7,6 @@ the tag still matched, silently dropping the newer version. ``clean_slot``
 now also checks the per-slot dirty epoch captured at issue time.
 """
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import sa_cache
 from repro.core.sa_cache import (CacheState, clean_slot, dirty_epoch_of,

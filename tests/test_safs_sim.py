@@ -1,6 +1,5 @@
 """End-to-end SAFS simulation: the paper's core claims, qualitatively."""
 import numpy as np
-import pytest
 
 from repro.core.flusher import FlushRequest
 from repro.core.gc_sim import SSDParams

@@ -5,7 +5,7 @@ import pytest
 from repro.core.gc_sim import ArraySim, SSDParams, Workload
 from repro.core.workloads import (OP_TRIM, TRACE_READ, TRACE_WRITE,
                                   BurstySource, DeleteBurstSource,
-                                  MixedTenantSource, Op, SequentialSource,
+                                  MixedTenantSource, SequentialSource,
                                   TraceSource, UniformSource, ZipfSource,
                                   source_for)
 
