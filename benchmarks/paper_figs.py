@@ -48,8 +48,19 @@ def fig3(measure_ops=12000) -> dict:
     return out
 
 
-def fig4(measure_ops=8000) -> dict:
-    """Unaligned (128 B) writes: every miss is read-update-write."""
+def fig4(measure_ops=60000) -> dict:
+    """Unaligned (128 B) writes: every miss is read-update-write.
+
+    Calibrated against the DES at the current service granularity: the
+    window must cover several cache fills (cache is ~2.6k pages here and
+    every unaligned op dirties its page), because inside the fill transient
+    the flusher's eager writes read as pure overhead and the measured "gain"
+    is negative — the old 8000-op window sat squarely in that transient.
+    At steady state the mechanism matches the paper's: the flusher converts
+    application-blocking demand writebacks into background flushes (compare
+    ``demand_writes`` on/off), which is where the unaligned gain comes from.
+    ``tests/test_paper_figs.py`` pins this qualitative ordering at a scaled-
+    down config so it cannot silently drift again."""
     out = {}
     for dist in ("uniform", "zipf"):
         on = _run(0.0, dist, True, unaligned=True, measure_ops=measure_ops)
@@ -57,6 +68,8 @@ def fig4(measure_ops=8000) -> dict:
         out[dist] = {
             "flusher_on": float(on.app_iops), "flusher_off": float(off.app_iops),
             "gain_pct": 100.0 * (on.app_iops / off.app_iops - 1.0),
+            "demand_writes_on": int(on.demand_writes),
+            "demand_writes_off": int(off.demand_writes),
         }
     out["paper_gain_pct"] = PAPER["fig4_gain_pct"]
     save("paper_fig4", out)

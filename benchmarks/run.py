@@ -2,12 +2,34 @@
 beyond-paper serving benchmark + the roofline table (if dry-run artifacts
 exist).
 
+Every registered section runs even if an earlier one fails its self-check or
+raises — a single broken sweep must not mask the rest (the same failure mode
+the CI pipeline fixed by dropping ``-x`` from the nightly). The exit code is
+nonzero iff any section failed, and a summary table names the failures.
+
   PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
 import argparse
 import time
+import traceback
+
+
+def _run_section(results: list, title: str, fn, *fn_args) -> None:
+    """Run one section, capturing its exit code (a raised exception counts
+    as rc=1 and is printed, not propagated)."""
+    print("=" * 72)
+    print(title)
+    print("=" * 72)
+    t0 = time.time()
+    try:
+        rc = fn(*fn_args) or 0
+    except Exception:
+        traceback.print_exc()
+        rc = 1
+    results.append((title, rc, time.time() - t0))
+    print()
 
 
 def main(argv=None):
@@ -15,59 +37,60 @@ def main(argv=None):
     ap.add_argument("--fast", action="store_true",
                     help="smaller op counts (CI)")
     args = ap.parse_args(argv)
+    tier = ["--smoke"] if args.fast else []
 
-    # perf + scale + raid first, before anything imports jax: ShardedArraySim's
-    # worker pool can then use the fast 'fork' start method (forking after
-    # the multithreaded JAX runtime initializes risks worker deadlock, and
-    # the fallback 'spawn' pool is slower to start)
+    # perf + scale + raid first, before anything imports jax: the sharded
+    # sims' worker pool can then use the fast 'fork' start method (forking
+    # after the multithreaded JAX runtime initializes risks worker deadlock,
+    # and the fallback 'spawn' pool is slower to start)
     from . import gc_coord_sweep, perf_bench, qos_sweep, raid_sweep, \
-        scale_sweep
+        safs_scale_sweep, scale_sweep
 
     t0 = time.time()
-    print("=" * 72)
-    print("SSEngine perf -- events/sec + sharded 100+ SSD scale sweep")
-    print("=" * 72)
-    rc = perf_bench.main(["--smoke"] if args.fast else [])
-    rc |= scale_sweep.main(["--smoke"] if args.fast else [])
-    print()
-    print("=" * 72)
-    print("SSArray layouts -- JBOD vs RAID-0 vs RAID-5 under active GC")
-    print("=" * 72)
-    rc |= raid_sweep.main(["--smoke"] if args.fast else [])
-    print()
-    print("=" * 72)
-    print("SSPer-tenant QoS -- weighted shares + SLO protection under GC")
-    print("=" * 72)
-    rc |= qos_sweep.main(["--smoke"] if args.fast else [])
-    print()
-    print("=" * 72)
-    print("SSGC coordination -- staggered/idle policies vs reactive trigger")
-    print("=" * 72)
-    rc |= gc_coord_sweep.main(["--smoke"] if args.fast else [])
-    print()
+    results: list[tuple[str, int, float]] = []
+    _run_section(results,
+                 "SSEngine perf -- events/sec (calendar-queue engine)",
+                 perf_bench.main, tier)
+    _run_section(results,
+                 "SSArray scale -- sharded 100+ SSD qd sweep",
+                 scale_sweep.main, tier)
+    _run_section(results,
+                 "SSSAFS scale -- sharded SAFS pattern sweep @ 18/64/128 SSDs",
+                 safs_scale_sweep.main, tier)
+    _run_section(results,
+                 "SSArray layouts -- JBOD vs RAID-0 vs RAID-5 under active GC",
+                 raid_sweep.main, tier)
+    _run_section(results,
+                 "SSPer-tenant QoS -- weighted shares + SLO protection under GC",
+                 qos_sweep.main, tier)
+    _run_section(results,
+                 "SSGC coordination -- staggered/idle policies vs reactive trigger",
+                 gc_coord_sweep.main, tier)
 
     from . import paper_figs, paper_tables, roofline, serving_bench
+    _run_section(results,
+                 "SSPaper -- Table 1 / Table 2 / Figure 2 (raw array under GC)",
+                 paper_tables.main)
+    _run_section(results,
+                 "SSPaper -- Figures 3-5, Table 3 (SAFS + dirty-page flusher)",
+                 paper_figs.main)
+    _run_section(results,
+                 "SSBeyond-paper -- flusher in the paged-KV serving engine",
+                 serving_bench.main)
+    _run_section(results,
+                 "SSRoofline -- per (arch x shape), single-pod 16x16 (from dry-run)",
+                 roofline.main)
+
     print("=" * 72)
-    print("SSPaper -- Table 1 / Table 2 / Figure 2 (raw array under GC)")
+    print("summary")
     print("=" * 72)
-    paper_tables.main()
-    print()
-    print("=" * 72)
-    print("SSPaper -- Figures 3-5, Table 3 (SAFS + dirty-page flusher)")
-    print("=" * 72)
-    paper_figs.main()
-    print()
-    print("=" * 72)
-    print("SSBeyond-paper -- flusher in the paged-KV serving engine")
-    print("=" * 72)
-    serving_bench.main()
-    print()
-    print("=" * 72)
-    print("SSRoofline -- per (arch x shape), single-pod 16x16 (from dry-run)")
-    print("=" * 72)
-    roofline.main()
-    print(f"\ntotal benchmark wall time: {time.time() - t0:.0f}s")
-    return rc
+    for title, rc, dt in results:
+        status = "ok" if rc == 0 else f"FAIL (rc={rc})"
+        print(f"  {status:12s} {dt:6.0f}s  {title}")
+    n_failed = sum(1 for _, rc, _ in results if rc)
+    print(f"\n{len(results) - n_failed}/{len(results)} sections passed; "
+          f"total benchmark wall time: {time.time() - t0:.0f}s")
+    return 1 if n_failed else 0
 
 
 if __name__ == "__main__":

@@ -1,0 +1,212 @@
+"""Production-scale SAFS sweeps via ``ShardedSAFSSim`` (100+ SSDs).
+
+The paper's headline claims are about the SAFS page-cache system, but until
+the sharded SAFS path existed only the raw array scaled past 18 SSDs. This
+sweep runs the full SAFS stack (SA-cache + dirty-page flusher + dual queues)
+at 18/64/128 SSDs under the pattern suite and records, per pattern:
+
+* cache hit rate (recomputed from pooled raw counters),
+* writeback volume (flusher writes + application-blocking demand writes,
+  and the demand share of the total), and
+* p99 application latency (exact over pooled raw samples).
+
+Self-checks (any violation exits nonzero, making the committed
+``BENCH_safs_scale.json`` self-checking):
+
+* serial == sharded: ``parallel=False`` on the same shard decomposition is
+  bit-identical to the process-pool run (spot-checked at the smallest size),
+* locality ordering: skewed patterns (``zipf``, ``hot_cold``) beat
+  ``random``'s hit rate at every size — the SA-cache must actually exploit
+  skew,
+* flusher effectiveness: with the flusher on, background flushes dominate
+  writeback (demand share < 50%) for the random/skewed patterns — ``strided``
+  is exempt: a full-coverage scan misses on every op, so demand evictions
+  legitimately dominate there (that stress is what the pattern is for),
+* accounting sanity: hit rates in [0, 1], p99 > 0, writeback volume and SSD
+  page programs both positive.
+
+Usage (relative imports — run as a module):
+    PYTHONPATH=src python -m benchmarks.safs_scale_sweep           # 18/64/128
+    PYTHONPATH=src python -m benchmarks.safs_scale_sweep --smoke   # CI tier
+    PYTHONPATH=src python -m benchmarks.safs_scale_sweep --sizes 18 --patterns zipf
+
+Writes ``BENCH_safs_scale.json`` (repo root) and ``experiments/bench/``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+from repro.core.safs_sim import SAFSWorkload
+from repro.core.sharded import ShardedSAFSSim
+
+from .common import SSD, save
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# per-SSD closed-loop concurrency (the paper's async 32 x n_ssds config)
+CONCURRENCY_PER_SSD = 32
+
+# pattern vocabulary of the sweep: name -> SAFSWorkload kwargs
+PATTERNS = {
+    "random": dict(dist="uniform", scenario="random"),
+    "zipf": dict(dist="zipf", scenario="random"),
+    "hot_cold": dict(scenario="hot_cold"),
+    "strided": dict(scenario="strided"),
+}
+# skewed patterns that must beat "random"'s hit rate
+SKEWED = ("zipf", "hot_cold")
+# patterns where background flushes must dominate writeback (scan patterns
+# like "strided" miss on every op, so demand evictions dominate by design)
+DEMAND_CHECKED = ("random", "zipf", "hot_cold")
+
+
+def run_point(n_ssds: int, pattern: str, measure_ops: int, read_frac: float,
+              n_shards: int, parallel: bool = True) -> dict:
+    wl = SAFSWorkload(read_frac=read_frac,
+                      concurrency=CONCURRENCY_PER_SSD * n_ssds,
+                      **PATTERNS[pattern])
+    sim = ShardedSAFSSim(n_ssds, SSD, 0.8, wl, seed=0, n_shards=n_shards,
+                         parallel=parallel)
+    r = sim.run(measure_ops)
+    writeback = r.flush_writes + r.demand_writes
+    return {
+        "pattern": pattern, "n_ssds": n_ssds,
+        "app_iops": float(r.app_iops),
+        "hit_rate": float(r.hit_rate),
+        "writeback_pages": int(writeback),
+        "flush_writes": int(r.flush_writes),
+        "demand_writes": int(r.demand_writes),
+        "demand_share": r.demand_writes / max(writeback, 1),
+        "ssd_page_writes": int(r.ssd_page_writes),
+        "p99_ms": 1e3 * r.p99_latency,
+        "events": int(r.events),
+        "wall_s": sim.last_wall_s,
+    }
+
+
+def sweep_size(n_ssds: int, patterns, ops_per_ssd: int, read_frac: float,
+               n_shards: int) -> dict:
+    """Pattern sweep at one array size; measurement budget scales with the
+    array so per-pattern statistics keep a comparable sample count."""
+    measure_ops = ops_per_ssd * n_ssds
+    out = {"n_ssds": n_ssds, "measure_ops": measure_ops, "patterns": {}}
+    for pat in patterns:
+        p = run_point(n_ssds, pat, measure_ops, read_frac, n_shards)
+        out["patterns"][pat] = p
+        print(f"  n={n_ssds} {pat:9s}: {p['app_iops']:,.0f} IOPS, "
+              f"hit {p['hit_rate']:.3f}, wb {p['writeback_pages']} pages "
+              f"(demand {100 * p['demand_share']:.0f}%), "
+              f"p99 {p['p99_ms']:.2f} ms, {p['wall_s']:.1f}s")
+    return out
+
+
+def self_check(result: dict, patterns) -> list[str]:
+    """Invariant checks over the finished sweep; returns violation strings."""
+    bad = []
+    for n, size in result["sizes"].items():
+        pts = size["patterns"]
+        for pat, p in pts.items():
+            where = f"n={n} {pat}"
+            if not (0.0 <= p["hit_rate"] <= 1.0):
+                bad.append(f"{where}: hit_rate {p['hit_rate']} outside [0,1]")
+            if p["p99_ms"] <= 0.0:
+                bad.append(f"{where}: p99 {p['p99_ms']} not positive")
+            if p["writeback_pages"] <= 0:
+                bad.append(f"{where}: no writeback despite writes")
+            if p["ssd_page_writes"] <= 0:
+                bad.append(f"{where}: no SSD page programs despite writes")
+            if pat in DEMAND_CHECKED and p["demand_share"] >= 0.5:
+                bad.append(f"{where}: demand writebacks dominate "
+                           f"({100 * p['demand_share']:.0f}%) — flusher "
+                           "not keeping up")
+        if "random" in pts:
+            base = pts["random"]["hit_rate"]
+            for pat in SKEWED:
+                if pat in pts and pts[pat]["hit_rate"] <= base:
+                    bad.append(f"n={n}: {pat} hit rate "
+                               f"{pts[pat]['hit_rate']:.3f} does not beat "
+                               f"random's {base:.3f}")
+    if not result["serial_matches_sharded"]:
+        bad.append("parallel=False and parallel=True runs differ on the "
+                   "same shard decomposition (merge path broken)")
+    return bad
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI tier: fewer patterns/ops, still reaches 128 SSDs")
+    ap.add_argument("--sizes", type=int, nargs="+", default=None)
+    ap.add_argument("--patterns", nargs="+", default=None,
+                    choices=sorted(PATTERNS))
+    ap.add_argument("--ops-per-ssd", type=int, default=None)
+    ap.add_argument("--read-frac", type=float, default=0.3)
+    ap.add_argument("--shards", type=int, default=None,
+                    help="worker shard count (default: pinned per tier, NOT "
+                         "cpu_count — results are deterministic only for a "
+                         "fixed (seed, n_shards), so the self-checks and "
+                         "BENCH_safs_scale.json must not depend on the host)")
+    ap.add_argument("--out", default=str(ROOT / "BENCH_safs_scale.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        sizes = args.sizes or [18, 128]
+        patterns = args.patterns or ["random", "zipf", "hot_cold"]
+        ops = args.ops_per_ssd or 150
+        n_shards = args.shards or 2
+    else:
+        sizes = args.sizes or [18, 64, 128]
+        patterns = args.patterns or sorted(PATTERNS)
+        ops = args.ops_per_ssd or 500
+        n_shards = args.shards or 4
+
+    t0 = time.perf_counter()
+    result = {
+        "smoke": args.smoke,
+        "cpu_count": os.cpu_count(),
+        "n_shards": n_shards,
+        "ops_per_ssd": ops,
+        "read_frac": args.read_frac,
+        "concurrency_per_ssd": CONCURRENCY_PER_SSD,
+        "sizes": {},
+    }
+    for n in sizes:
+        print(f"n_ssds={n}:")
+        result["sizes"][str(n)] = sweep_size(n, patterns, ops,
+                                             args.read_frac, n_shards)
+
+    # merge-path check: same decomposition, in-process vs worker pool
+    n0, pat0 = sizes[0], patterns[0]
+    a = run_point(n0, pat0, ops * n0, args.read_frac, n_shards, parallel=True)
+    b = run_point(n0, pat0, ops * n0, args.read_frac, n_shards, parallel=False)
+    result["serial_matches_sharded"] = all(
+        a[k] == b[k] for k in a if k != "wall_s")
+    result["wall_s"] = time.perf_counter() - t0
+
+    violations = self_check(result, patterns)
+    result["self_check_violations"] = violations
+    Path(args.out).write_text(json.dumps(result, indent=1, default=float))
+    save("BENCH_safs_scale", result)
+
+    biggest = result["sizes"][str(sizes[-1])]
+    ev = sum(p["events"] for p in biggest["patterns"].values())
+    wall = sum(p["wall_s"] for p in biggest["patterns"].values())
+    print(f"safs scale sweep done in {result['wall_s']:.1f}s; largest array "
+          f"{sizes[-1]} SSDs @ {ev / max(wall, 1e-9):,.0f} ev/s; "
+          f"serial==sharded: {result['serial_matches_sharded']}")
+    if violations:
+        print("SELF-CHECK FAILED:")
+        for v in violations:
+            print(f"  - {v}")
+        return 1
+    print("self-check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,21 @@
 """Reproduce the paper's headline experiment interactively: an 8-SSD array
 under GC, with and without the dirty-page flusher — then show the levers the
 unified engine exposes: per-SSD queue depth (the paper's Figure-3 dynamic),
-workload scenarios (bursty / mixed multi-tenant), array layouts
-(RAID-0/RAID-5 striping with a degraded + rebuilding RAID-5 group), and
-per-tenant QoS (a reader's p99 SLO protected against a GC-driving writer).
+workload scenarios (bursty / mixed multi-tenant), phased hot/cold scenarios
+(precondition -> write burst -> drain, per-phase cache/writeback stats),
+array layouts (RAID-0/RAID-5 striping with a degraded + rebuilding RAID-5
+group), and per-tenant QoS (a reader's p99 SLO protected against a
+GC-driving writer).
 
   PYTHONPATH=src python examples/ssd_array_sim.py
 """
+import numpy as np
+
 from repro.core.gc_sim import ArraySim, SSDParams, Workload
 from repro.core.qos import QosPolicy, TenantSpec
 from repro.core.raid import Raid0Layout, Raid5Layout
 from repro.core.safs_sim import SAFSSim, SAFSWorkload
+from repro.core.workloads import HotColdSource, Phase
 
 SSD = SSDParams(capacity_pages=8192)
 
@@ -46,6 +51,29 @@ for scenario in ("random", "sequential", "bursty", "mixed"):
     print(f"{scenario:10s}  IOPS={r.iops:10,.0f}  "
           f"reads={r.read_iops:9,.0f}  writes={r.write_iops:9,.0f}  "
           f"p99={r.p99_latency * 1e3:6.2f} ms")
+
+print("\nphased hot/cold SAFS scenario (8 SSDs, 80% full): precondition the "
+      "cache\nwith the hot set, hit it with a write burst, then drain under "
+      "hot reads —\none measurement window per phase, cache/flusher state "
+      "carried across:\n")
+phased = SAFSSim(n_ssds=8, ssd=SSD, occupancy=0.8,
+                 workload=SAFSWorkload(concurrency=256), cache_frac=0.1,
+                 use_flusher=True, seed=0)
+rng = np.random.default_rng(42)
+n_live = phased.n_live
+hot = dict(hot_frac=0.1, hot_ops=0.9)
+for name, r in phased.run_phased([
+        # unmeasured warm-up: populate the cache with the hot working set
+        Phase("precondition", HotColdSource(n_live, rng, read_frac=0.5, **hot),
+              12000, measure=False),
+        Phase("write burst", HotColdSource(n_live, rng, read_frac=0.0, **hot),
+              8000, warmup=1000),
+        Phase("drain", HotColdSource(n_live, rng, read_frac=0.9, **hot),
+              8000, warmup=1000)]):
+    wb = r.flush_writes + r.demand_writes
+    print(f"{name:12s}  app IOPS={r.app_iops:9,.0f}  "
+          f"hit={r.hit_rate * 100:5.1f}%  writeback={wb:5d} pages "
+          f"(demand {r.demand_writes})  p99={r.p99_latency * 1e3:5.2f} ms")
 
 print("\narray layouts (8 SSDs, 60% full): striping synchronizes on the "
       "slowest member,\nand RAID-5 parity amplifies small writes "

@@ -19,13 +19,18 @@ the whole GC episode with every channel preempted.
 
 Fast path (events/sec is the binding constraint on every experiment):
 
-* Events are slotted ``(time, seq, slot)`` heap entries pointing into
-  parallel ``handler`` / ``payload`` record arrays with free-list reuse —
-  scheduling a completion allocates **no** per-event lambda or closure, only
-  a heap tuple. Handlers that need arguments take them as a single payload
-  object (``call`` / ``call_at``); the zero-argument legacy API
-  (``schedule`` / ``at``) rides on the same records with a no-payload
-  sentinel.
+* Events are slotted ``(time, seq, slot)`` records pointing into parallel
+  ``handler`` / ``payload`` record arrays with free-list reuse — scheduling
+  a completion allocates **no** per-event lambda or closure, only a record
+  tuple. Handlers that need arguments take them as a single payload object
+  (``call`` / ``call_at``); the zero-argument legacy API (``schedule`` /
+  ``at``) rides on the same records with a no-payload sentinel.
+* Scheduling is a two-level **calendar queue** (sorted near-term list +
+  far-term time buckets) instead of a binary heap: completion times are
+  near-constant ``t_op`` multiples, the ideal calendar workload, so pops
+  are O(1) and far inserts are a dict append. Event *order* is the exact
+  heap order — ``(time, seq, slot)`` tuples compare identically whether
+  heap-sifted or Timsorted — see ``EventLoop`` for the invariants.
 * ``run()`` is the inlined dispatch loop: simulators install a completion
   target on the ``MeasurementWindow`` which calls ``EventLoop.stop()``, so
   no per-event Python condition callback is needed (``run_while`` remains
@@ -41,6 +46,7 @@ fast-path engine: ``tests/test_golden_determinism.py``).
 """
 from __future__ import annotations
 
+from bisect import insort
 from collections import deque
 from dataclasses import dataclass
 from heapq import heappop, heappush
@@ -50,29 +56,72 @@ import numpy as np
 
 _NO_PAYLOAD = object()   # sentinel: invoke the handler with no argument
 
+# calendar-queue tuning: number of positive scheduling deltas sampled before
+# the bucket width is fixed, and the near-list compaction threshold
+_CALIB_SAMPLES = 64
+_COMPACT_AT = 1024
+
 
 class EventLoop:
-    """Minimal heap-based discrete-event loop: schedule callbacks, run them
-    in time order. Ties are broken by insertion order (FIFO), so causally
-    ordered same-time events stay ordered.
+    """Minimal discrete-event loop: schedule callbacks, run them in time
+    order. Ties are broken by insertion order (FIFO), so causally ordered
+    same-time events stay ordered.
 
     Event records live in parallel slot arrays (``_handlers``/``_payloads``)
-    recycled through a free list; the heap holds only ``(time, seq, slot)``
-    tuples. ``processed`` counts dispatched events (the events/sec metric).
+    recycled through a free list; the scheduler holds only ``(time, seq,
+    slot)`` tuples. ``processed`` counts dispatched events (the events/sec
+    metric).
+
+    Scheduling is a two-level **calendar queue** rather than a binary heap:
+
+    * ``_near`` — a sorted list of the soonest events, consumed by an
+      integer pop index ``_ni`` (an O(1) pop; same-time runs of events are
+      drained as an already-sorted batch, no per-pop sift-down).
+    * ``_far`` — a dict of buckets ``int(time * _inv_w) -> [events]``;
+      future inserts are a plain dict append. Buckets are *sparse* (any
+      integer key), so there is no wheel wrap-around or overflow list: an
+      event arbitrarily far in the future just lands in a higher-numbered
+      bucket. ``_bheap`` is a small min-heap of pending bucket indices
+      (pushed once per bucket creation, far less than once per event).
+    * When ``_near`` drains, the smallest pending bucket is popped, sorted
+      (C Timsort over ``(time, seq, slot)`` tuples — the exact heap
+      comparison order), and becomes the new near list.
+
+    Invariants (these make the calendar byte-identical to the old heap):
+
+    * every near event has ``time < (cur_bucket + 1) * width`` and every far
+      event has ``time >= (cur_bucket + 1) * width``, so draining near
+      before touching far preserves global time order;
+    * ``seq`` increases monotonically across ALL inserts, so sorting a
+      bucket — or insorting a same/past-bucket event into near at position
+      ``>= _ni`` — reproduces the heap's FIFO tie-break exactly;
+    * the bucket width is calibrated once, from the first positive
+      scheduling deltas, and is a deterministic function of the event
+      stream: a fixed seed sees the same calendar shape every run. Until
+      calibration (or when every delta is zero) the loop degenerates to a
+      single sorted list, which is still exact.
     """
 
-    __slots__ = ("now", "_heap", "_seq", "_handlers", "_payloads", "_free",
-                 "processed", "_stopped")
+    __slots__ = ("now", "_seq", "_handlers", "_payloads", "_free",
+                 "processed", "_stopped",
+                 "_near", "_ni", "_far", "_bheap", "_cur", "_inv_w",
+                 "_dsamples")
 
     def __init__(self) -> None:
         self.now = 0.0
-        self._heap: list[tuple[float, int, int]] = []
         self._seq = 0
         self._handlers: list[Any] = []
         self._payloads: list[Any] = []
         self._free: list[int] = []
         self.processed = 0
         self._stopped = False
+        self._near: list[tuple[float, int, int]] = []
+        self._ni = 0                  # pop index into _near
+        self._far: dict[int, list[tuple[float, int, int]]] = {}
+        self._bheap: list[int] = []   # pending far bucket indices (min-heap)
+        self._cur = 0                 # current bucket index
+        self._inv_w = 0.0             # 1/width; 0.0 = uncalibrated
+        self._dsamples: list[float] = []
 
     # -- scheduling ----------------------------------------------------------
     def call_at(self, time: float, handler: Callable, payload: Any = _NO_PAYLOAD) -> None:
@@ -87,8 +136,53 @@ class EventLoop:
             slot = len(self._handlers)
             self._handlers.append(handler)
             self._payloads.append(payload)
-        heappush(self._heap, (time, self._seq, slot))
-        self._seq += 1
+        seq = self._seq
+        self._seq = seq + 1
+        ev = (time, seq, slot)
+        inv_w = self._inv_w
+        if inv_w:
+            b = int(time * inv_w)
+            if b > self._cur:
+                far = self._far
+                lst = far.get(b)
+                if lst is None:
+                    far[b] = [ev]
+                    heappush(self._bheap, b)
+                else:
+                    lst.append(ev)
+            else:
+                # current (or past) bucket: keep the near list sorted. lo=_ni
+                # skips the consumed prefix; correctness of the FIFO tie-break
+                # holds because seq is globally monotone. Compaction of the
+                # consumed prefix happens only in the dispatch loop, so the
+                # loop may cache the list and pop index in locals.
+                insort(self._near, ev, self._ni)
+        else:
+            # uncalibrated: single sorted list (exact, just not O(1))
+            insort(self._near, ev, self._ni)
+            delta = time - self.now
+            if delta > 0.0:
+                d = self._dsamples
+                d.append(delta)
+                if len(d) >= _CALIB_SAMPLES:
+                    self._calibrate()
+
+    def _calibrate(self) -> None:
+        """Fix the bucket width from the sampled scheduling deltas: a
+        quarter of the median delta, so a typical completion lands a few
+        buckets ahead and same-window events share a bucket. Deterministic —
+        the samples are a pure function of the event stream."""
+        d = sorted(self._dsamples)
+        width = d[len(d) // 2] / 4.0
+        if width <= 0.0:
+            return
+        self._dsamples = []
+        self._inv_w = 1.0 / width
+        # anchor the current bucket at the LAST near event: every far insert
+        # must be strictly later than everything already in near
+        near = self._near
+        anchor = near[-1][0] if self._ni < len(near) else self.now
+        self._cur = int(anchor * self._inv_w)
 
     def call(self, delay: float, handler: Callable, payload: Any = _NO_PAYLOAD) -> None:
         self.call_at(self.now + delay, handler, payload)
@@ -105,12 +199,34 @@ class EventLoop:
         """Make ``run()`` return after the current event's handler."""
         self._stopped = True
 
+    def _advance(self) -> bool:
+        """Near list drained: promote the smallest far bucket. False when no
+        events remain anywhere."""
+        bheap = self._bheap
+        if not bheap:
+            return False
+        b = heappop(bheap)
+        lst = self._far.pop(b)
+        lst.sort()                    # (time, seq, slot): exact heap order
+        self._near = lst
+        self._ni = 0
+        self._cur = b
+        return True
+
     def step(self) -> bool:
         """Run the next event; False when no events remain."""
-        heap = self._heap
-        if not heap:
-            return False
-        self.now, _, slot = heappop(heap)
+        near = self._near
+        ni = self._ni
+        if ni >= len(near):
+            if not self._advance():   # far buckets are never empty
+                return False
+            near = self._near
+            ni = 0
+        elif ni > _COMPACT_AT:        # shed the consumed prefix (uncalibrated
+            del near[:ni]             # mode never swaps the near list out)
+            ni = 0
+        self.now, _, slot = near[ni]
+        self._ni = ni + 1
         handler = self._handlers[slot]
         payload = self._payloads[slot]
         self._handlers[slot] = None
@@ -124,20 +240,40 @@ class EventLoop:
         return True
 
     def run(self) -> int:
-        """Dispatch until ``stop()`` or the heap drains; returns the number
-        of events processed by this call. This is the hot loop — everything
-        is bound to locals and there is no per-event condition callback."""
-        heap = self._heap
+        """Dispatch until ``stop()`` or the calendar drains; returns the
+        number of events processed by this call. This is the hot loop —
+        everything is bound to locals. The near list and pop index live in
+        locals across events: a handler's ``call_at`` may *insort* into the
+        cached list (same object, position ``>= _ni``) but never swaps or
+        compacts it — only this loop does, where the locals are re-anchored.
+        ``self._ni`` is published before each dispatch so ``call_at`` sees
+        the true consumed prefix."""
         handlers = self._handlers
         payloads = self._payloads
         free_append = self._free.append
-        pop = heappop
         no_payload = _NO_PAYLOAD
         self._stopped = False
         n = 0
+        near = self._near
+        ni = self._ni
         try:
-            while heap and not self._stopped:
-                self.now, _, slot = pop(heap)
+            while not self._stopped:
+                if ni >= len(near):
+                    bheap = self._bheap
+                    if not bheap:
+                        break
+                    b = heappop(bheap)
+                    near = self._far.pop(b)
+                    near.sort()
+                    self._near = near
+                    self._cur = b
+                    ni = 0
+                elif ni > _COMPACT_AT:
+                    del near[:ni]
+                    ni = 0
+                self.now, _, slot = near[ni]
+                ni += 1
+                self._ni = ni
                 handler = handlers[slot]
                 payload = payloads[slot]
                 handlers[slot] = None
@@ -149,6 +285,7 @@ class EventLoop:
                 else:
                     handler(payload)
         finally:
+            self._ni = ni
             self.processed += n
         return n
 

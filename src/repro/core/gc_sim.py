@@ -425,9 +425,12 @@ class Workload:
                                      # below one SSD's fair share, as at real
                                      # scale, instead of a scale-artifact
                                      # hotspot.
-    # -- scenario layer (core/workloads.py) ---------------------------------
-    scenario: str = "random"         # "random" | "sequential" | "bursty" |
-                                     # "mixed" | "trace" | "delete_burst"
+    # -- scenario layer / pattern suite (core/workloads.py) -----------------
+    scenario: str = "random"         # any PATTERNS name: "random" |
+                                     # "sequential" | "strided" | "snake" |
+                                     # "hot_cold" | "write_then_read" |
+                                     # "bursty" | "mixed" | "trace" |
+                                     # "delete_burst"
     seq_streams: int = 4             # sequential cursors for "sequential"
     burst_on: float = 2e-3           # ON window seconds for "bursty"
     burst_off: float = 2e-3          # OFF window seconds for "bursty"
@@ -435,6 +438,10 @@ class Workload:
     delete_pages: int = 64           # TRIM run length for "delete_burst"
     delete_every: int = 256          # a burst fires on every delete_every-th
                                      # op slot ("delete_burst")
+    stride: int = 64                 # LBA step for "strided"
+    hot_frac: float = 0.1            # hot-zone share of the LBA space
+    hot_ops: float = 0.9             # op share hitting the hot zone
+    wtr_span: int = 4096             # extent pages for "write_then_read"
 
 
 @dataclass
@@ -894,6 +901,22 @@ class ArraySim:
             ftl_gc_copies=ftl_c,
             **gkw,
         )
+
+    def run_phased(self, phases) -> "list[tuple[str, ArrayResults]]":
+        """Drive a phased scenario: one ``run()`` call per
+        :class:`~repro.core.workloads.Phase`, swapping ``self.source`` at
+        each boundary (``run`` re-binds the source on entry). FTL and GC
+        state persist across phases, so a preconditioning phase is just an
+        unmeasured leading phase — no ad-hoc prefill flags. Returns
+        ``(phase.name, results)`` for every ``measure=True`` phase;
+        unmeasured phases still run their full budget."""
+        out = []
+        for ph in phases:
+            self.source = ph.source
+            res = self.run(ph.ops, ph.warmup)
+            if ph.measure:
+                out.append((ph.name, res))
+        return out
 
     def _gc_window_stats(self, coord, loop, span: float) -> dict:
         """Close the coordinator's window and return the ``ArrayResults``

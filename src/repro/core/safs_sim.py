@@ -189,13 +189,19 @@ class SAFSWorkload:
     unaligned: bool = False        # 128 B writes: read-update-write on miss
     concurrency: int = 576         # in-flight app ops (async: 32 x n_ssds)
     virtual_scale: int = 512
-    # -- scenario layer (core/workloads.py) ---------------------------------
-    scenario: str = "random"       # "random" | "sequential" | "bursty" |
-                                   # "mixed" | "trace"
+    # -- scenario layer / pattern suite (core/workloads.py) -----------------
+    scenario: str = "random"       # any PATTERNS name: "random" |
+                                   # "sequential" | "strided" | "snake" |
+                                   # "hot_cold" | "write_then_read" |
+                                   # "bursty" | "mixed" | "trace"
     seq_streams: int = 4
     burst_on: float = 2e-3
     burst_off: float = 2e-3
     writer_frac: float = 0.5
+    stride: int = 64               # LBA step for "strided"
+    hot_frac: float = 0.1          # hot-zone share of the LBA space
+    hot_ops: float = 0.9           # op share hitting the hot zone
+    wtr_span: int = 4096           # extent pages for "write_then_read"
 
 
 @dataclass
@@ -216,6 +222,10 @@ class SAFSResults:
     p99_latency: float = 0.0
     events: int = 0                # engine events dispatched during run()
     wall_s: float = 0.0            # host wall-clock seconds of run()
+    # raw cache-counter deltas behind hit_rate: sharded merges recompute the
+    # pooled hit rate from these (never averaging per-shard ratios)
+    cache_hits: int = 0
+    cache_lookups: int = 0
     # -- per-tenant QoS results (core/qos.py; None when qos is off) ----------
     tenant_stats: "dict | None" = None   # tenant id -> qos.TenantStats
     share_error: float = 0.0
@@ -308,6 +318,9 @@ class SAFSSim:
         self._cpu_free = [0.0] * n_cpu
         self._mw: MeasurementWindow | None = None
         self._base = dict(wr=0, rd=0, fl=0, dm=0, st=0, hits=0, lk=0)
+        self._spawned = False        # concurrency ops seeded once per sim
+        self.last_latency: np.ndarray | None = None   # raw samples of the
+                                                      # last run() (sharding)
 
     @property
     def now(self) -> float:
@@ -515,8 +528,14 @@ class SAFSSim:
         total = warmup_ops + measure_ops
         self._mw = mw = MeasurementWindow(self.loop, warmup_ops,
                                           self._begin_measure, target=total)
-        for _ in range(self.wl.concurrency):
-            self._spawn_op()
+        # Seed the closed-loop concurrency exactly once per sim: the spawn
+        # chain is self-sustaining (every completion respawns), so a later
+        # run() — a new phase — resumes the in-flight population instead of
+        # doubling it. First-run behaviour is unchanged (goldens).
+        if not self._spawned:
+            self._spawned = True
+            for _ in range(self.wl.concurrency):
+                self._spawn_op()
         t_wall = time.perf_counter()
         # total == 0: nothing to measure (matches the old run_while exit)
         events = self.loop.run() if total > 0 else 0
@@ -524,6 +543,7 @@ class SAFSSim:
         span = mw.span
         b = self._base
         summ = mw.latency.summary()
+        self.last_latency = mw.latency.values()
         tstats, share_error = None, 0.0
         if self.qos is not None:
             from .qos import build_tenant_stats
@@ -552,6 +572,28 @@ class SAFSSim:
             p99_latency=summ.p99,
             events=events,
             wall_s=wall_s,
+            cache_hits=self.cache.hit_count - b["hits"],
+            cache_lookups=self.cache.lookups - b["lk"],
             tenant_stats=tstats,
             share_error=share_error,
         )
+
+    def run_phased(self, phases) -> "list[tuple[str, SAFSResults]]":
+        """Drive a phased scenario: one ``run()`` (one measurement window)
+        per :class:`~repro.core.workloads.Phase`, swapping the op source at
+        each boundary. Cache, flusher, FTL, and in-flight op state persist
+        across phases — that is the point: a preconditioning phase leaves
+        the system warm for the phases after it (no ad-hoc prefill flags).
+
+        Ops in flight at a boundary were drawn from the previous phase's
+        source (the closed-loop overshoot); each phase's ``warmup`` budget
+        absorbs them before its measurement window opens. Returns
+        ``(phase.name, results)`` for every phase with ``measure=True``;
+        unmeasured phases still run their full budget."""
+        out = []
+        for ph in phases:
+            self.source = ph.source
+            res = self.run(ph.ops, ph.warmup)
+            if ph.measure:
+                out.append((ph.name, res))
+        return out

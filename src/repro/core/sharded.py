@@ -48,9 +48,11 @@ import numpy as np
 
 from .engine import LatencySummary
 from .gc_sim import ArrayResults, ArraySim, SSDParams, Workload
+from .safs_sim import SAFSResults, SAFSSim, SAFSWorkload
 from .workloads import _mix64
 
-__all__ = ["ShardedArraySim", "shard_sizes", "merge_results", "pool_samples",
+__all__ = ["ShardedArraySim", "ShardedSAFSSim", "shard_sizes",
+           "merge_results", "merge_safs_results", "pool_samples",
            "shard_seed"]
 
 
@@ -356,4 +358,148 @@ class ShardedArraySim:
         self.last_stall = stall_pooled if stall_pooled.size else None
         self.last_tenant_latency = tenant_pooled
         self.last_gc_wait = gc_wait_pooled if gc_wait_pooled.size else None
+        return merged
+
+
+# ---------------------------------------------------------------------------
+# Sharded SAFS
+#
+# The SA-cache's only cross-device coupling is the set hash: one cache set
+# may hold tags of several devices, but a tag's SET never depends on another
+# device's state, and the flusher's per-device pending queues are already
+# independent. Partitioning the array by device group therefore partitions
+# the cache and the flusher cleanly: each shard owns a full SAFSSim (its own
+# NumpySACache over its own device group's LBA space, its own
+# DirtyPageFlusher and dual queues), so no cache set and no flush queue ever
+# spans device groups. Concurrency (the closed-loop in-flight population)
+# and cache capacity both split proportionally, so the merged system has the
+# same aggregate cache-to-data ratio and offered load as the serial config.
+# ---------------------------------------------------------------------------
+
+
+def _shard_safs_workload(wl: SAFSWorkload, sz: int, n_ssds: int) -> SAFSWorkload:
+    """Scale the closed-loop concurrency to the shard's share."""
+    return replace(wl, concurrency=max(1, (wl.concurrency * sz) // n_ssds))
+
+
+def _run_safs_shard(args):
+    (sz, ssd, occupancy, wl, cache_frac, use_flusher, clean_first,
+     score_threshold, seed, measure_ops, warmup_ops) = args
+    sim = SAFSSim(sz, ssd, occupancy, wl, cache_frac=cache_frac,
+                  use_flusher=use_flusher, clean_first=clean_first,
+                  score_threshold=score_threshold, seed=seed)
+    res = sim.run(measure_ops, warmup_ops)
+    return (res, sim.last_latency)
+
+
+def merge_safs_results(parts: list[SAFSResults],
+                       pooled: np.ndarray) -> SAFSResults:
+    """Merge per-shard ``SAFSResults``: throughput and writeback counters
+    add, per-device utilizations concatenate in shard order, the hit rate is
+    recomputed from the pooled raw cache counters (``cache_hits`` /
+    ``cache_lookups`` — never an average of per-shard ratios), and latency
+    percentiles are exact over the pooled raw samples."""
+    if pooled.size:
+        p50, p95, p99 = np.percentile(pooled, [50.0, 95.0, 99.0])
+        summ = LatencySummary(mean=float(pooled.mean()), p50=float(p50),
+                              p95=float(p95), p99=float(p99), n=pooled.size)
+    else:
+        summ = LatencySummary.empty()
+    hits = sum(p.cache_hits for p in parts)
+    lookups = sum(p.cache_lookups for p in parts)
+    return SAFSResults(
+        app_iops=float(sum(p.app_iops for p in parts)),
+        hit_rate=hits / max(lookups, 1),
+        ssd_page_writes=sum(p.ssd_page_writes for p in parts),
+        flush_writes=sum(p.flush_writes for p in parts),
+        demand_writes=sum(p.demand_writes for p in parts),
+        ssd_reads=sum(p.ssd_reads for p in parts),
+        stale_discards=sum(p.stale_discards for p in parts),
+        app_ops=sum(p.app_ops for p in parts),
+        mean_latency=summ.mean,
+        sim_time=max(p.sim_time for p in parts),
+        util=np.concatenate([p.util for p in parts]),
+        p50_latency=summ.p50,
+        p95_latency=summ.p95,
+        p99_latency=summ.p99,
+        events=sum(p.events for p in parts),
+        wall_s=max(p.wall_s for p in parts),
+        cache_hits=hits,
+        cache_lookups=lookups,
+    )
+
+
+class ShardedSAFSSim:
+    """Partition a ``SAFSSim`` array (cache + flusher + devices) across
+    worker processes and merge the results. Same constructor shape as
+    ``SAFSSim`` plus the sharding knobs, same ``run() -> SAFSResults``.
+
+    Each shard is a complete SAFS instance over its device group: its own
+    SA-cache (sets never span groups), its own flusher dual queues, its own
+    decorrelated RNG. ``n_shards=None`` uses ``min(cpu_count, n_ssds)``;
+    ``parallel=False`` runs the same decomposition serially in-process —
+    bit-identical results, used to verify the merge path. As with
+    ``ShardedArraySim``, results are deterministic for a fixed
+    ``(seed, n_shards)`` but differ numerically from the unsharded
+    ``SAFSSim`` (different RNG streams and set hashes). Per-tenant QoS is
+    not sharded (``qos`` raises)."""
+
+    def __init__(self, n_ssds: int, ssd=None, occupancy: float = 0.8,
+                 workload: SAFSWorkload = SAFSWorkload(),
+                 cache_frac: float = 0.1, use_flusher: bool = True,
+                 clean_first: bool = True, score_threshold: int = 2,
+                 seed: int = 0, n_shards: int | None = None,
+                 parallel: bool = True, qos=None):
+        if qos is not None:
+            raise NotImplementedError(
+                "per-tenant QoS couples every device through one scheduler "
+                "and cannot be sharded; use SAFSSim(qos=...) unsharded")
+        if workload.scenario == "trace":
+            raise NotImplementedError(
+                "trace replay has one global arrival order and cannot be "
+                "partitioned; use SAFSSim unsharded")
+        self.n = n_ssds
+        self.p = ssd if ssd is not None else SSDParams()
+        self.wl = workload
+        self.occupancy = occupancy
+        self.cache_frac = cache_frac
+        self.use_flusher = use_flusher
+        self.clean_first = clean_first
+        self.score_threshold = score_threshold
+        self.seed = seed
+        self.parallel = parallel
+        if n_shards is None:
+            n_shards = min(os.cpu_count() or 1, n_ssds)
+        self.sizes = shard_sizes(n_ssds, n_shards)
+        self.last_latency: np.ndarray | None = None
+        self.last_wall_s = 0.0       # observed wall clock of the last run()
+
+    def _shard_args(self, measure_ops: int, warmup_ops: int | None):
+        if warmup_ops is None:
+            warmup_ops = measure_ops // 2
+        measures = _split_budget(measure_ops, self.sizes, self.n)
+        warmups = _split_budget(warmup_ops, self.sizes, self.n) \
+            if warmup_ops else [0] * len(self.sizes)
+        return [
+            (sz, self.p, self.occupancy,
+             _shard_safs_workload(self.wl, sz, self.n),
+             self.cache_frac, self.use_flusher, self.clean_first,
+             self.score_threshold, shard_seed(self.seed, k),
+             measures[k], warmups[k])
+            for k, sz in enumerate(self.sizes)
+        ]
+
+    def run(self, measure_ops: int, warmup_ops: int | None = None) -> SAFSResults:
+        args = self._shard_args(measure_ops, warmup_ops)
+        t0 = time.perf_counter()
+        if self.parallel and len(args) > 1:
+            pool = _get_pool(min(len(args), os.cpu_count() or 1))
+            out = pool.map(_run_safs_shard, args, chunksize=1)
+        else:
+            out = [_run_safs_shard(a) for a in args]
+        self.last_wall_s = time.perf_counter() - t0
+        parts = [r for r, _ in out]
+        pooled = pool_samples([s for _, s in out])
+        merged = merge_safs_results(parts, pooled)
+        self.last_latency = pooled if pooled.size else None
         return merged

@@ -6,11 +6,21 @@ source instead of sampling inline, so the same scenario definitions drive the
 raw-array simulator (``gc_sim.ArraySim``), the full SAFS stack
 (``safs_sim.SAFSSim``), and the benchmark sweeps.
 
-Scenarios:
+Scenarios (the **pattern suite** — every name is an entry in the
+``PATTERNS`` registry, dispatched by :func:`source_for`):
 
 * ``uniform`` / ``zipf`` — the paper's 4 KB random workloads (§4).
 * ``sequential`` — N evenly spaced sequential cursors round-robined, the
   classic multi-stream sequential writer.
+* ``strided`` — fixed-stride scan: lane-interleaved so the whole LBA space
+  is covered even when ``gcd(stride, n_live) > 1``.
+* ``snake`` — boustrophedon scan: ascending sweep, then descending, turning
+  at the ends without repeating the endpoint.
+* ``hot_cold`` — two-zone skew: a ``hot_frac`` slice of the space receives
+  ``hot_ops`` of the operations (the skew split is configurable, unlike the
+  fixed-head Zipf).
+* ``write_then_read`` — write a span sequentially, read it back, advance to
+  the next span (checkpoint-then-verify / producer-consumer footprints).
 * ``bursty`` — on/off arrival gating around any base source; during OFF
   windows ``Op.at`` jumps to the next ON window (open-loop lulls).
 * ``mixed`` — two tenants: a Zipf-hot reader tenant and a random writer
@@ -20,12 +30,20 @@ Scenarios:
 * ``trace`` — replay of a ``(time, lba, op)`` array, looping with a time
   offset when exhausted.
 
+Phased scenarios: :class:`PhasedScenario` chains :class:`Phase` records
+(precondition → burst → drain → measure), each with its own op budget and
+source; the simulators' ``run_phased`` drives one measurement window per
+phase. This replaces ad-hoc prefill flags: preconditioning is just an
+unmeasured leading phase.
+
 Closed-loop sources emit ``at=0.0`` (issue immediately); open-loop sources
 (bursty, trace) emit a real earliest-issue time and the simulators honour it.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from dataclasses import dataclass
+from math import gcd
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import numpy as np
 
@@ -291,43 +309,298 @@ class TraceSource(OpSource):
                   at=self._offset + float(self.times[i]))
 
 
+class StridedSource(OpSource):
+    """Fixed-stride scan: successive LBAs are ``stride`` apart.
+
+    When ``gcd(stride, n_live) > 1`` a naive ``(lba + stride) % n_live``
+    cursor only ever visits ``n_live / gcd`` addresses. This source is
+    lane-interleaved instead: it walks one residue class ("lane") of the
+    stride to completion (``n_live // gcd`` steps), then advances to the
+    next lane, so ``n_live`` consecutive ops cover every LBA exactly once
+    regardless of the stride. Deterministic except for the read/write coin
+    (one RNG draw per op, same as SequentialSource)."""
+
+    def __init__(self, n_live: int, rng: np.random.Generator,
+                 read_frac: float = 0.0, stride: int = 64):
+        assert n_live > 0
+        self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+        self.stride = max(1, stride) % n_live or n_live
+        self._g = gcd(self.stride, n_live)
+        self._steps_per_lane = n_live // self._g
+        self._lane = 0
+        self._step = 0
+
+    def next_op(self, now: float) -> Op:
+        lba = (self._lane + self._step * self.stride) % self.n_live
+        self._step += 1
+        if self._step >= self._steps_per_lane:
+            self._step = 0
+            self._lane = (self._lane + 1) % self._g
+        return Op(lba, bool(self.rng.random() < self.read_frac))
+
+    def footprint(self, n_ops: int) -> int:
+        """Distinct LBAs touched by the next ``n_ops`` ops (full coverage
+        after ``n_live`` ops — the property the lane interleave buys)."""
+        return min(n_ops, self.n_live)
+
+
+class SnakeSource(OpSource):
+    """Boustrophedon scan: ascend 0..n-1, then descend n-1..0, turning at
+    the ends. The endpoint is *not* repeated at a turn (after emitting
+    ``n-1`` ascending, the next op is ``n-2`` descending), so every window
+    of ``n_live`` ops still covers all but one LBA and no LBA is issued
+    twice in a row — the pattern elevators and disk schedulers produce."""
+
+    def __init__(self, n_live: int, rng: np.random.Generator,
+                 read_frac: float = 0.0):
+        assert n_live > 0
+        self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+        self._pos = 0
+        self._dir = 1
+
+    def next_op(self, now: float) -> Op:
+        lba = self._pos
+        n = self.n_live
+        if n > 1:
+            nxt = lba + self._dir
+            if nxt >= n or nxt < 0:          # turn without repeating the end
+                self._dir = -self._dir
+                nxt = lba + self._dir
+            self._pos = nxt
+        return Op(lba, bool(self.rng.random() < self.read_frac))
+
+
+class HotColdSource(OpSource):
+    """Two-zone skew with a configurable split: a ``hot_frac`` slice of the
+    LBA space receives ``hot_ops`` of the operations; the cold remainder
+    gets the rest. Unlike Zipf (fixed head shape, tunable only via ``s``),
+    the skew *split* itself is a parameter — e.g. 10% of space / 90% of ops
+    is the classic hot/cold GC stress configuration.
+
+    Exactly three RNG draws per op (zone coin, offset, read/write coin), so
+    the stream is seed-deterministic and cheap. The hot zone is the low end
+    of the LBA space (``[0, hot_pages)``); physical placement skew is the
+    point, so no hashing is applied."""
+
+    def __init__(self, n_live: int, rng: np.random.Generator,
+                 read_frac: float = 0.0, hot_frac: float = 0.1,
+                 hot_ops: float = 0.9):
+        assert n_live > 0
+        assert 0.0 < hot_frac < 1.0, "hot_frac must split the space"
+        assert 0.0 <= hot_ops <= 1.0
+        self.n_live, self.rng, self.read_frac = n_live, rng, read_frac
+        self.hot_frac, self.hot_ops = hot_frac, hot_ops
+        self.hot_pages = min(max(1, int(n_live * hot_frac)), n_live - 1)
+        self._random = rng.random
+        self._randint = rng.integers
+
+    def next_op(self, now: float) -> Op:
+        if self._random() < self.hot_ops:
+            lba = int(self._randint(self.hot_pages))
+        else:
+            lba = self.hot_pages + int(self._randint(self.n_live
+                                                     - self.hot_pages))
+        return Op(lba, bool(self._random() < self.read_frac))
+
+
+class WriteThenReadSource(OpSource):
+    """Write a ``span``-page extent sequentially, then read it back in the
+    same order, then advance to the next extent (wrapping at the end of the
+    LBA space). Models checkpoint-then-verify and producer-consumer
+    pipelines: every read hits a page written exactly ``span`` ops earlier,
+    the worst case for a write-back cache's dirty/clean churn. Fully
+    deterministic — zero RNG draws (``read_frac`` is implied 0.5)."""
+
+    def __init__(self, n_live: int, rng: np.random.Generator,
+                 span: int = 4096):
+        assert n_live > 0
+        self.n_live = n_live
+        self.span = max(1, min(span, n_live))
+        self._base = 0
+        self._i = 0
+        self._reading = False
+
+    def next_op(self, now: float) -> Op:
+        lba = (self._base + self._i) % self.n_live
+        op = Op(lba, self._reading)
+        self._i += 1
+        if self._i >= self.span:
+            self._i = 0
+            if self._reading:                 # extent verified: advance
+                self._base = (self._base + self.span) % self.n_live
+            self._reading = not self._reading
+        return op
+
+
+@dataclass(frozen=True)
+class Phase:
+    """One phase of a :class:`PhasedScenario`.
+
+    ``ops`` is the measured op budget; ``warmup`` ops run first inside the
+    phase without being measured (both counted against the phase's slice of
+    the stream). ``measure=False`` marks a preconditioning / drain phase:
+    the simulator runs it but reports no results row for it."""
+
+    name: str
+    source: OpSource
+    ops: int
+    warmup: int = 0
+    measure: bool = True
+
+    @property
+    def total_ops(self) -> int:
+        return self.ops + self.warmup
+
+
+class PhasedScenario(OpSource):
+    """Chain of :class:`Phase` records behaving as a single ``OpSource``.
+
+    Op identity never leaks across a boundary: exactly ``phase.total_ops``
+    ops are drawn from each phase's source before the next phase starts —
+    except the *last* phase, which is open-ended (closed-loop simulators
+    overshoot their op budget by the in-flight spawn count, and those tail
+    ops must come from somewhere; they come from the final phase's source
+    and are excluded from its measurement window by the simulator).
+
+    The per-phase measurement windows come from the simulators'
+    ``run_phased``, which drives one ``run(phase.ops, phase.warmup)`` call
+    per phase and swaps measurement state at each boundary; this class only
+    guarantees the op-stream side of that contract."""
+
+    def __init__(self, phases: Sequence[Phase]):
+        phases = list(phases)
+        assert phases, "PhasedScenario needs at least one phase"
+        for ph in phases[:-1]:
+            assert ph.total_ops > 0, \
+                f"non-final phase {ph.name!r} needs a positive op budget"
+        self.phases = phases
+        self._idx = 0
+        self._left = phases[0].total_ops
+        self._src = phases[0].source
+
+    @property
+    def current_phase(self) -> Phase:
+        return self.phases[self._idx]
+
+    def next_op(self, now: float) -> Op:
+        if self._left <= 0 and self._idx < len(self.phases) - 1:
+            self._idx += 1
+            ph = self.phases[self._idx]
+            self._left = ph.total_ops
+            self._src = ph.source
+        self._left -= 1
+        return self._src.next_op(now)
+
+
+# ---------------------------------------------------------------------------
+# Scenario registry
+#
+# ``source_for`` dispatches through PATTERNS: scenario name -> builder taking
+# ``(wl, n_live, rng, trace)``. Legacy scenarios are thin aliases over the
+# suite — their builders construct exactly the sources the old if-chain did
+# (no extra RNG draws at construction), so every seeded golden is
+# bit-identical. Downstream code can add patterns with @register_pattern.
+# ---------------------------------------------------------------------------
+
+PATTERNS: dict = {}
+
+Builder = Callable[..., OpSource]
+
+
+def register_pattern(name: str) -> Callable[[Builder], Builder]:
+    """Register ``builder(wl, n_live, rng, trace) -> OpSource`` under a
+    scenario name. Re-registration replaces (lets tests stub patterns)."""
+
+    def deco(builder: Builder) -> Builder:
+        PATTERNS[name] = builder
+        return builder
+
+    return deco
+
+
+def _random_base(wl, n_live: int, rng: np.random.Generator) -> OpSource:
+    read_frac = getattr(wl, "read_frac", 0.0)
+    trim_frac = getattr(wl, "trim_frac", 0.0)
+    if getattr(wl, "dist", "uniform") == "zipf":
+        return ZipfSource(n_live, rng, read_frac,
+                          s=getattr(wl, "zipf_s", 0.99),
+                          virtual_scale=getattr(wl, "virtual_scale", 512),
+                          trim_frac=trim_frac)
+    return UniformSource(n_live, rng, read_frac, trim_frac=trim_frac)
+
+
+@register_pattern("random")
+def _build_random(wl, n_live, rng, trace):
+    return _random_base(wl, n_live, rng)
+
+
+@register_pattern("sequential")
+def _build_sequential(wl, n_live, rng, trace):
+    return SequentialSource(n_live, rng, getattr(wl, "read_frac", 0.0),
+                            streams=getattr(wl, "seq_streams", 4))
+
+
+@register_pattern("strided")
+def _build_strided(wl, n_live, rng, trace):
+    return StridedSource(n_live, rng, getattr(wl, "read_frac", 0.0),
+                         stride=getattr(wl, "stride", 64))
+
+
+@register_pattern("snake")
+def _build_snake(wl, n_live, rng, trace):
+    return SnakeSource(n_live, rng, getattr(wl, "read_frac", 0.0))
+
+
+@register_pattern("hot_cold")
+def _build_hot_cold(wl, n_live, rng, trace):
+    return HotColdSource(n_live, rng, getattr(wl, "read_frac", 0.0),
+                         hot_frac=getattr(wl, "hot_frac", 0.1),
+                         hot_ops=getattr(wl, "hot_ops", 0.9))
+
+
+@register_pattern("write_then_read")
+def _build_write_then_read(wl, n_live, rng, trace):
+    return WriteThenReadSource(n_live, rng,
+                               span=getattr(wl, "wtr_span", 4096))
+
+
+@register_pattern("bursty")
+def _build_bursty(wl, n_live, rng, trace):
+    return BurstySource(_random_base(wl, n_live, rng),
+                        on_time=getattr(wl, "burst_on", 2e-3),
+                        off_time=getattr(wl, "burst_off", 2e-3))
+
+
+@register_pattern("mixed")
+def _build_mixed(wl, n_live, rng, trace):
+    reader = ZipfSource(n_live, rng, read_frac=1.0,
+                        s=getattr(wl, "zipf_s", 0.99),
+                        virtual_scale=getattr(wl, "virtual_scale", 512))
+    writer = UniformSource(n_live, rng, read_frac=0.0)
+    return MixedTenantSource(reader, writer, rng,
+                             writer_frac=getattr(wl, "writer_frac", 0.5))
+
+
+@register_pattern("delete_burst")
+def _build_delete_burst(wl, n_live, rng, trace):
+    return DeleteBurstSource(_random_base(wl, n_live, rng), n_live, rng,
+                             pages=getattr(wl, "delete_pages", 64),
+                             every=getattr(wl, "delete_every", 256))
+
+
+@register_pattern("trace")
+def _build_trace(wl, n_live, rng, trace):
+    assert trace is not None, "scenario='trace' needs a trace array"
+    return TraceSource(trace, n_live)
+
+
 def source_for(wl, n_live: int, rng: np.random.Generator,
                trace: Optional[np.ndarray] = None) -> OpSource:
     """Build the OpSource for a workload spec (``gc_sim.Workload`` or
-    ``safs_sim.SAFSWorkload`` — anything with the scenario attributes)."""
+    ``safs_sim.SAFSWorkload`` — anything with the scenario attributes).
+    Dispatches through the ``PATTERNS`` registry."""
     scenario = getattr(wl, "scenario", "random")
-    read_frac = getattr(wl, "read_frac", 0.0)
-    trim_frac = getattr(wl, "trim_frac", 0.0)
-
-    def random_base():
-        if getattr(wl, "dist", "uniform") == "zipf":
-            return ZipfSource(n_live, rng, read_frac,
-                              s=getattr(wl, "zipf_s", 0.99),
-                              virtual_scale=getattr(wl, "virtual_scale", 512),
-                              trim_frac=trim_frac)
-        return UniformSource(n_live, rng, read_frac, trim_frac=trim_frac)
-
-    if scenario == "random":
-        return random_base()
-    if scenario == "sequential":
-        return SequentialSource(n_live, rng, read_frac,
-                                streams=getattr(wl, "seq_streams", 4))
-    if scenario == "bursty":
-        return BurstySource(random_base(),
-                            on_time=getattr(wl, "burst_on", 2e-3),
-                            off_time=getattr(wl, "burst_off", 2e-3))
-    if scenario == "mixed":
-        reader = ZipfSource(n_live, rng, read_frac=1.0,
-                            s=getattr(wl, "zipf_s", 0.99),
-                            virtual_scale=getattr(wl, "virtual_scale", 512))
-        writer = UniformSource(n_live, rng, read_frac=0.0)
-        return MixedTenantSource(reader, writer, rng,
-                                 writer_frac=getattr(wl, "writer_frac", 0.5))
-    if scenario == "delete_burst":
-        return DeleteBurstSource(random_base(), n_live, rng,
-                                 pages=getattr(wl, "delete_pages", 64),
-                                 every=getattr(wl, "delete_every", 256))
-    if scenario == "trace":
-        assert trace is not None, "scenario='trace' needs a trace array"
-        return TraceSource(trace, n_live)
-    raise ValueError(f"unknown workload scenario: {scenario!r}")
+    builder = PATTERNS.get(scenario)
+    if builder is None:
+        raise ValueError(f"unknown workload scenario: {scenario!r}")
+    return builder(wl, n_live, rng, trace)

@@ -1,0 +1,264 @@
+"""Pattern-suite properties: determinism, bounds, footprint, phase budgets.
+
+Deterministic property tests always run; the hypothesis block at the bottom
+widens the same properties over random parameter spaces when hypothesis is
+installed (requirements-dev.txt)."""
+import numpy as np
+import pytest
+
+from repro.core.workloads import (
+    PATTERNS,
+    HotColdSource,
+    Op,
+    OpSource,
+    Phase,
+    PhasedScenario,
+    SnakeSource,
+    StridedSource,
+    WriteThenReadSource,
+    register_pattern,
+    source_for,
+)
+
+
+class _WL:
+    """Duck-typed workload spec (source_for reads attrs via getattr)."""
+
+    def __init__(self, **kw):
+        self.__dict__.update(kw)
+
+
+NEW_PATTERNS = ("strided", "snake", "hot_cold", "write_then_read")
+N_LIVE = 480
+
+
+def _stream(scenario, seed, n_ops, n_live=N_LIVE, **kw):
+    src = source_for(_WL(scenario=scenario, read_frac=0.3, **kw), n_live,
+                     np.random.default_rng(seed))
+    return [src.next_op(0.0) for _ in range(n_ops)]
+
+
+# -- seed determinism / bounds ----------------------------------------------
+
+@pytest.mark.parametrize("scenario", NEW_PATTERNS)
+def test_new_sources_seed_deterministic(scenario):
+    a = _stream(scenario, 7, 1000)
+    b = _stream(scenario, 7, 1000)
+    assert a == b
+
+
+@pytest.mark.parametrize("scenario", NEW_PATTERNS)
+def test_new_sources_stay_in_bounds(scenario):
+    for op in _stream(scenario, 3, 2000):
+        assert 0 <= op.lba < N_LIVE
+        assert op.at == 0.0          # all four are closed-loop
+
+
+def test_registry_covers_new_patterns():
+    for scenario in NEW_PATTERNS:
+        assert scenario in PATTERNS
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(ValueError, match="unknown workload scenario"):
+        source_for(_WL(scenario="nope"), 64, np.random.default_rng(0))
+
+
+def test_register_pattern_extends_dispatch():
+    class _One(OpSource):
+        def next_op(self, now):
+            return Op(1, False)
+
+    @register_pattern("_test_only")
+    def _build(wl, n_live, rng, trace):
+        return _One()
+
+    try:
+        src = source_for(_WL(scenario="_test_only"), 64,
+                         np.random.default_rng(0))
+        assert src.next_op(0.0).lba == 1
+    finally:
+        del PATTERNS["_test_only"]
+
+
+# -- declared footprints -----------------------------------------------------
+
+@pytest.mark.parametrize("n_live,stride", [
+    (480, 64),    # gcd 32: naive modular cursor would visit only 15 LBAs
+    (480, 7),     # coprime
+    (100, 10),    # stride divides the space
+    (48, 50),     # stride > n_live (folds to 2)
+    (64, 64),     # stride ≡ 0 mod n_live (folds to a linear scan)
+])
+def test_strided_covers_whole_space(n_live, stride):
+    src = StridedSource(n_live, np.random.default_rng(0), stride=stride)
+    lbas = [src.next_op(0.0).lba for _ in range(n_live)]
+    assert sorted(lbas) == list(range(n_live))      # each LBA exactly once
+    assert src.footprint(n_live) == n_live
+    # and the cycle repeats: the next n_live ops cover the space again
+    lbas2 = [src.next_op(0.0).lba for _ in range(n_live)]
+    assert sorted(lbas2) == list(range(n_live))
+
+
+def test_snake_covers_space_and_never_repeats():
+    n = 97
+    src = SnakeSource(n, np.random.default_rng(0))
+    lbas = [src.next_op(0.0).lba for _ in range(4 * n)]
+    assert set(lbas[:n]) == set(range(n))           # first sweep covers all
+    for a, b in zip(lbas, lbas[1:]):
+        assert abs(a - b) == 1                      # always adjacent...
+    assert lbas[n - 1] == n - 1 and lbas[n] == n - 2  # ...turns w/o repeat
+
+
+def test_hot_cold_respects_declared_split():
+    n, hot_frac, hot_ops = 1000, 0.1, 0.9
+    src = HotColdSource(n, np.random.default_rng(5), hot_frac=hot_frac,
+                        hot_ops=hot_ops)
+    assert src.hot_pages == 100
+    lbas = np.array([src.next_op(0.0).lba for _ in range(20000)])
+    hot_share = float(np.mean(lbas < src.hot_pages))
+    assert abs(hot_share - hot_ops) < 0.02          # ops skew as declared
+    assert lbas.max() >= src.hot_pages              # cold zone is reached
+    # the hot zone footprint is the declared slice, nothing more
+    assert set(lbas[lbas < src.hot_pages]) <= set(range(src.hot_pages))
+
+
+def test_write_then_read_reads_back_what_it_wrote():
+    n, span = 300, 64
+    src = WriteThenReadSource(n, np.random.default_rng(0), span=span)
+    first = [src.next_op(0.0) for _ in range(span)]
+    second = [src.next_op(0.0) for _ in range(span)]
+    assert all(not op.is_read for op in first)
+    assert all(op.is_read for op in second)
+    assert [op.lba for op in first] == [op.lba for op in second]
+    # next extent starts where the previous ended
+    assert src.next_op(0.0).lba == span % n
+
+
+def test_write_then_read_draws_no_rng():
+    rng = np.random.default_rng(11)
+    before = rng.bit_generator.state
+    src = WriteThenReadSource(500, rng, span=32)
+    for _ in range(200):
+        src.next_op(0.0)
+    assert rng.bit_generator.state == before
+
+
+# -- phase boundaries --------------------------------------------------------
+
+class _Tagged(OpSource):
+    """Emits its own phase id as the LBA — leaks across boundaries are
+    visible as a wrong id at a known offset."""
+
+    def __init__(self, ident):
+        self.ident = ident
+        self.drawn = 0
+
+    def next_op(self, now):
+        self.drawn += 1
+        return Op(self.ident, False)
+
+
+def test_phased_scenario_budgets_are_exact():
+    srcs = [_Tagged(i) for i in range(3)]
+    sc = PhasedScenario([
+        Phase("precondition", srcs[0], 10, measure=False),
+        Phase("burst", srcs[1], 7, warmup=3),
+        Phase("measure", srcs[2], 5),
+    ])
+    ids = [sc.next_op(0.0).lba for _ in range(40)]
+    # exactly total_ops from each non-final phase, in order; the final
+    # phase is open-ended and absorbs the closed-loop overshoot
+    assert ids == [0] * 10 + [1] * 10 + [2] * 20
+    assert srcs[0].drawn == 10 and srcs[1].drawn == 10 and srcs[2].drawn == 20
+
+
+def test_phased_scenario_rejects_empty_and_zero_budget():
+    with pytest.raises(AssertionError):
+        PhasedScenario([])
+    with pytest.raises(AssertionError):
+        PhasedScenario([Phase("a", _Tagged(0), 0),
+                        Phase("b", _Tagged(1), 5)])
+
+
+def test_phased_scenario_current_phase_tracks():
+    sc = PhasedScenario([Phase("a", _Tagged(0), 2), Phase("b", _Tagged(1), 2)])
+    assert sc.current_phase.name == "a"
+    for _ in range(3):
+        sc.next_op(0.0)
+    assert sc.current_phase.name == "b"
+
+
+def test_run_phased_windows_do_not_leak(tmp_path):
+    """Sim-level boundary check: each phase's measurement window reports
+    exactly its own op budget, and per-window counters restart at the
+    boundary — the write-only phase sees zero SSD fill reads, the read-only
+    phase sees them, so the two windows demonstrably don't share counters.
+    (Background flushes DO continue into the read phase: the flusher
+    draining the burst's dirty pages is the drain phase's entire point.)"""
+    from repro.core.gc_sim import SSDParams
+    from repro.core.safs_sim import SAFSSim, SAFSWorkload
+
+    P = SSDParams(capacity_pages=4096)
+    sim = SAFSSim(2, P, 0.8, SAFSWorkload(concurrency=32), seed=0)
+    n = sim.n_live
+    rng = np.random.default_rng(1)
+    phases = [
+        Phase("write_burst", HotColdSource(n, rng, read_frac=0.0), 1500,
+              warmup=300),
+        Phase("read_drain", HotColdSource(n, rng, read_frac=1.0), 1500,
+              warmup=600),
+    ]
+    out = sim.run_phased(phases)
+    assert [name for name, _ in out] == ["write_burst", "read_drain"]
+    burst, drain = out[0][1], out[1][1]
+    assert burst.app_ops == 1500 and drain.app_ops == 1500
+    # aligned writes fill no pages -> zero SSD reads in the write window;
+    # the read window's misses do fill. Any cross-window counter leak (in
+    # either direction) breaks one of the two.
+    assert burst.ssd_reads == 0
+    assert drain.ssd_reads > 0
+    assert burst.flush_writes + burst.demand_writes > 0
+
+
+# -- hypothesis widening -----------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=100, deadline=None)
+    @given(n_live=st.integers(min_value=1, max_value=600),
+           stride=st.integers(min_value=1, max_value=2000))
+    def test_strided_coverage_property(n_live, stride):
+        src = StridedSource(n_live, np.random.default_rng(0), stride=stride)
+        lbas = sorted(src.next_op(0.0).lba for _ in range(n_live))
+        assert lbas == list(range(n_live))
+
+    @settings(max_examples=100, deadline=None)
+    @given(n_live=st.integers(min_value=1, max_value=500),
+           n_ops=st.integers(min_value=1, max_value=1500))
+    def test_snake_bounds_property(n_live, n_ops):
+        src = SnakeSource(n_live, np.random.default_rng(0))
+        for _ in range(n_ops):
+            assert 0 <= src.next_op(0.0).lba < n_live
+
+    @settings(max_examples=100, deadline=None)
+    @given(budgets=st.lists(st.integers(min_value=1, max_value=50),
+                            min_size=1, max_size=6),
+           extra=st.integers(min_value=0, max_value=100))
+    def test_phased_budget_property(budgets, extra):
+        srcs = [_Tagged(i) for i in range(len(budgets))]
+        sc = PhasedScenario([Phase(str(i), s, b)
+                             for i, (s, b) in enumerate(zip(srcs, budgets))])
+        total = sum(budgets) + extra
+        ids = [sc.next_op(0.0).lba for _ in range(total)]
+        want = []
+        for i, b in enumerate(budgets[:-1]):
+            want += [i] * b
+        want += [len(budgets) - 1] * (budgets[-1] + extra)
+        assert ids == want

@@ -1,11 +1,12 @@
 """Process-sharded array simulation: partitioning, merging, determinism,
-and the 100+ SSD scale path."""
+and the 100+ SSD scale path (raw array and full SAFS)."""
 import numpy as np
 import pytest
 
 from repro.core.gc_sim import ArrayResults, SSDParams, Workload
-from repro.core.sharded import ShardedArraySim, merge_results, pool_samples, \
-    shard_seed, shard_sizes
+from repro.core.safs_sim import SAFSResults, SAFSWorkload
+from repro.core.sharded import ShardedArraySim, ShardedSAFSSim, \
+    merge_results, merge_safs_results, pool_samples, shard_seed, shard_sizes
 
 SMALL = SSDParams(capacity_pages=4096)
 
@@ -86,6 +87,88 @@ def test_window_splits_proportionally():
     assert [a[3].w_total for a in args] == [40, 30, 30]
     assert [a[3].n_streams for a in args] == [4, 3, 3]
     assert sum(a[5] for a in args) == pytest.approx(3000, abs=len(args))
+
+
+# -- sharded SAFS ------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario", ["random", "hot_cold"])
+@pytest.mark.parametrize("use_flusher", [True, False])
+def test_safs_serial_equals_parallel(scenario, use_flusher):
+    """Acceptance: serial == sharded bit-identity on two patterns x two
+    policies (flusher on/off) — the worker-pool path must match the same
+    shard decomposition run in-process, field for field."""
+    wl = SAFSWorkload(read_frac=0.3, scenario=scenario, concurrency=128)
+    a = ShardedSAFSSim(8, SMALL, 0.8, wl, use_flusher=use_flusher, seed=3,
+                       n_shards=4, parallel=True).run(4000)
+    b = ShardedSAFSSim(8, SMALL, 0.8, wl, use_flusher=use_flusher, seed=3,
+                       n_shards=4, parallel=False).run(4000)
+    assert a.app_iops == b.app_iops
+    assert a.hit_rate == b.hit_rate
+    assert a.ssd_page_writes == b.ssd_page_writes
+    assert a.flush_writes == b.flush_writes
+    assert a.demand_writes == b.demand_writes
+    assert a.p99_latency == b.p99_latency
+    assert a.cache_hits == b.cache_hits
+    assert a.cache_lookups == b.cache_lookups
+    np.testing.assert_array_equal(a.util, b.util)
+
+
+def test_safs_sharded_is_deterministic():
+    wl = SAFSWorkload(read_frac=0.3, concurrency=64)
+    a = ShardedSAFSSim(4, SMALL, 0.8, wl, seed=9, n_shards=2).run(2000)
+    b = ShardedSAFSSim(4, SMALL, 0.8, wl, seed=9, n_shards=2).run(2000)
+    assert a.app_iops == b.app_iops and a.p95_latency == b.p95_latency
+    assert a.hit_rate == b.hit_rate
+
+
+def test_safs_merge_pools_hit_rate_from_raw_counters():
+    """Hit rate must be recomputed from pooled hits/lookups, never an
+    average of per-shard ratios (unequal lookup counts would skew it)."""
+    mk = lambda iops, n, hits, lk: SAFSResults(
+        app_iops=iops, hit_rate=hits / max(lk, 1), ssd_page_writes=10,
+        flush_writes=5, demand_writes=1, ssd_reads=2, stale_discards=0,
+        app_ops=100, mean_latency=0.0, sim_time=1.0, util=np.full(n, 0.5),
+        events=10, wall_s=1.0, cache_hits=hits, cache_lookups=lk)
+    parts = [mk(100.0, 2, 90, 100), mk(300.0, 3, 10, 1000)]
+    pooled = pool_samples([np.array([1.0, 2.0, 3.0]), np.array([4.0, 5.0])])
+    m = merge_safs_results(parts, pooled)
+    assert m.app_iops == 400.0
+    assert m.hit_rate == pytest.approx(100 / 1100)   # NOT (0.9 + 0.01) / 2
+    assert m.util.shape == (5,)
+    assert m.p50_latency == 3.0                      # exact over pooled
+    assert m.ssd_page_writes == 20 and m.flush_writes == 10
+
+
+def test_safs_concurrency_splits_proportionally():
+    sim = ShardedSAFSSim(10, SMALL, 0.8,
+                         SAFSWorkload(concurrency=320), n_shards=3)
+    args = sim._shard_args(3000, None)
+    assert [a[0] for a in args] == [4, 3, 3]
+    assert [a[3].concurrency for a in args] == [128, 96, 96]
+
+
+def test_safs_sharded_rejects_qos_and_trace():
+    from repro.core.qos import QosPolicy, TenantSpec
+    qos = QosPolicy(tenants=(TenantSpec(0, 1.0), TenantSpec(1, 1.0)))
+    with pytest.raises(NotImplementedError):
+        ShardedSAFSSim(4, SMALL, qos=qos)
+    with pytest.raises(NotImplementedError):
+        ShardedSAFSSim(4, SMALL, workload=SAFSWorkload(scenario="trace"))
+
+
+@pytest.mark.slow
+def test_safs_scale_sweep_128_ssds():
+    """The tentpole unlock: the paper's actual system (SA-cache + flusher)
+    at 128 SSDs, with skew locality surviving the scale-out."""
+    wl = lambda scen: SAFSWorkload(read_frac=0.3, scenario=scen,
+                                   concurrency=32 * 128)
+    sk = ShardedSAFSSim(128, SSDParams(capacity_pages=8192), 0.8,
+                        wl("hot_cold"), seed=0, n_shards=4).run(20000)
+    un = ShardedSAFSSim(128, SSDParams(capacity_pages=8192), 0.8,
+                        wl("random"), seed=0, n_shards=4).run(20000)
+    assert sk.util.shape == (128,)
+    assert sk.hit_rate > un.hit_rate          # skew locality preserved
+    assert sk.app_ops == 20000 and un.app_ops == 20000
 
 
 @pytest.mark.slow
