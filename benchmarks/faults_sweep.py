@@ -1,0 +1,278 @@
+"""Fault-injection sweeps: fail-slow / crash / media-error schedules vs the
+host-side defenses (core/faults.py), each with self-checking acceptance
+booleans:
+
+* ``fail_slow`` — read-only foreground on RAID-5 with one persistently
+  slow member (service times x6). Undefended, every submission stream
+  eventually head-of-line blocks behind the slow member's full queue and
+  the healthy peers starve (~11% utilization while the sick member pins
+  at ~75%). Defended (hedged reads + the peer-relative detector with
+  quarantine), late reads speculatively reconstruct from siblings and the
+  suspect's admission is capped + reads steered away. Gates
+  (seed-averaged): defended read p99 DOWN and the starved *healthy*
+  members' min utilization UP vs undefended (the array-wide ``util_min``
+  is the quarantined member itself, by design ~0 once reads steer
+  around it); hedges fired and the slow member was quarantined.
+* ``crash_rebuild`` — a member dies mid-run: its group plans degraded from
+  the crash on, the rebuild tenant spawns at crash time, and the group
+  heals when the spare is rebuilt. Gates: rebuild completes in-run on
+  every seed (``rebuild_completed_at >= 0``), the redundancy gap
+  ``data_at_risk_s`` is recorded, and the foreground p99 stays within
+  ``CRASH_P99_BOUND`` x the fault-free baseline.
+* ``retry_bound`` — uniform media errors under bounded host retries:
+  retry chains never exceed ``max_retries`` re-issues, every retry is
+  accounted to an injected error, and the whole faulted run is
+  bit-deterministic (two runs at one seed produce identical results).
+
+Usage (relative imports — run as a module):
+    PYTHONPATH=src python -m benchmarks.faults_sweep           # 18 SSDs
+    PYTHONPATH=src python -m benchmarks.faults_sweep --smoke   # 6 SSDs, CI
+
+Writes ``BENCH_faults.json`` (repo root) and ``experiments/bench/``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.faults import Crash, FailSlow, FaultPolicy, MediaError, \
+    RetryPolicy
+from repro.core.gc_sim import ArraySim, SSDParams, Workload
+from repro.core.raid import Raid5Layout
+
+from .common import SSD, save
+
+ROOT = Path(__file__).resolve().parent.parent
+
+SLOW_FACTOR = 6.0
+# foreground tail budget while degraded + rebuilding (x fault-free p99)
+CRASH_P99_BOUND = 3.0
+
+
+def _row(r, sick=None):
+    out = {
+        "iops": float(r.iops),
+        "p99_ms": 1e3 * r.p99_latency,
+        "p95_ms": 1e3 * r.p95_latency,
+        "mean_ms": 1e3 * r.mean_latency,
+        "util_min": float(r.util_min),
+        "util_spread": float(r.util_spread),
+        "degraded_reads": int(r.degraded_reads),
+        "rebuild_rows": int(r.rebuild_rows),
+        "events": int(r.events),
+    }
+    if sick is not None:
+        # min utilization over the members that are NOT the injected
+        # fail-slow device: the starvation the defense is meant to lift
+        out["util_healthy_min"] = float(min(
+            u for i, u in enumerate(r.util) if i != sick))
+    if r.faults is not None:
+        out["faults"] = dict(r.faults)
+    return out
+
+
+def _mean_rows(rows, keys):
+    return {k: float(np.mean([row[k] for row in rows])) for k in keys}
+
+
+def fail_slow_scenario(n_ssds, group, w_total, ops_per_ssd, seeds):
+    """Read-only foreground on RAID-5, one member x6 slow from t=0:
+    undefended vs hedged reads + detector quarantine. ``quarantine_qd=16``
+    (half the host qd) rather than the aggressive default of 2: the cap
+    must bound the suspect's backlog without head-of-line blocking the
+    submission streams that still target it before steering kicks in."""
+    wl = Workload(read_frac=1.0, w_total=w_total, qd_per_ssd=32,
+                  n_streams=n_ssds)
+    layout = Raid5Layout(group=group)
+    slow = FailSlow(device=0, onset=0.0, slow_factor=SLOW_FACTOR)
+    policies = {
+        "no_defense": FaultPolicy(events=(slow,)),
+        "defended": FaultPolicy(events=(slow,), hedge_after=1.5e-3,
+                                detect=True, detect_min_samples=32,
+                                detect_every=32, quarantine_qd=16),
+    }
+    out = {"config": {"n_ssds": n_ssds, "group": group, "w_total": w_total,
+                      "ops_per_ssd": ops_per_ssd, "seeds": list(seeds),
+                      "slow_factor": SLOW_FACTOR, "sick_device": 0}}
+    for name, pol in policies.items():
+        rows = []
+        for seed in seeds:
+            sim = ArraySim(n_ssds, SSD, 0.6, wl, seed=seed, layout=layout,
+                           faults=pol, prefill_cache=True)
+            rows.append(_row(sim.run(ops_per_ssd * n_ssds), sick=0))
+        mean = _mean_rows(rows, ("iops", "p99_ms", "util_min",
+                                 "util_healthy_min"))
+        out[name] = {"seeds": rows, "mean": mean}
+        f = rows[0]["faults"]
+        print(f"  {name:11s} iops {mean['iops']:9,.0f}  "
+              f"p99 {mean['p99_ms']:6.2f} ms  "
+              f"peer util_min {mean['util_healthy_min']:.3f}  "
+              f"hedges {f['hedged_reads']}/{f['hedge_wins']} won  "
+              f"quarantines {f['quarantines']}")
+    return out
+
+
+def crash_rebuild_scenario(n_ssds, group, w_total, seeds):
+    """Mixed workload on small-capacity members so the rebuild finishes
+    in-run: baseline (faults=None) vs a mid-run member crash."""
+    wl = Workload(read_frac=0.5, w_total=w_total, qd_per_ssd=32,
+                  n_streams=n_ssds)
+    layout = Raid5Layout(group=group)
+    ssd = SSDParams(capacity_pages=2048)
+    ops = 5000 * n_ssds
+    crash = FaultPolicy(events=(Crash(device=1, at_time=0.05),))
+    out = {"config": {"n_ssds": n_ssds, "group": group, "w_total": w_total,
+                      "ops": ops, "seeds": list(seeds),
+                      "capacity_pages": 2048, "crash_at": 0.05}}
+    for name, pol in (("baseline", None), ("crash", crash)):
+        rows = []
+        for seed in seeds:
+            sim = ArraySim(n_ssds, ssd, 0.5, wl, seed=seed, layout=layout,
+                           faults=pol, prefill_cache=True)
+            rows.append(_row(sim.run(ops)))
+        mean = _mean_rows(rows, ("iops", "p99_ms", "mean_ms"))
+        out[name] = {"seeds": rows, "mean": mean}
+        if name == "crash":
+            f = rows[0]["faults"]
+            print(f"  {name:9s} iops {mean['iops']:9,.0f}  "
+                  f"p99 {mean['p99_ms']:5.2f} ms  "
+                  f"rebuilt @ {f['rebuild_completed_at']:.3f} s  "
+                  f"at-risk {f['data_at_risk_s']:.3f} s  "
+                  f"rows {rows[0]['rebuild_rows']}")
+        else:
+            print(f"  {name:9s} iops {mean['iops']:9,.0f}  "
+                  f"p99 {mean['p99_ms']:5.2f} ms")
+    return out
+
+
+def retry_bound_scenario(n_ssds, w_total, ops_per_ssd, seeds):
+    """JBOD + uniform media errors under bounded retries; one seed is run
+    twice to pin bit-determinism of the faulted path."""
+    wl = Workload(read_frac=0.7, w_total=w_total, qd_per_ssd=32,
+                  n_streams=n_ssds)
+    retry = RetryPolicy(max_retries=3, backoff=100e-6, backoff_mult=2.0)
+    # deliberately absurd BER: the point is to exercise multi-step retry
+    # chains (p(chain >= 2) = ber^2) and pin the bound, not realism
+    pol = FaultPolicy(events=(MediaError(read_ber=0.05),), retry=retry)
+    out = {"config": {"n_ssds": n_ssds, "w_total": w_total,
+                      "ops_per_ssd": ops_per_ssd, "seeds": list(seeds),
+                      "read_ber": 0.05, "max_retries": retry.max_retries}}
+    rows = []
+    for seed in seeds:
+        sim = ArraySim(n_ssds, SSD, 0.6, wl, seed=seed, faults=pol,
+                       prefill_cache=True)
+        rows.append(_row(sim.run(ops_per_ssd * n_ssds)))
+    out["seeds"] = rows
+    twin = _row(ArraySim(n_ssds, SSD, 0.6, wl, seed=seeds[0], faults=pol,
+                         prefill_cache=True).run(ops_per_ssd * n_ssds))
+    out["deterministic"] = twin == rows[0]
+    f = rows[0]["faults"]
+    print(f"  media errors {f['media_errors']}, retries {f['retries']}, "
+          f"deepest chain {f['max_attempts']} "
+          f"(bound {retry.max_retries + 1}), "
+          f"deterministic={out['deterministic']}")
+    return out, retry.max_retries
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small array (< 1 min), for CI / tests")
+    ap.add_argument("--n-ssds", type=int, default=None)
+    ap.add_argument("--group", type=int, default=None)
+    ap.add_argument("--ops-per-ssd", type=int, default=None)
+    ap.add_argument("--seeds", type=int, nargs="+", default=None)
+    ap.add_argument("--out", default=str(ROOT / "BENCH_faults.json"))
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        n_ssds = args.n_ssds or 6
+        group = args.group or 6
+        ops = args.ops_per_ssd or 300
+        seeds = tuple(args.seeds or (0, 1))
+    else:
+        n_ssds = args.n_ssds or 18
+        group = args.group or 6
+        ops = args.ops_per_ssd or 600
+        seeds = tuple(args.seeds or (0, 1, 2))
+    # moderate host window: deep enough to keep the array busy, shallow
+    # enough that a slow member's backlog head-of-line blocks the streams —
+    # the regime hedging and quarantine are for
+    w_total = (128 * n_ssds) // 18
+
+    t0 = time.perf_counter()
+    result = {
+        "smoke": args.smoke,
+        "cpu_count": os.cpu_count(),
+        "n_ssds": n_ssds,
+        "group": group,
+        "ops_per_ssd": ops,
+        "seeds": list(seeds),
+        "w_total": w_total,
+    }
+    print(f"fail-slow defense ({n_ssds} SSDs RAID-5 group {group}, "
+          f"read-only, W={w_total}):")
+    result["fail_slow"] = fail_slow_scenario(n_ssds, group, w_total, ops,
+                                             seeds)
+    print("mid-run crash -> rebuild (small members, RAID-5):")
+    result["crash_rebuild"] = crash_rebuild_scenario(n_ssds, group, w_total,
+                                                     seeds)
+    print("media-error retry bound (JBOD):")
+    result["retry_bound"], max_retries = retry_bound_scenario(
+        n_ssds, w_total, ops, seeds)
+    result["wall_s"] = time.perf_counter() - t0
+
+    fs = result["fail_slow"]
+    cr = result["crash_rebuild"]
+    rb = result["retry_bound"]
+    checks = {
+        # the tentpole claim: hedged reads + quarantine pull the slow
+        # member off the read path, cutting the tail and un-starving peers
+        "defense_cuts_p99":
+            fs["defended"]["mean"]["p99_ms"]
+            < 0.8 * fs["no_defense"]["mean"]["p99_ms"],
+        "defense_raises_peer_util_min":
+            fs["defended"]["mean"]["util_healthy_min"]
+            > fs["no_defense"]["mean"]["util_healthy_min"],
+        "defense_hedges_fired": all(
+            row["faults"]["hedged_reads"] > 0
+            for row in fs["defended"]["seeds"]),
+        "defense_quarantined_slow_member": all(
+            row["faults"]["quarantines"] >= 1
+            for row in fs["defended"]["seeds"]),
+        # crash path: the rebuild tenant finishes while foreground load runs
+        "rebuild_completes_every_seed": all(
+            row["faults"]["rebuild_completed_at"] >= 0.0
+            and row["faults"]["data_at_risk_s"] > 0.0
+            for row in cr["crash"]["seeds"]),
+        "crash_p99_bounded":
+            cr["crash"]["mean"]["p99_ms"]
+            < CRASH_P99_BOUND * cr["baseline"]["mean"]["p99_ms"],
+        # retries: bounded, accounted, deterministic
+        "retries_bounded": all(
+            row["faults"]["max_attempts"] <= max_retries + 1
+            and row["faults"]["retries"] <= row["faults"]["media_errors"]
+            and row["faults"]["media_errors"] > 0
+            for row in rb["seeds"]),
+        "faulted_run_deterministic": rb["deterministic"],
+    }
+    result["checks"] = checks
+    ok = all(checks.values())
+    result["all_checks_pass"] = ok
+
+    Path(args.out).write_text(json.dumps(result, indent=1, default=float))
+    save("BENCH_faults", result)
+    print(f"faults sweep done in {result['wall_s']:.1f}s; checks: "
+          + ", ".join(f"{k}={'OK' if v else 'FAIL'}"
+                      for k, v in checks.items()))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,13 +7,51 @@ raises — a single broken sweep must not mask the rest (the same failure mode
 the CI pipeline fixed by dropping ``-x`` from the nightly). The exit code is
 nonzero iff any section failed, and a summary table names the failures.
 
-  PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run --list      # section keys
+  PYTHONPATH=src python -m benchmarks.run --only faults --fast
+
+``--only <key>`` runs a single registered section — CI smoke steps invoke
+sections through it instead of duplicating per-benchmark subprocess
+incantations in ci.yml.
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import time
 import traceback
+
+# (key, module, title, takes the --smoke tier args?) — in run order. The
+# non-tier sections import jax; they are registered LAST so the sharded
+# sims' worker pools (first six sections) can still use the fast 'fork'
+# start method (forking after the multithreaded JAX runtime initializes
+# risks worker deadlock, and the fallback 'spawn' pool is slower to start).
+_SECTIONS: list[tuple[str, str, str, bool]] = [
+    ("perf", "perf_bench",
+     "Engine perf -- events/sec (calendar-queue engine)", True),
+    ("scale", "scale_sweep",
+     "Array scale -- sharded 100+ SSD qd sweep", True),
+    ("safs_scale", "safs_scale_sweep",
+     "SAFS scale -- sharded SAFS pattern sweep @ 18/64/128 SSDs", True),
+    ("raid", "raid_sweep",
+     "Array layouts -- JBOD vs RAID-0 vs RAID-5 under active GC", True),
+    ("qos", "qos_sweep",
+     "Per-tenant QoS -- weighted shares + SLO protection under GC", True),
+    ("gc_coord", "gc_coord_sweep",
+     "GC coordination -- staggered/idle policies vs reactive trigger", True),
+    ("faults", "faults_sweep",
+     "Faults -- fail-slow/crash injection vs hedging + quarantine", True),
+    ("paper_tables", "paper_tables",
+     "Paper -- Table 1 / Table 2 / Figure 2 (raw array under GC)", False),
+    ("paper_figs", "paper_figs",
+     "Paper -- Figures 3-5, Table 3 (SAFS + dirty-page flusher)", False),
+    ("serving", "serving_bench",
+     "Beyond-paper -- flusher in the paged-KV serving engine", False),
+    ("roofline", "roofline",
+     "Roofline -- per (arch x shape), single-pod 16x16 (from dry-run)",
+     False),
+]
 
 
 def _run_section(results: list, title: str, fn, *fn_args) -> None:
@@ -33,53 +71,33 @@ def _run_section(results: list, title: str, fn, *fn_args) -> None:
 
 
 def main(argv=None):
+    keys = [k for k, _, _, _ in _SECTIONS]
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller op counts (CI)")
+    ap.add_argument("--only", choices=keys, metavar="SECTION",
+                    help=f"run a single section: {', '.join(keys)}")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered section keys and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        for key, _, title, _ in _SECTIONS:
+            print(f"{key:14s} {title}")
+        return 0
     tier = ["--smoke"] if args.fast else []
-
-    # perf + scale + raid first, before anything imports jax: the sharded
-    # sims' worker pool can then use the fast 'fork' start method (forking
-    # after the multithreaded JAX runtime initializes risks worker deadlock,
-    # and the fallback 'spawn' pool is slower to start)
-    from . import gc_coord_sweep, perf_bench, qos_sweep, raid_sweep, \
-        safs_scale_sweep, scale_sweep
+    sections = [s for s in _SECTIONS if args.only is None or s[0] == args.only]
 
     t0 = time.time()
     results: list[tuple[str, int, float]] = []
-    _run_section(results,
-                 "SSEngine perf -- events/sec (calendar-queue engine)",
-                 perf_bench.main, tier)
-    _run_section(results,
-                 "SSArray scale -- sharded 100+ SSD qd sweep",
-                 scale_sweep.main, tier)
-    _run_section(results,
-                 "SSSAFS scale -- sharded SAFS pattern sweep @ 18/64/128 SSDs",
-                 safs_scale_sweep.main, tier)
-    _run_section(results,
-                 "SSArray layouts -- JBOD vs RAID-0 vs RAID-5 under active GC",
-                 raid_sweep.main, tier)
-    _run_section(results,
-                 "SSPer-tenant QoS -- weighted shares + SLO protection under GC",
-                 qos_sweep.main, tier)
-    _run_section(results,
-                 "SSGC coordination -- staggered/idle policies vs reactive trigger",
-                 gc_coord_sweep.main, tier)
-
-    from . import paper_figs, paper_tables, roofline, serving_bench
-    _run_section(results,
-                 "SSPaper -- Table 1 / Table 2 / Figure 2 (raw array under GC)",
-                 paper_tables.main)
-    _run_section(results,
-                 "SSPaper -- Figures 3-5, Table 3 (SAFS + dirty-page flusher)",
-                 paper_figs.main)
-    _run_section(results,
-                 "SSBeyond-paper -- flusher in the paged-KV serving engine",
-                 serving_bench.main)
-    _run_section(results,
-                 "SSRoofline -- per (arch x shape), single-pod 16x16 (from dry-run)",
-                 roofline.main)
+    for _key, mod, title, takes_tier in sections:
+        # lazy per-section import: --only never pays for (or breaks on) the
+        # other sections' imports, and jax-importing sections stay unimported
+        # until every fork-pool section has run
+        module = importlib.import_module(f".{mod}", __package__)
+        if takes_tier:
+            _run_section(results, title, module.main, tier)
+        else:
+            _run_section(results, title, module.main)
 
     print("=" * 72)
     print("summary")

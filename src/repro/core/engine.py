@@ -480,6 +480,18 @@ class DeviceModel:
         """Requests inside the device (NCQ waiting + in service)."""
         return len(self.admitted) + self.in_service
 
+    def set_slot_cap(self, k: int) -> None:
+        """Quarantine hook (core/faults.py): cap NCQ admission depth at
+        ``k`` (clamped to [1, device_slots]); pass ``device_slots`` to
+        restore. Requests already admitted keep draining — only new
+        admissions see the cap — so tightening can never strand work.
+        Raising the cap re-kicks so a backlogged host queue refills the
+        freed slots immediately."""
+        old = self._slots
+        self._slots = max(1, min(k, self.server.p.device_slots))
+        if self._slots > old:
+            self.kick()
+
     def kick(self) -> None:
         """Admit from the host queue and start service / GC episodes."""
         admitted = self.admitted

@@ -1,0 +1,499 @@
+"""Deterministic fault injection + host-side resilience (ISSUE 7).
+
+The paper's premise is that GC makes members *intermittently* slow; real
+arrays additionally face *persistently* slow members (fail-slow), transient
+media errors, and outright device deaths. This module injects those faults
+deterministically and carries the host-side defenses:
+
+Injection (frozen, picklable :class:`FaultPolicy` spec, pattern-matching
+``GcPolicy``/``QosPolicy``):
+
+* :class:`FailSlow` — scales one device's service times by ``slow_factor``
+  for the episode ``[onset, onset + duration)``. Pure time-interval check,
+  consumes no RNG.
+* :class:`MediaError` — individual reads fail with probability ``read_ber``,
+  drawn from a dedicated decorrelated RNG stream (the workload RNG is never
+  touched, so the op sequence matches the fault-free run).
+* :class:`Crash` — kills a member mid-run: its RAID-5 group flips into the
+  degraded/reconstruction path dynamically and the rebuild tenant spawns at
+  crash time (subsuming the static ``Raid5Layout(degraded=1)`` path). The
+  crash is modeled as an instant spare swap: in-flight and already-queued
+  requests drain to the spare; only *new* planning treats the group as
+  degraded until the rebuild completes and heals it.
+
+Defense:
+
+* :class:`RetryPolicy` — bounded host retries for failed reads with
+  exponential sim-time backoff and a per-op timeout budget (give up early
+  when the op has already spent its budget).
+* Hedged reads (``FaultPolicy.hedge_after``) — a single-member striped read
+  that has not completed after the deadline speculatively issues sibling
+  reconstruction (the PR 5 ``_plan_read_steered`` machinery); the first leg
+  to finish completes the logical op, the loser is discarded by an epoch
+  check mirroring the flush lost-write fix. Hedges never fire on a degraded
+  group — reconstruction is already the primary path and there is no
+  redundancy left to hedge with.
+* Fail-slow detector (``FaultPolicy.detect``) — peer-relative EWMA of
+  per-device service occupancy vs. the array median; suspects are
+  *quarantined*: admission depth capped at ``quarantine_qd`` through the
+  existing ``steer_qd`` plumbing and (RAID-5) reads steered away via the
+  planner's avoid list. Detection latency and false positives are telemetry.
+  The detector observes per-op service occupancy — the completion-latency
+  component the device itself controls — so GC pauses and queue waits do
+  not trigger false quarantines; it consumes no RNG.
+
+``faults=None`` keeps every simulator byte-identical to the pre-fault path
+(goldens pinned); fault devices are remapped per shard (`slice_policy`) so
+serial == sharded stays bit-identical.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+
+import numpy as np
+
+from .workloads import _mix64
+
+_MASK = (1 << 64) - 1
+# splitmix64 salt decorrelating the media-error stream from the workload
+# stream (which uses the raw seed) and the per-tenant streams (qos.py)
+_MEDIA_SALT = 0x5FA117B0_5EED_C0DE & _MASK
+
+
+# ---------------------------------------------------------------------------
+# Fault event + policy specs (frozen, hashable, picklable)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FailSlow:
+    """Device ``device`` serves every request ``slow_factor`` x slower during
+    ``[onset, onset + duration)`` (sim seconds from run start)."""
+
+    device: int
+    onset: float = 0.0
+    duration: float = math.inf
+    slow_factor: float = 4.0
+
+
+@dataclass(frozen=True)
+class MediaError:
+    """Reads fail with probability ``read_ber`` (per completed read, from a
+    dedicated RNG stream). ``device=-1`` applies to every device."""
+
+    read_ber: float = 1e-4
+    device: int = -1
+
+
+@dataclass(frozen=True)
+class Crash:
+    """Device ``device`` dies at ``at_time`` (sim seconds from run start).
+
+    RAID-5 only: the member's group plans degraded from the crash on and the
+    rebuild tenant starts immediately; the group heals when every row has
+    been rebuilt onto the spare. ``SAFSSim`` models the spare swap without
+    redundancy: service continues, but background flusher writebacks to the
+    device are deferred (pages stay dirty) — see benchmarks/README.md."""
+
+    device: int
+    at_time: float
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Host-side read-retry discipline for media errors: up to
+    ``max_retries`` re-issues, the k-th after ``backoff * backoff_mult**k``
+    seconds; ``timeout > 0`` additionally abandons the retry loop once the
+    op's total elapsed time (including the pending backoff) would exceed
+    it."""
+
+    max_retries: int = 3
+    backoff: float = 100e-6
+    backoff_mult: float = 2.0
+    timeout: float = 0.0
+
+
+@dataclass(frozen=True)
+class FaultPolicy:
+    """Fault schedule + defense knobs for one run. Frozen and picklable:
+    safe to ship to sharded worker processes (see :func:`slice_policy`)."""
+
+    events: tuple = ()
+    retry: RetryPolicy = field(default_factory=RetryPolicy)
+    hedge_after: float = 0.0         # > 0: hedge single-member striped reads
+                                     # that are still in flight after this
+                                     # many seconds (RAID-5 only)
+    detect: bool = False             # peer-relative fail-slow detector
+    detect_alpha: float = 0.125      # EWMA smoothing of per-op service time
+    detect_ratio: float = 3.0        # quarantine when ewma > ratio * median
+    detect_release: float = 1.5      # release when ewma < release * median
+    detect_min_samples: int = 64     # per-device samples before judging
+    detect_every: int = 64           # run the sweep every N service starts
+    quarantine_qd: int = 2           # admission cap while quarantined
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+def validate_fault_policy(policy: FaultPolicy, n_ssds: int,
+                          layout=None) -> None:
+    """Reject conflicting/out-of-range fault knobs with errors that name
+    them. ``layout=None`` means the SAFS array (no layout semantics: crashes
+    are modeled as a spare swap with flusher deferral, so they are allowed
+    without parity)."""
+    if not isinstance(policy, FaultPolicy):
+        raise TypeError(f"faults must be a core.faults.FaultPolicy, "
+                        f"got {type(policy).__name__}")
+    r = policy.retry
+    _check(r.max_retries >= 0, f"RetryPolicy.max_retries={r.max_retries} "
+           f"must be >= 0")
+    _check(r.backoff > 0.0, f"RetryPolicy.backoff={r.backoff} must be > 0")
+    _check(r.backoff_mult >= 1.0, f"RetryPolicy.backoff_mult="
+           f"{r.backoff_mult} must be >= 1")
+    _check(r.timeout >= 0.0, f"RetryPolicy.timeout={r.timeout} must be >= 0")
+    _check(policy.hedge_after >= 0.0, f"FaultPolicy.hedge_after="
+           f"{policy.hedge_after} must be >= 0")
+    _check(policy.quarantine_qd >= 1, f"FaultPolicy.quarantine_qd="
+           f"{policy.quarantine_qd} must be >= 1")
+    _check(0.0 < policy.detect_alpha <= 1.0, f"FaultPolicy.detect_alpha="
+           f"{policy.detect_alpha} must be in (0, 1]")
+    _check(policy.detect_release < policy.detect_ratio,
+           f"FaultPolicy.detect_release={policy.detect_release} must be < "
+           f"detect_ratio={policy.detect_ratio} (hysteresis)")
+    crashes = []
+    for e in policy.events:
+        if isinstance(e, FailSlow):
+            _check(0 <= e.device < n_ssds,
+                   f"FailSlow.device={e.device} out of range for "
+                   f"n_ssds={n_ssds}")
+            _check(e.slow_factor >= 1.0, f"FailSlow.slow_factor="
+                   f"{e.slow_factor} must be >= 1 (a speedup is not a "
+                   f"fault)")
+            _check(e.onset >= 0.0 and e.duration > 0.0,
+                   f"FailSlow(onset={e.onset}, duration={e.duration}) "
+                   f"needs onset >= 0 and duration > 0")
+        elif isinstance(e, MediaError):
+            _check(e.device == -1 or 0 <= e.device < n_ssds,
+                   f"MediaError.device={e.device} out of range for "
+                   f"n_ssds={n_ssds} (use -1 for all devices)")
+            _check(0.0 <= e.read_ber < 1.0, f"MediaError.read_ber="
+                   f"{e.read_ber} must be in [0, 1)")
+        elif isinstance(e, Crash):
+            _check(0 <= e.device < n_ssds,
+                   f"Crash.device={e.device} out of range for "
+                   f"n_ssds={n_ssds}")
+            _check(e.at_time >= 0.0,
+                   f"Crash.at_time={e.at_time} must be >= 0")
+            crashes.append(e)
+        else:
+            raise TypeError(f"unknown fault event {type(e).__name__} "
+                            f"(expected FailSlow/MediaError/Crash)")
+    if crashes and layout is not None:
+        if not layout.parity:
+            raise ValueError(
+                f"Crash(device={crashes[0].device}) on a "
+                f"{layout.name!r} layout: no parity means no spare "
+                f"semantics (layout.rebuild cannot reconstruct the member) "
+                f"— a crashed member is data loss. Drop the Crash event or "
+                f"use Raid5Layout.")
+        if getattr(layout, "degraded", 0):
+            raise ValueError(
+                f"Crash(device={crashes[0].device}) combined with "
+                f"Raid5Layout(degraded={layout.degraded}): degraded=1 "
+                f"already fails a member of every group, so the crash is a "
+                f"second failure in its group — beyond single parity. Drop "
+                f"degraded= (the Crash subsumes it) or drop the Crash.")
+    if len(crashes) > 1:
+        raise ValueError(
+            f"{len(crashes)} Crash events in one FaultPolicy: correlated "
+            f"failures exceed single parity and are not modeled (ROADMAP "
+            f"follow-on) — keep at most one Crash per run.")
+
+
+def slice_policy(policy: FaultPolicy, lo: int, hi: int) -> FaultPolicy:
+    """Per-shard rewrite for the sharded runner: keep the events whose
+    device falls in ``[lo, hi)``, remapped to shard-local indices.
+    Device-less events (``MediaError(device=-1)``) ship to every shard —
+    each shard's injector draws from its own decorrelated stream (seeded
+    from the shard seed), exactly as the serial decomposition does, so
+    serial == sharded stays bit-identical."""
+    evs = []
+    for e in policy.events:
+        d = getattr(e, "device", -1)
+        if d < 0:
+            evs.append(e)
+        elif lo <= d < hi:
+            evs.append(replace(e, device=d - lo))
+    return replace(policy, events=tuple(evs))
+
+
+# ---------------------------------------------------------------------------
+# Per-run injector runtime
+# ---------------------------------------------------------------------------
+
+def _new_fault_stats() -> dict:
+    return {
+        "media_errors": 0,        # injected read failures
+        "retries": 0,             # host re-issues scheduled
+        "retry_exhausted": 0,     # reads abandoned at the retry bound
+        "timeouts": 0,            # retry loops abandoned on the op timeout
+        "max_attempts": 0,        # deepest retry chain observed
+        "hedged_reads": 0,        # hedge legs issued
+        "hedge_wins": 0,          # hedges that beat the primary leg
+        "fail_slow_episodes": 0,  # FailSlow episodes that began in-run
+        "crashes": 0,
+        "crash_at": -1.0,         # sim time of the crash (-1: none)
+        "rebuild_completed_at": -1.0,
+        "data_at_risk_s": -1.0,   # crash -> rebuild complete (redundancy gap)
+        "quarantines": 0,         # quarantine entries (incl. false positives)
+        "false_quarantines": 0,   # device was healthy when quarantined
+        "quarantine_time_s": 0.0,  # total device-seconds under quarantine
+        "detect_latency_s": -1.0,  # first true positive: onset -> quarantine
+        "flush_deferred": 0,      # SAFS writebacks deferred (re-dirtied)
+    }
+
+
+def merge_fault_stats(blocks) -> "dict | None":
+    """Sharded merge of per-shard ``faults`` blocks: counters add, time
+    accumulators add, first-occurrence sentinels take the defined value
+    (at most one shard holds the crash; detection latency is the earliest
+    detection across shards)."""
+    blocks = [b for b in blocks if b is not None]
+    if not blocks:
+        return None
+    out = _new_fault_stats()
+    for b in blocks:
+        for k in ("media_errors", "retries", "retry_exhausted", "timeouts",
+                  "hedged_reads", "hedge_wins", "fail_slow_episodes",
+                  "crashes", "quarantines", "false_quarantines",
+                  "flush_deferred"):
+            out[k] += b[k]
+        out["max_attempts"] = max(out["max_attempts"], b["max_attempts"])
+        out["quarantine_time_s"] += b["quarantine_time_s"]
+        for k in ("crash_at", "rebuild_completed_at", "data_at_risk_s"):
+            if b[k] >= 0.0:
+                out[k] = b[k]
+        if b["detect_latency_s"] >= 0.0:
+            if out["detect_latency_s"] < 0.0:
+                out["detect_latency_s"] = b["detect_latency_s"]
+            else:
+                out["detect_latency_s"] = min(out["detect_latency_s"],
+                                              b["detect_latency_s"])
+    return out
+
+
+class FaultInjector:
+    """Mutable per-run runtime for one :class:`FaultPolicy`.
+
+    Owns the fault schedule, the dedicated media-error RNG stream, the
+    detector/quarantine state, and the ``faults`` stats block. The run
+    loops bind it per run (:meth:`bind`) and consult it inline; every call
+    is deterministic given the seed and the (already deterministic) event
+    order. A fresh injector is built per ``ArraySim.run()`` — fault event
+    times are relative to each run's t=0 (``run_phased`` re-arms them each
+    phase); ``SAFSSim`` keeps one injector on its persistent loop."""
+
+    def __init__(self, policy: FaultPolicy, n: int, seed: int) -> None:
+        self.policy = policy
+        self.n = n
+        # fail-slow episodes per device: [onset, end, factor, counted?]
+        self.slow: list[list[list]] = [[] for _ in range(n)]
+        self.media_ber = [0.0] * n
+        self.crash_event: "Crash | None" = None
+        for e in policy.events:
+            if isinstance(e, FailSlow):
+                end = e.onset + e.duration
+                self.slow[e.device].append([e.onset, end, e.slow_factor,
+                                            False])
+            elif isinstance(e, MediaError):
+                if e.device < 0:
+                    for i in range(n):
+                        self.media_ber[i] += e.read_ber
+                else:
+                    self.media_ber[e.device] += e.read_ber
+            elif isinstance(e, Crash):
+                self.crash_event = e
+        for i in range(n):
+            self.slow[i].sort(key=lambda ep: ep[0])
+            self.media_ber[i] = min(self.media_ber[i], 1.0 - 1e-12)
+        self.any_media = any(b > 0.0 for b in self.media_ber)
+        # dedicated decorrelated stream: media errors must not perturb the
+        # workload RNG (the op sequence matches the fault-free run)
+        self._rng = np.random.default_rng(
+            _mix64((seed & _MASK) ^ _MEDIA_SALT))
+        self._draw = self._rng.random
+        r = policy.retry
+        self.max_retries = r.max_retries
+        self.backoff = r.backoff
+        self.backoff_mult = r.backoff_mult
+        self.timeout = r.timeout
+        self.hedge_after = policy.hedge_after
+        # -- detector / quarantine ------------------------------------------
+        self.detect = policy.detect
+        self.ewma = [0.0] * n
+        self.ew_n = [0] * n
+        self.quarantined = [False] * n
+        self._q_since = [0.0] * n
+        self._notes = 0
+        self.crashed = [False] * n
+        # host hooks, bound per run loop
+        self.on_quarantine = None     # f(i): apply the admission cap
+        self.on_release = None        # f(i): lift it (and unpark waiters)
+        self.stats = _new_fault_stats()
+
+    # -- fail-slow -----------------------------------------------------------
+    def has_slow(self, i: int) -> bool:
+        return bool(self.slow[i])
+
+    def slow_mult(self, i: int, now: float) -> float:
+        for ep in self.slow[i]:
+            if ep[0] <= now < ep[1]:
+                if not ep[3]:
+                    ep[3] = True
+                    self.stats["fail_slow_episodes"] += 1
+                return ep[2]
+            if ep[0] > now:
+                break
+        return 1.0
+
+    def is_slow_now(self, i: int, now: float) -> bool:
+        return any(ep[0] <= now < ep[1] for ep in self.slow[i])
+
+    def wrap_service_time(self, i: int, base, loop):
+        """Per-device service-time wrapper: FailSlow scaling plus detector
+        sampling. Built only for devices that need either — ``faults=None``
+        never reaches this, keeping the plain closures byte-identical."""
+        has_slow = self.has_slow(i)
+        if self.detect:
+            note = self.note_service
+            if has_slow:
+                mult = self.slow_mult
+
+                def service_time(req):
+                    dt = base(req) * mult(i, loop.now)
+                    note(i, dt, loop.now)
+                    return dt
+            else:
+                def service_time(req):
+                    dt = base(req)
+                    note(i, dt, loop.now)
+                    return dt
+            return service_time
+        mult = self.slow_mult
+
+        def service_time(req):
+            return base(req) * mult(i, loop.now)
+        return service_time
+
+    # -- media errors + retries ---------------------------------------------
+    def read_fails(self, i: int) -> bool:
+        ber = self.media_ber[i]
+        if ber <= 0.0:
+            return False
+        if self._draw() < ber:
+            self.stats["media_errors"] += 1
+            return True
+        return False
+
+    def retry_decision(self, attempt: int, t_issue: float,
+                       now: float) -> "tuple[bool, float]":
+        """Host policy after a failed read on its ``attempt``-th try
+        (0-based): ``(retry?, backoff delay)``. Deterministic and bounded:
+        at most ``max_retries`` re-issues, abandoned early when the op's
+        elapsed time plus the pending backoff would blow the timeout."""
+        st = self.stats
+        if attempt + 1 > st["max_attempts"]:
+            st["max_attempts"] = attempt + 1
+        if attempt >= self.max_retries:
+            st["retry_exhausted"] += 1
+            return False, 0.0
+        delay = self.backoff * self.backoff_mult ** attempt
+        if self.timeout > 0.0 and (now - t_issue) + delay > self.timeout:
+            st["timeouts"] += 1
+            return False, 0.0
+        st["retries"] += 1
+        return True, delay
+
+    # -- hedged reads --------------------------------------------------------
+    def note_hedge(self) -> None:
+        self.stats["hedged_reads"] += 1
+
+    def note_hedge_win(self) -> None:
+        self.stats["hedge_wins"] += 1
+
+    # -- crash / rebuild -----------------------------------------------------
+    def note_crash(self, i: int, now: float) -> None:
+        self.crashed[i] = True
+        self.stats["crashes"] += 1
+        self.stats["crash_at"] = now
+
+    def note_rebuild_complete(self, now: float) -> None:
+        self.stats["rebuild_completed_at"] = now
+        if self.stats["crash_at"] >= 0.0:
+            self.stats["data_at_risk_s"] = now - self.stats["crash_at"]
+
+    # -- detector ------------------------------------------------------------
+    def note_service(self, i: int, dt: float, now: float) -> None:
+        if self.ew_n[i] == 0:
+            self.ewma[i] = dt
+        else:
+            a = self.policy.detect_alpha
+            self.ewma[i] += a * (dt - self.ewma[i])
+        self.ew_n[i] += 1
+        notes = self._notes + 1
+        self._notes = notes
+        if notes % self.policy.detect_every == 0:
+            self._sweep(now)
+
+    def _sweep(self, now: float) -> None:
+        pol = self.policy
+        min_n = pol.detect_min_samples
+        ready = [self.ewma[i] for i in range(self.n)
+                 if self.ew_n[i] >= min_n and not self.crashed[i]]
+        # peer-relative: need a quorum of sampled peers for a stable median
+        if len(ready) < max(2, self.n // 2):
+            return
+        med = float(np.median(ready))
+        if med <= 0.0:
+            return
+        st = self.stats
+        for i in range(self.n):
+            if self.ew_n[i] < min_n or self.crashed[i]:
+                continue
+            ew = self.ewma[i]
+            if not self.quarantined[i]:
+                if ew > pol.detect_ratio * med:
+                    self.quarantined[i] = True
+                    self._q_since[i] = now
+                    st["quarantines"] += 1
+                    if self.is_slow_now(i, now):
+                        if st["detect_latency_s"] < 0.0:
+                            onset = max(ep[0] for ep in self.slow[i]
+                                        if ep[0] <= now)
+                            st["detect_latency_s"] = now - onset
+                    else:
+                        st["false_quarantines"] += 1
+                    if self.on_quarantine is not None:
+                        self.on_quarantine(i)
+            elif ew < pol.detect_release * med:
+                self._release(i, now)
+
+    def _release(self, i: int, now: float) -> None:
+        self.quarantined[i] = False
+        self.stats["quarantine_time_s"] += now - self._q_since[i]
+        if self.on_release is not None:
+            self.on_release(i)
+
+    # -- end of run ----------------------------------------------------------
+    def finalize(self, now: float) -> dict:
+        """Snapshot the results block, counting open quarantine spans up to
+        ``now`` WITHOUT closing them: ``SAFSSim`` keeps one injector across
+        ``run_phased`` phases, so quarantine/slot-cap state must survive a
+        phase boundary (``ArraySim`` builds a fresh injector per run)."""
+        out = dict(self.stats)
+        for i in range(self.n):
+            if self.quarantined[i]:
+                out["quarantine_time_s"] += now - self._q_since[i]
+        return out

@@ -67,6 +67,12 @@ class DirtyPageFlusher:
     _inflight: set = field(default_factory=set)
     _total_pending: int = 0
     issued: int = 0
+    # Optional fault hook (core/faults.py): ``deferrable(device) -> True``
+    # defers that device's writebacks — the pages simply STAY DIRTY and their
+    # sets stay queued for a later pump, so a crashed or quarantined member's
+    # writebacks are delayed, never lost. ``deferred`` counts the skips.
+    deferrable: "Callable[[int], bool] | None" = None
+    deferred: int = 0
     # IOExecutor workers call note_flush_done/discarded concurrently (one
     # thread pool per device); the counters are read-modify-write. Reentrant:
     # note_flush_discarded delegates to note_flush_done. Uncontended in the
@@ -142,6 +148,12 @@ class DirtyPageFlusher:
                 if took >= self.per_visit or len(out) >= budget:
                     break
                 dev = self.cache.device_of(tag)
+                if self.deferrable is not None and self.deferrable(dev):
+                    # crashed/quarantined device: leave the page dirty and
+                    # the set queued (same retry path as a full device cap)
+                    self.deferred += 1
+                    capped = True
+                    continue
                 if self._pending_per_dev.get(dev, 0) >= self.max_pending_per_dev:
                     capped = True
                     continue

@@ -498,6 +498,9 @@ class ArrayResults:
     idle_gc_frac: float = 0.0        # fraction of GC time from idle steps
     steered_reads: int = 0           # RAID-5 reads redirected around a
                                      # GC-busy member (steer=True)
+    # -- fault injection results (core/faults.py; None when faults is off) ---
+    faults: "dict | None" = None     # whole-run fault/defense counters
+                                     # (see faults._new_fault_stats)
 
 
 class SSDServer:
@@ -616,7 +619,8 @@ class ArraySim:
                  prefill_cache: bool = False,
                  layout: "Layout | None" = None,
                  qos: "QosPolicy | None" = None,
-                 gc: "GcPolicy | None" = None):
+                 gc: "GcPolicy | None" = None,
+                 faults: "FaultPolicy | None" = None):
         from .gc_coord import GcPolicy
         from .raid import JBODLayout, Layout   # local: raid imports workloads
         self.n = n_ssds
@@ -643,6 +647,10 @@ class ArraySim:
                 raise ValueError(f"qos= ignores workload.scenario="
                                  f"{workload.scenario!r}; describe each "
                                  f"tenant's workload in its TenantSpec")
+        self.faults = faults
+        if faults is not None:
+            from .faults import validate_fault_policy
+            validate_fault_policy(faults, n_ssds, layout=self.layout)
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         key = (n_ssds, ssd, occupancy, seed) if prefill_cache else None
@@ -670,6 +678,15 @@ class ArraySim:
         self.last_tenant_latency: dict[int, np.ndarray] | None = None
         self.last_gc_wait: np.ndarray | None = None   # stagger-wait samples
 
+    def _make_injector(self):
+        """Fresh per-run FaultInjector, or None when faults are off. Each
+        run() builds its own so repeated runs on one sim stay independent
+        and deterministic (the injector's RNG is derived from the seed)."""
+        if self.faults is None:
+            return None
+        from .faults import FaultInjector
+        return FaultInjector(self.faults, self.n, self.seed)
+
     # -- main loop -------------------------------------------------------------
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
         if self.qos is not None:
@@ -687,6 +704,26 @@ class ArraySim:
         steer_on = coord is not None and coord.steer
         steer_qd = min(qd, coord.steer_qd) if steer_on else qd
         gc_busy = coord.gc_busy if coord is not None else None
+
+        # fault injection (core/faults.py): None keeps every closure below
+        # byte-identical to the pre-fault path. The JBOD fast loop supports
+        # FailSlow, MediaError + retries, and the quarantine detector;
+        # Crash/hedging need parity and are rejected/ignored for JBOD.
+        inj = self._make_injector()
+        media_on = inj is not None and inj.any_media
+        qcap: "list[int] | None" = None
+        if inj is not None and inj.detect:
+            qcap = [qd] * n
+            q_lo = min(qd, inj.policy.quarantine_qd)
+
+            def _apply_q(i: int) -> None:
+                qcap[i] = q_lo
+
+            def _lift_q(i: int) -> None:
+                qcap[i] = qd
+                unpark(i)
+            inj.on_quarantine = _apply_q
+            inj.on_release = _lift_q
 
         # Submitter streams: each has a window of w_total/n_streams tokens and
         # a single submission sequence. A full target queue parks the whole
@@ -736,7 +773,22 @@ class ArraySim:
                 if req[2]:
                     return t_read
                 return t_trim if req[5] == OP_TRIM else t_prog
+            if inj is not None and (inj.detect or inj.has_slow(i)):
+                return inj.wrap_service_time(i, service_time, loop)
             return service_time
+
+        def reissue(args):
+            # media-error retry landing after its backoff: re-enter the host
+            # queue exactly like enqueue()'s tail (the attempt counter and
+            # the original t_issue ride inside the request tuple).
+            i, req = args
+            hq = host_queues[i]
+            dev = devices[i]
+            if hq:
+                hq.append(req)
+                dev.kick()
+            elif not dev.offer(req):
+                hq.append(req)
 
         def make_on_done(i: int):
             s = ssds[i]
@@ -744,6 +796,51 @@ class ArraySim:
             program = ftl._program
             pw = s.pending_writes
             w = waiters[i]
+
+            if media_on:
+                def on_done(req):
+                    stream, lba, is_read, coal, t_issue, kind, att = req
+                    if is_read:
+                        if inj.read_fails(i):
+                            retry, delay = inj.retry_decision(
+                                att, t_issue, loop.now)
+                            if retry:
+                                loop.call_at(
+                                    loop.now + delay, reissue,
+                                    (i, (stream, lba, True, coal, t_issue,
+                                         kind, att + 1)))
+                                if w:
+                                    unpark(i)
+                                return
+                            # exhausted/timed out: surface as a failed read —
+                            # the op completes (token returns) without data
+                        s.served_reads += 1
+                        outstanding[stream] -= 1
+                    else:
+                        outstanding[stream] -= 1
+                        if kind == OP_TRIM:
+                            ftl.trim(lba)
+                            s.served_trims += 1
+                        else:
+                            s.served_writes += 1
+                            c = pw[lba] - 1
+                            if c:
+                                pw[lba] = c
+                            else:
+                                del pw[lba]
+                            if not coal:      # inlined ftl.user_write
+                                program(lba)
+                                ftl.writes += 1
+                    if note_completion(t_issue):
+                        measured[i] += 1
+                        if is_read:
+                            mr[0] += 1
+                        else:
+                            mr[1] += 1
+                    if w:
+                        unpark(i)
+                    stream_fill(stream)
+                return on_done
 
             def on_done(req):
                 stream, lba, is_read, coal, t_issue, kind = req
@@ -796,7 +893,10 @@ class ArraySim:
                     coal = True
                     pw[lba] = c + 1
             outstanding[stream] += 1
-            req = (stream, lba, is_read, coal, loop.now, kind)
+            if media_on:   # attempt counter rides at the end; indices 0-5 keep
+                req = (stream, lba, is_read, coal, loop.now, kind, 0)
+            else:
+                req = (stream, lba, is_read, coal, loop.now, kind)
             hq = host_queues[ssd_i]
             dev = devices[ssd_i]
             if hq:
@@ -812,6 +912,8 @@ class ArraySim:
             ``steer_qd`` so the window's slots go to members that serve."""
             dev = devices[ssd_i]
             q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+            if qcap is not None and qcap[ssd_i] < q:
+                q = qcap[ssd_i]     # quarantined member: shrink admission
             if len(host_queues[ssd_i]) + len(dev.admitted) + dev.in_service < q:
                 enqueue(stream, ssd_i, lba, is_read, kind)
                 return True
@@ -851,6 +953,8 @@ class ArraySim:
             dev = devices[ssd_i]
             while w:
                 q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+                if qcap is not None and qcap[ssd_i] < q:
+                    q = qcap[ssd_i]
                 if len(hq) + len(dev.admitted) + dev.in_service >= q:
                     break
                 stream = w.popleft()
@@ -899,6 +1003,7 @@ class ArraySim:
             trims=trims,
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
+            faults=inj.finalize(loop.now) if inj is not None else None,
             **gkw,
         )
 
@@ -963,14 +1068,48 @@ class ArraySim:
             # member by reconstruction from its row siblings
             planner.gc_busy = gc_busy
 
+        # fault injection (core/faults.py): inj=None keeps this loop
+        # byte-identical to the pre-fault path. On top of the fast loop's
+        # FailSlow/MediaError/quarantine, parity layouts add hedged reads
+        # (sibling reconstruction racing a slow member) and mid-run Crash
+        # (the group flips degraded and the rebuild stream opens live).
+        inj = self._make_injector()
+        media_on = inj is not None and inj.any_media
+        hedge_on = inj is not None and inj.hedge_after > 0.0 and layout.parity
+        crash = inj.crash_event if inj is not None else None
+        qcap: "list[int] | None" = None
+        if inj is not None and inj.detect:
+            qcap = [qd] * n
+            q_lo = min(qd, inj.policy.quarantine_qd)
+
+            def _apply_q(i: int) -> None:
+                qcap[i] = q_lo
+
+            def _lift_q(i: int) -> None:
+                qcap[i] = qd
+                unpark(i)
+            inj.on_quarantine = _apply_q
+            inj.on_release = _lift_q
+            if layout.parity:
+                # steer reads away from quarantined members exactly like
+                # GC-busy ones (reconstruct from row siblings)
+                planner.avoid = inj.quarantined
+
         n_fg = max(1, wl.n_streams)
         rebuild_on = bool(getattr(planner, "rebuild", False))
-        n_streams = n_fg + (1 if rebuild_on else 0)
+        has_rebuild_stream = rebuild_on or crash is not None
+        n_streams = n_fg + (1 if has_rebuild_stream else 0)
         window = max(1, wl.w_total // n_fg)
         windows = [window] * n_fg
         srcs = [self.source] * n_fg
-        if rebuild_on:
-            windows.append(max(1, layout.rebuild_window))
+        rebuild_st = n_fg
+        rebuild_need = [0]     # rows to rebuild after a mid-run crash
+        if has_rebuild_stream:
+            # a crash pre-allocates the rebuild stream with a closed window
+            # (0): it opens at crash time and closes again once the dead
+            # member's rows are reconstructed
+            windows.append(0 if not rebuild_on
+                           else max(1, layout.rebuild_window))
             srcs.append(RebuildSource())
 
         outstanding = [0] * n_streams
@@ -1020,9 +1159,12 @@ class ArraySim:
                 if k == OP_READ:
                     return t_read
                 return t_trim if k == OP_TRIM else t_prog
+            if inj is not None and (inj.detect or inj.has_slow(i)):
+                return inj.wrap_service_time(i, service_time, loop)
             return service_time
 
-        # child requests are (plan, member_lba, kind, coal)
+        # child requests are (plan, member_lba, kind, coal) — plus a trailing
+        # attempt counter when media errors are configured
         def enqueue_child(plan, ssd_i: int, lba: int, kind: int):
             coal = False
             if kind == OP_WRITE:
@@ -1033,9 +1175,24 @@ class ArraySim:
                 else:
                     coal = True
                     pw[lba] = c + 1
-            req = (plan, lba, kind, coal)
+            if media_on:
+                req = (plan, lba, kind, coal, 0)
+            else:
+                req = (plan, lba, kind, coal)
             hq = host_queues[ssd_i]
             dev = devices[ssd_i]
+            if hq:
+                hq.append(req)
+                dev.kick()
+            elif not dev.offer(req):
+                hq.append(req)
+
+        def reissue_child(args):
+            # media-error retry landing after its backoff (mirror of
+            # enqueue_child's tail; coalescing state is already held)
+            i, req = args
+            hq = host_queues[i]
+            dev = devices[i]
             if hq:
                 hq.append(req)
                 dev.kick()
@@ -1049,6 +1206,14 @@ class ArraySim:
                 enqueue_child(plan, ssd_i, lba, kind)
 
         def finish_plan(plan):
+            h = plan.hedge
+            if h is not None:
+                if h[0]:
+                    return   # the other leg already completed this op
+                h[0] = True  # first completion wins; the loser early-returns
+                if plan is not h[1]:
+                    inj.note_hedge_win()
+                    plan = h[1]   # complete on behalf of the primary
             st = plan.stream
             if st >= 0:
                 outstanding[st] -= 1
@@ -1062,6 +1227,14 @@ class ArraySim:
                     stall.record(plan.t_last - plan.t_first)
             elif plan.kind == OP_REBUILD:
                 rebuild_done[0] += 1
+                if rebuild_need[0] and rebuild_done[0] >= rebuild_need[0]:
+                    # crash rebuild complete: close the stream's window
+                    # BEFORE healing so stream_fill never spins on a planner
+                    # with no rebuild groups left
+                    rebuild_need[0] = 0
+                    windows[rebuild_st] = 0
+                    planner.heal_member(crash.device)
+                    inj.note_rebuild_complete(loop.now)
             if st >= 0:
                 stream_fill(st)
 
@@ -1071,6 +1244,56 @@ class ArraySim:
             program = ftl._program
             pw = s.pending_writes
             w = waiters[i]
+
+            if media_on:
+                def on_done(req):
+                    plan, lba, kind, coal, att = req
+                    if kind == OP_READ:
+                        if inj.read_fails(i):
+                            retry, delay = inj.retry_decision(
+                                att, plan.t_issue, loop.now)
+                            if retry:
+                                loop.call_at(loop.now + delay, reissue_child,
+                                             (i, (plan, lba, kind, coal,
+                                                  att + 1)))
+                                if w:
+                                    unpark(i)
+                                return
+                            # exhausted/timed out: the child completes as a
+                            # failed read so the plan can't wedge
+                        s.served_reads += 1
+                    elif kind == OP_TRIM:
+                        ftl.trim(lba)
+                        s.served_trims += 1
+                    else:
+                        s.served_writes += 1
+                        c = pw[lba] - 1
+                        if c:
+                            pw[lba] = c
+                        else:
+                            del pw[lba]
+                        if not coal:      # inlined ftl.user_write
+                            program(lba)
+                            ftl.writes += 1
+                    if mw.measuring:
+                        measured[i] += 1
+                    now = loop.now
+                    if plan.t_first < 0.0:
+                        plan.t_first = now
+                    plan.t_last = now
+                    r = plan.remaining - 1
+                    plan.remaining = r
+                    if r == 0:
+                        nxt = plan.phase_i + 1
+                        if nxt < len(plan.phases):
+                            plan.phase_i = nxt
+                            plan.t_first = -1.0
+                            submit_phase(plan)
+                        else:
+                            finish_plan(plan)
+                    if w:
+                        unpark(i)
+                return on_done
 
             def on_done(req):
                 plan, lba, kind, coal = req
@@ -1127,6 +1350,8 @@ class ArraySim:
                 ssd_i, lba, kind, plan = pend[0]
                 dev = devices[ssd_i]
                 q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+                if qcap is not None and qcap[ssd_i] < q:
+                    q = qcap[ssd_i]     # quarantined member: shrink admission
                 if len(host_queues[ssd_i]) + len(dev.admitted) \
                         + dev.in_service < q:
                     pend.popleft()
@@ -1136,6 +1361,24 @@ class ArraySim:
                     waiters[ssd_i].append(st)
                     return False
             return True
+
+        def maybe_hedge(plan):
+            """Hedged-read deadline fired: if the primary is still pending,
+            race a sibling-reconstruction leg against it. Both legs share
+            ``plan.hedge = [done, primary]``; the first completion flips
+            ``done`` and the loser is discarded in finish_plan (the same
+            stale-check shape as the flusher's lost-write epoch guard)."""
+            h = plan.hedge
+            if h[0]:
+                return
+            tgt, lba, _k = plan.phases[0][0]
+            hp = planner.hedge_plan(tgt, lba)
+            if hp is None:      # group went degraded meanwhile: the planner
+                return          # would reconstruct from a missing member
+            inj.note_hedge()
+            hp.hedge = h
+            hp.t_issue = plan.t_issue
+            submit_phase(hp)    # latency rescue: bypasses the qd bound
 
         def issue_op(st: int, op) -> bool:
             plan, detached = planner.plan(op)
@@ -1149,6 +1392,11 @@ class ArraySim:
                     d.t_issue = loop.now
                     submit_phase(d)   # background: bypasses the qd bound
             children = plan.phases[0]
+            if hedge_on and plan.kind == OP_READ and len(children) == 1 \
+                    and len(plan.phases) == 1:
+                # healthy single-member striped read: arm the hedge deadline
+                plan.hedge = [False, plan]
+                loop.call_at(loop.now + inj.hedge_after, maybe_hedge, plan)
             plan.remaining = len(children)
             pend = pending[st]
             for ch in children:
@@ -1182,12 +1430,25 @@ class ArraySim:
             dev = devices[ssd_i]
             while w:
                 q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+                if qcap is not None and qcap[ssd_i] < q:
+                    q = qcap[ssd_i]
                 if len(hq) + len(dev.admitted) + dev.in_service >= q:
                     break
                 st = w.popleft()
                 parked[st] = False
                 if try_drain(st):
                     stream_fill(st)
+
+        if crash is not None:
+            def on_crash(_):
+                # instant spare swap: children already queued or in flight
+                # drain to the spare unchanged — only NEW plans see the group
+                # as degraded. The pre-allocated rebuild stream opens here.
+                inj.note_crash(crash.device, loop.now)
+                rebuild_need[0] = planner.fail_member(crash.device)
+                windows[rebuild_st] = max(1, layout.rebuild_window)
+                stream_fill(rebuild_st)
+            loop.call_at(crash.at_time, on_crash, None)
 
         if coord is not None:
             coord.on_release = unpark
@@ -1246,6 +1507,7 @@ class ArraySim:
             steered_reads=sd["steered_reads"],
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
+            faults=inj.finalize(loop.now) if inj is not None else None,
             **gkw,
         )
 
@@ -1291,6 +1553,29 @@ class ArraySim:
         if steer_on:
             planner.gc_busy = gc_busy
 
+        # fault injection: the same wiring as _run_layout (see the MUST-mirror
+        # note in the docstring); only the rebuild stream index (n_t) and the
+        # window bookkeeping (rebuild_win) differ
+        inj = self._make_injector()
+        media_on = inj is not None and inj.any_media
+        hedge_on = inj is not None and inj.hedge_after > 0.0 and layout.parity
+        crash = inj.crash_event if inj is not None else None
+        qcap: "list[int] | None" = None
+        if inj is not None and inj.detect:
+            qcap = [qd] * n
+            q_lo = min(qd, inj.policy.quarantine_qd)
+
+            def _apply_q(i: int) -> None:
+                qcap[i] = q_lo
+
+            def _lift_q(i: int) -> None:
+                qcap[i] = qd
+                unpark(i)
+            inj.on_quarantine = _apply_q
+            inj.on_release = _lift_q
+            if layout.parity:
+                planner.avoid = inj.quarantined
+
         ids = list(policy.ids)
         n_t = len(ids)
         idx_of = {t: i for i, t in enumerate(ids)}
@@ -1303,8 +1588,12 @@ class ArraySim:
             for t in ids
         ]
         rebuild_on = bool(getattr(planner, "rebuild", False))
-        n_streams = n_t + (1 if rebuild_on else 0)
-        if rebuild_on:
+        has_rebuild_stream = rebuild_on or crash is not None
+        n_streams = n_t + (1 if has_rebuild_stream else 0)
+        rebuild_need = [0]
+        # rebuild window, mutable: 0 = closed (pre-crash / post-rebuild)
+        rebuild_win = [max(1, layout.rebuild_window) if rebuild_on else 0]
+        if has_rebuild_stream:
             srcs.append(RebuildSource())
 
         outstanding = [0] * n_streams
@@ -1362,9 +1651,12 @@ class ArraySim:
                 if k == OP_READ:
                     return t_read
                 return t_trim if k == OP_TRIM else t_prog
+            if inj is not None and (inj.detect or inj.has_slow(i)):
+                return inj.wrap_service_time(i, service_time, loop)
             return service_time
 
-        # child requests are (plan, member_lba, kind, coal)
+        # child requests are (plan, member_lba, kind, coal) — plus a trailing
+        # attempt counter when media errors are configured
         def enqueue_child(plan, ssd_i: int, lba: int, kind: int):
             coal = False
             if kind == OP_WRITE:
@@ -1375,9 +1667,24 @@ class ArraySim:
                 else:
                     coal = True
                     pw[lba] = c + 1
-            req = (plan, lba, kind, coal)
+            if media_on:
+                req = (plan, lba, kind, coal, 0)
+            else:
+                req = (plan, lba, kind, coal)
             hq = host_queues[ssd_i]
             dev = devices[ssd_i]
+            if hq:
+                hq.append(req)
+                dev.kick()
+            elif not dev.offer(req):
+                hq.append(req)
+
+        def reissue_child(args):
+            # media-error retry landing after its backoff (mirror of
+            # enqueue_child's tail; coalescing state is already held)
+            i, req = args
+            hq = host_queues[i]
+            dev = devices[i]
             if hq:
                 hq.append(req)
                 dev.kick()
@@ -1391,6 +1698,14 @@ class ArraySim:
                 enqueue_child(plan, ssd_i, lba, kind)
 
         def finish_plan(plan):
+            h = plan.hedge
+            if h is not None:
+                if h[0]:
+                    return   # the other leg already completed this op
+                h[0] = True  # first completion wins; the loser early-returns
+                if plan is not h[1]:
+                    inj.note_hedge_win()
+                    plan = h[1]   # complete on behalf of the primary
             st = plan.stream
             tenant_plan = 0 <= st < n_t
             if st >= 0:
@@ -1415,6 +1730,13 @@ class ArraySim:
                     stall.record(plan.t_last - plan.t_first)
             elif plan.kind == OP_REBUILD:
                 rebuild_done[0] += 1
+                if rebuild_need[0] and rebuild_done[0] >= rebuild_need[0]:
+                    # crash rebuild complete: close the window BEFORE healing
+                    # so rebuild_fill never spins on an empty planner
+                    rebuild_need[0] = 0
+                    rebuild_win[0] = 0
+                    planner.heal_member(crash.device)
+                    inj.note_rebuild_complete(loop.now)
             if tenant_plan:
                 qos_fill()
             elif st >= 0:
@@ -1426,6 +1748,56 @@ class ArraySim:
             program = ftl._program
             pw = s.pending_writes
             w = waiters[i]
+
+            if media_on:
+                def on_done(req):
+                    plan, lba, kind, coal, att = req
+                    if kind == OP_READ:
+                        if inj.read_fails(i):
+                            retry, delay = inj.retry_decision(
+                                att, plan.t_issue, loop.now)
+                            if retry:
+                                loop.call_at(loop.now + delay, reissue_child,
+                                             (i, (plan, lba, kind, coal,
+                                                  att + 1)))
+                                if w:
+                                    unpark(i)
+                                return
+                            # exhausted/timed out: the child completes as a
+                            # failed read so the plan can't wedge
+                        s.served_reads += 1
+                    elif kind == OP_TRIM:
+                        ftl.trim(lba)
+                        s.served_trims += 1
+                    else:
+                        s.served_writes += 1
+                        c = pw[lba] - 1
+                        if c:
+                            pw[lba] = c
+                        else:
+                            del pw[lba]
+                        if not coal:      # inlined ftl.user_write
+                            program(lba)
+                            ftl.writes += 1
+                    if mw.measuring:
+                        measured[i] += 1
+                    now = loop.now
+                    if plan.t_first < 0.0:
+                        plan.t_first = now
+                    plan.t_last = now
+                    r = plan.remaining - 1
+                    plan.remaining = r
+                    if r == 0:
+                        nxt = plan.phase_i + 1
+                        if nxt < len(plan.phases):
+                            plan.phase_i = nxt
+                            plan.t_first = -1.0
+                            submit_phase(plan)
+                        else:
+                            finish_plan(plan)
+                    if w:
+                        unpark(i)
+                return on_done
 
             def on_done(req):
                 plan, lba, kind, coal = req
@@ -1479,6 +1851,8 @@ class ArraySim:
                 ssd_i, lba, kind, plan = pend[0]
                 dev = devices[ssd_i]
                 q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+                if qcap is not None and qcap[ssd_i] < q:
+                    q = qcap[ssd_i]     # quarantined member: shrink admission
                 if len(host_queues[ssd_i]) + len(dev.admitted) \
                         + dev.in_service < q:
                     pend.popleft()
@@ -1488,6 +1862,21 @@ class ArraySim:
                     waiters[ssd_i].append(st)
                     return False
             return True
+
+        def maybe_hedge(plan):
+            # see _run_layout.maybe_hedge — shared [done, primary] record,
+            # first completion wins, loser discarded in finish_plan
+            h = plan.hedge
+            if h[0]:
+                return
+            tgt, lba, _k = plan.phases[0][0]
+            hp = planner.hedge_plan(tgt, lba)
+            if hp is None:
+                return
+            inj.note_hedge()
+            hp.hedge = h
+            hp.t_issue = plan.t_issue
+            submit_phase(hp)    # latency rescue: bypasses the qd bound
 
         def issue_op(st: int, op) -> None:
             plan, detached = planner.plan(op)
@@ -1503,6 +1892,10 @@ class ArraySim:
                     d.t_issue = loop.now
                     submit_phase(d)
             children = plan.phases[0]
+            if hedge_on and plan.kind == OP_READ and len(children) == 1 \
+                    and len(plan.phases) == 1:
+                plan.hedge = [False, plan]
+                loop.call_at(loop.now + inj.hedge_after, maybe_hedge, plan)
             plan.remaining = len(children)
             pend = pending[st]
             for ch in children:
@@ -1554,7 +1947,7 @@ class ArraySim:
             st = n_t
             if parked[st] or pending[st]:
                 return
-            win = max(1, layout.rebuild_window)
+            win = rebuild_win[0]
             src = srcs[st]
             while outstanding[st] < win:
                 issue_op(st, src.next_op(loop.now))
@@ -1568,6 +1961,8 @@ class ArraySim:
             freed_tenant = False
             while w:
                 q = steer_qd if steer_on and gc_busy[ssd_i] else qd
+                if qcap is not None and qcap[ssd_i] < q:
+                    q = qcap[ssd_i]
                 if len(hq) + len(dev.admitted) + dev.in_service >= q:
                     break
                 st = w.popleft()
@@ -1579,6 +1974,16 @@ class ArraySim:
                         rebuild_fill()
             if freed_tenant:
                 qos_fill()
+
+        if crash is not None:
+            def on_crash(_):
+                # mirror of _run_layout.on_crash: instant spare swap, only
+                # NEW plans see the group degraded, rebuild stream opens
+                inj.note_crash(crash.device, loop.now)
+                rebuild_need[0] = planner.fail_member(crash.device)
+                rebuild_win[0] = max(1, layout.rebuild_window)
+                rebuild_fill()
+            loop.call_at(crash.at_time, on_crash, None)
 
         if coord is not None:
             coord.on_release = unpark
@@ -1645,6 +2050,7 @@ class ArraySim:
             ftl_gc_copies=ftl_c,
             tenant_stats=tstats,
             share_error=share_error,
+            faults=inj.finalize(loop.now) if inj is not None else None,
             **gkw,
         )
 

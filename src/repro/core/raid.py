@@ -135,7 +135,8 @@ class Plan:
     bookkeeping fields (``stream``/``t_issue``/``remaining``/...)."""
 
     __slots__ = ("phases", "kind", "measured", "stall_track", "stream",
-                 "t_issue", "phase_i", "remaining", "t_first", "t_last")
+                 "t_issue", "phase_i", "remaining", "t_first", "t_last",
+                 "hedge")
 
     def __init__(self, phases, kind: int, measured: bool = True,
                  stall_track: bool = False):
@@ -150,6 +151,9 @@ class Plan:
         self.remaining = 0
         self.t_first = -1.0
         self.t_last = 0.0
+        # hedged-read record shared by the primary and its hedge leg
+        # (core/faults.py): [done, primary_plan]. None outside hedging.
+        self.hedge = None
 
 
 class RebuildSource(OpSource):
@@ -219,6 +223,12 @@ class _BasePlanner(_PlannerStats):
         # the failed SSD is the last member of every group (arbitrary but
         # fixed; rotation spreads its role across data and parity rows)
         self.dead_local = smap.group - 1 if degraded else -1
+        # per-group dead member (global SSD index, -1 = healthy). The static
+        # degraded=1 spec fills every group; a mid-run Crash (core/faults.py)
+        # flips exactly one via fail_member() and heal_member() clears it
+        # when the rebuild completes.
+        self.dead = [self._dead_ssd(g) if degraded else -1
+                     for g in range(smap.n_groups)]
         self.stats = _new_stats()
 
     # -- shared helpers ------------------------------------------------------
@@ -322,19 +332,50 @@ class _Raid5Planner(_BasePlanner):
     # pause. None (the default) keeps planning pure and byte-identical.
     gc_busy: "list[bool] | None" = None
 
+    # Quarantine read-steering (core/faults.py): like ``gc_busy`` but fed by
+    # the fail-slow detector — reads of a quarantined member reconstruct
+    # from siblings. None (the default) keeps planning byte-identical.
+    avoid: "list[bool] | None" = None
+
     def __init__(self, smap: StripeMap, rows: int, stripe_width: int,
                  degraded: int, rebuild: bool):
         super().__init__(smap, rows, stripe_width, degraded)
         self.rebuild = rebuild and degraded > 0
+        # groups the rebuild tenant cycles over (all of them under the
+        # static degraded=1 spec; exactly the crashed one after a Crash)
+        self._rebuild_groups = [g for g in range(smap.n_groups)
+                                if self.dead[g] >= 0]
         # next_expected_lba -> [run_len_pages, open_row (g, r, covered) | None]
         self._runs: OrderedDict[int, list] = OrderedDict()
 
+    # -- dynamic failure (core/faults.py Crash) ------------------------------
+    def fail_member(self, ssd: int) -> int:
+        """Mark ``ssd`` dead mid-run: its group plans degraded from now on
+        and joins the rebuild rotation. Returns the rows the rebuild tenant
+        must complete to heal the group."""
+        g = ssd // self.smap.group
+        self.dead[g] = ssd
+        self._rebuild_groups = [gg for gg in range(self.smap.n_groups)
+                                if self.dead[gg] >= 0]
+        return self.rows
+
+    def heal_member(self, ssd: int) -> None:
+        """Rebuild finished: the spare holds every row — the group plans
+        healthy again."""
+        g = ssd // self.smap.group
+        self.dead[g] = -1
+        self._rebuild_groups = [gg for gg in range(self.smap.n_groups)
+                                if self.dead[gg] >= 0]
+
     # -- rebuild -------------------------------------------------------------
-    def _plan_rebuild(self, counter: int) -> Plan:
+    def _plan_rebuild(self, counter: int) -> "Plan | None":
         smap = self.smap
-        g = counter % smap.n_groups
-        r = (counter // smap.n_groups) % self.rows
-        dead = self._dead_ssd(g)
+        dg = self._rebuild_groups
+        if not dg:
+            return None               # healed while ops were in flight
+        g = dg[counter % len(dg)]
+        r = (counter // len(dg)) % self.rows
+        dead = self.dead[g]
         reads = [(ssd, lba, OP_READ)
                  for ssd, lba, _ in smap.row_members(g, r) if ssd != dead]
         st = self.stats
@@ -353,15 +394,16 @@ class _Raid5Planner(_BasePlanner):
         st = self.stats
         k = e_i - s_i
         st["logical_reads"] += k
-        if not self.degraded:
+        dead = self.dead[g]
+        if dead < 0:
             busy = self.gc_busy
-            if busy is not None:
-                return self._plan_read_steered(g, r, s_i, e_i, busy)
+            avoid = self.avoid
+            if busy is not None or avoid is not None:
+                return self._plan_read_steered(g, r, s_i, e_i, busy, avoid)
             children = [(smap.data_member(g, r, i), r, OP_READ)
                         for i in range(s_i, e_i)]
             st["child_reads"] += k
             return Plan([children], OP_READ)
-        dead = self._dead_ssd(g)
         need: list[tuple[int, int]] = []     # ordered, deduped (ssd, lba)
         seen: set[int] = set()
         reconstructed = 0
@@ -383,26 +425,35 @@ class _Raid5Planner(_BasePlanner):
         return Plan([children], OP_READ)
 
     def _plan_read_steered(self, g: int, r: int, s_i: int, e_i: int,
-                           busy: list) -> Plan:
+                           busy: "list | None",
+                           avoid: "list | None" = None) -> Plan:
         """Healthy-array read with GC-aware steering: a page whose member is
         GC-busy is reconstructed from the row's other members (data XOR
         parity) — g-1 short reads on serving members instead of one read
         parked behind a multi-ms GC pause — but only when EVERY sibling is
         itself GC-free (otherwise reconstruction would just move the wait).
-        Degraded arrays skip steering: the read path is already rebuilt
+        ``avoid`` (the fail-slow quarantine list, core/faults.py) composes
+        with the GC busy list: a member hot in either is steered around.
+        Degraded groups skip steering: the read path is already rebuilt
         around the dead member and has no redundancy left to steer with."""
         smap = self.smap
         st = self.stats
+        if busy is None:
+            hot = avoid
+        elif avoid is None:
+            hot = busy
+        else:
+            hot = [b or a for b, a in zip(busy, avoid)]
         need: list[tuple[int, int]] = []     # ordered, deduped (ssd, lba)
         seen: set[int] = set()
         steered = 0
         for i in range(s_i, e_i):
             ssd = smap.data_member(g, r, i)
-            if busy[ssd]:
+            if hot[ssd]:
                 sibs = [(o_ssd, o_lba)
                         for o_ssd, o_lba, _ in smap.row_members(g, r)
                         if o_ssd != ssd]
-                if all(not busy[o_ssd] for o_ssd, _ in sibs):
+                if all(not hot[o_ssd] for o_ssd, _ in sibs):
                     steered += 1
                     for o_ssd, o_lba in sibs:
                         if o_ssd not in seen:
@@ -416,6 +467,23 @@ class _Raid5Planner(_BasePlanner):
         st["child_reads"] += len(need)
         children = [(ssd, lba, OP_READ) for ssd, lba in need]
         return Plan([children], OP_READ)
+
+    # -- hedged reads (core/faults.py) ---------------------------------------
+    def hedge_plan(self, ssd: int, r: int) -> "Plan | None":
+        """Speculative sibling-reconstruction leg for a single-member read
+        of member page ``r`` on ``ssd`` that blew its latency deadline: read
+        every other row member (data XOR parity reconstructs the page).
+        None when the group is degraded — reconstruction is already the
+        primary path and there is no redundancy left to hedge with."""
+        smap = self.smap
+        g = ssd // smap.group
+        if self.dead[g] >= 0:
+            return None
+        sibs = [(o_ssd, o_lba, OP_READ)
+                for o_ssd, o_lba, _ in smap.row_members(g, r)
+                if o_ssd != ssd]
+        self.stats["child_reads"] += len(sibs)
+        return Plan([sibs], OP_READ, measured=False)
 
     # -- writes --------------------------------------------------------------
     def _run_continue(self, lba0: int, k: int):
@@ -449,7 +517,7 @@ class _Raid5Planner(_BasePlanner):
         data pages the run never wrote, write the parity page."""
         g, r, covered = open_row
         smap = self.smap
-        dead = self._dead_ssd(g) if self.degraded else -1
+        dead = self.dead[g]
         reads = []
         for i in range(covered, smap.d):
             ssd = smap.data_member(g, r, i)
@@ -471,7 +539,7 @@ class _Raid5Planner(_BasePlanner):
         st = self.stats
         k = e_i - s_i
         lba0 = smap.logical(g, r, s_i)
-        dead = self._dead_ssd(g) if self.degraded else -1
+        dead = self.dead[g]
         p_ssd = smap.parity_member(g, r)
         parity_dead = p_ssd == dead
 

@@ -229,6 +229,9 @@ class SAFSResults:
     # -- per-tenant QoS results (core/qos.py; None when qos is off) ----------
     tenant_stats: "dict | None" = None   # tenant id -> qos.TenantStats
     share_error: float = 0.0
+    # -- fault injection results (core/faults.py; None when faults is off) ---
+    faults: "dict | None" = None     # whole-run fault/defense counters
+                                     # (see faults._new_fault_stats)
 
 
 class _Device:
@@ -251,7 +254,8 @@ class SAFSSim:
                  reserved_slots: int = policies.RESERVED_SLOTS,
                  source: OpSource | None = None,
                  trace: np.ndarray | None = None,
-                 qos: "QosPolicy | None" = None):
+                 qos: "QosPolicy | None" = None,
+                 faults: "FaultPolicy | None" = None):
         self.n = n_ssds
         self.p = ssd
         self.wl = workload
@@ -260,6 +264,20 @@ class SAFSSim:
         self.use_flusher = use_flusher
         self.loop = EventLoop()
         self.qos = qos
+
+        # fault injection (core/faults.py): one injector for the sim's whole
+        # persistent loop (event times are absolute). faults=None keeps every
+        # closure below byte-identical to the pre-fault path. layout=None:
+        # SAFS has no parity — a Crash is a spare swap (demand I/O continues)
+        # with flusher writebacks to the device deferred, never lost.
+        self.faults = faults
+        if faults is not None:
+            from .faults import FaultInjector, validate_fault_policy
+            validate_fault_policy(faults, n_ssds, layout=None)
+            self._inj = FaultInjector(faults, n_ssds, seed)
+        else:
+            self._inj = None
+        self._media_on = self._inj is not None and self._inj.any_media
 
         if qos is not None:
             # per-tenant HIGH classes at the DualQueue admission point: one
@@ -302,6 +320,31 @@ class SAFSSim:
         self.flusher = (DirtyPageFlusher(self.cache, n_ssds,
                                          max_pending_per_dev=flush_cap)
                         if use_flusher else None)
+        if self._inj is not None:
+            inj = self._inj
+            if inj.detect:
+                # quarantine = NCQ admission cap on the suspect device
+                # (engine.DeviceModel.set_slot_cap); release restores and
+                # re-kicks so the backlog refills the freed slots
+                slots = ssd.device_slots
+                q_lo = min(slots, faults.quarantine_qd)
+                inj.on_quarantine = \
+                    lambda i: self.devices[i].model.set_slot_cap(q_lo)
+                inj.on_release = \
+                    lambda i: self.devices[i].model.set_slot_cap(slots)
+            if inj.crash_event is not None:
+                ce = inj.crash_event
+
+                def _crash(_=None):
+                    # spare swap: demand I/O keeps flowing; from here on the
+                    # flusher defers this device's writebacks (pages stay
+                    # dirty) instead of racing the dead member
+                    inj.note_crash(ce.device, self.loop.now)
+                self.loop.call_at(ce.at_time, _crash)
+            if self.flusher is not None and (inj.detect
+                                             or inj.crash_event is not None):
+                self.flusher.deferrable = \
+                    lambda d: inj.crashed[d] or inj.quarantined[d]
         self.checker = StalenessChecker(
             is_evicted=lambda r: int(self.cache.tags[r.set_idx][r.slot]) != r.tag,
             is_clean=lambda r: not bool(self.cache.dirty[r.set_idx][r.slot]),
@@ -354,7 +397,16 @@ class SAFSSim:
                 return self.p.t_coalesce if payload.get("coal") \
                     else s.service_time(False)
             return s.service_time(True)
+        inj = self._inj
+        if inj is not None and (inj.detect or inj.has_slow(dev_i)):
+            return inj.wrap_service_time(dev_i, service_time, self.loop)
         return service_time
+
+    def _reissue(self, args) -> None:
+        """Media-error retry landing after its backoff: re-submit the same
+        read request (its attempt counter rides in the payload)."""
+        dev_i, req = args
+        self._submit(dev_i, req)
 
     def _on_done_for(self, dev_i: int):
         def on_done(req: IORequest) -> None:
@@ -372,6 +424,26 @@ class SAFSSim:
                     s.ftl.user_write(lba)
                 s.served_writes += 1
             else:
+                if self._media_on and self._inj.read_fails(dev_i):
+                    inj = self._inj
+                    now = self.loop.now
+                    att = payload.get("att", 0)
+                    retry, delay = inj.retry_decision(
+                        att, payload.get("t_iss", now), now)
+                    if retry:
+                        payload["att"] = att + 1
+                        # release the device slot without firing on_complete
+                        # (the op is still logically in flight), then
+                        # re-submit after the backoff
+                        cb, req.on_complete = req.on_complete, None
+                        d.queue.complete(req)
+                        req.on_complete = cb
+                        self.loop.call_at(now + delay, self._reissue,
+                                          (dev_i, req))
+                        d.model.kick()
+                        return
+                    # exhausted/timed out: complete as a failed read (EIO
+                    # surfaced to the app; the op must not wedge)
                 s.served_reads += 1
                 self.ssd_reads += 1
             d.queue.complete(req)
@@ -385,6 +457,8 @@ class SAFSSim:
             s = d.server
             payload["coal"] = s.pending_writes.get(lba, 0) > 0
             s.pending_writes[lba] = s.pending_writes.get(lba, 0) + 1
+        elif self._media_on and "t_iss" not in payload:
+            payload["t_iss"] = self.loop.now   # retry-timeout anchor
         d.queue.submit(req)
         d.model.kick()
 
@@ -552,6 +626,11 @@ class SAFSSim:
                               - self._thr_snap[t] for t in self.qos.ids}
             tstats, share_error = build_tenant_stats(
                 self.qos, self._trec, span, throttle_times)
+        fblock = None
+        if self._inj is not None:
+            if self.flusher is not None:
+                self._inj.stats["flush_deferred"] = self.flusher.deferred
+            fblock = self._inj.finalize(self.loop.now)
         return SAFSResults(
             app_iops=summ.n / span,
             hit_rate=(self.cache.hit_count - b["hits"]) /
@@ -576,6 +655,7 @@ class SAFSSim:
             cache_lookups=self.cache.lookups - b["lk"],
             tenant_stats=tstats,
             share_error=share_error,
+            faults=fblock,
         )
 
     def run_phased(self, phases) -> "list[tuple[str, SAFSResults]]":

@@ -105,9 +105,10 @@ def _shard_qos(qos, sz: int, n_ssds: int):
 
 def _run_shard(args):
     (sz, ssd, occupancy, wl, seed, measure_ops, warmup_ops,
-     prefill_cache, layout, qos, gc) = args
+     prefill_cache, layout, qos, gc, faults) = args
     sim = ArraySim(sz, ssd, occupancy, wl, seed=seed,
-                   prefill_cache=prefill_cache, layout=layout, qos=qos, gc=gc)
+                   prefill_cache=prefill_cache, layout=layout, qos=qos, gc=gc,
+                   faults=faults)
     res = sim.run(measure_ops, warmup_ops)
     return (res, sim.last_latency, sim.last_stall, sim.last_tenant_latency,
             sim.last_gc_wait)
@@ -138,7 +139,11 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
     ``stagger_wait`` percentiles are exact over ``gc_wait_pooled``,
     ``gc_overlap_frac`` merges span-weighted, ``idle_gc_frac`` merges
     weighted by each shard's GC seconds, counters add, and ``util_min`` is
-    the min over the concatenated per-SSD utilizations."""
+    the min over the concatenated per-SSD utilizations.
+
+    Faults block (``core/faults.py``): fault domains never span shards
+    (``slice_policy``), so the per-shard blocks merge by plain counter
+    addition / sentinel adoption (``merge_fault_stats``)."""
     if pooled.size:
         p50, p95, p99 = np.percentile(pooled, [50.0, 95.0, 99.0])
         summ = LatencySummary(mean=float(pooled.mean()), p50=float(p50),
@@ -220,7 +225,13 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
         gc_starts=sum(p.gc_starts for p in parts),
         gc_forced=sum(p.gc_forced for p in parts),
         idle_gc_frac=idle_frac,
+        faults=_merge_faults(parts),
     )
+
+
+def _merge_faults(parts) -> "dict | None":
+    from .faults import merge_fault_stats
+    return merge_fault_stats([p.faults for p in parts])
 
 
 # one persistent worker pool, shared by every ShardedArraySim in the process
@@ -278,7 +289,7 @@ class ShardedArraySim:
                  occupancy: float = 0.6, workload: Workload = Workload(),
                  seed: int = 0, n_shards: int | None = None,
                  parallel: bool = True, prefill_cache: bool = True,
-                 layout=None, qos=None, gc=None):
+                 layout=None, qos=None, gc=None, faults=None):
         from .raid import JBODLayout
         self.layout = layout if layout is not None else JBODLayout()
         self.qos = qos               # QosPolicy | None (frozen — ships to
@@ -288,6 +299,13 @@ class ShardedArraySim:
                                      # workers; each shard runs its own
                                      # coordinator: stripe groups never span
                                      # shards, so neither do GC leases)
+        self.faults = faults         # FaultPolicy | None (frozen — validated
+                                     # against the FULL array here, then
+                                     # sliced per shard: a fault domain is one
+                                     # device, so it never spans shards)
+        if faults is not None:
+            from .faults import validate_fault_policy
+            validate_fault_policy(faults, n_ssds, layout=self.layout)
         unit = self.layout.shard_unit(n_ssds)   # SSDs per stripe group
         if n_ssds % unit:
             raise ValueError(f"n_ssds={n_ssds} not a multiple of the "
@@ -326,12 +344,19 @@ class ShardedArraySim:
         measures = _split_budget(measure_ops, self.sizes, self.n)
         warmups = _split_budget(warmup_ops, self.sizes, self.n) \
             if warmup_ops else [0] * len(self.sizes)
+        faults = [None] * len(self.sizes)
+        if self.faults is not None:
+            from .faults import slice_policy
+            lo = 0
+            for k, sz in enumerate(self.sizes):
+                faults[k] = slice_policy(self.faults, lo, lo + sz)
+                lo += sz
         return [
             (sz, self.p, self.occupancy,
              _shard_workload(self.wl, sz, self.n),
              shard_seed(self.seed, k), measures[k], warmups[k],
              self.prefill_cache, self.layout,
-             _shard_qos(self.qos, sz, self.n), self.gc)
+             _shard_qos(self.qos, sz, self.n), self.gc, faults[k])
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -384,10 +409,10 @@ def _shard_safs_workload(wl: SAFSWorkload, sz: int, n_ssds: int) -> SAFSWorkload
 
 def _run_safs_shard(args):
     (sz, ssd, occupancy, wl, cache_frac, use_flusher, clean_first,
-     score_threshold, seed, measure_ops, warmup_ops) = args
+     score_threshold, seed, measure_ops, warmup_ops, faults) = args
     sim = SAFSSim(sz, ssd, occupancy, wl, cache_frac=cache_frac,
                   use_flusher=use_flusher, clean_first=clean_first,
-                  score_threshold=score_threshold, seed=seed)
+                  score_threshold=score_threshold, seed=seed, faults=faults)
     res = sim.run(measure_ops, warmup_ops)
     return (res, sim.last_latency)
 
@@ -426,6 +451,7 @@ def merge_safs_results(parts: list[SAFSResults],
         wall_s=max(p.wall_s for p in parts),
         cache_hits=hits,
         cache_lookups=lookups,
+        faults=_merge_faults(parts),
     )
 
 
@@ -449,7 +475,7 @@ class ShardedSAFSSim:
                  cache_frac: float = 0.1, use_flusher: bool = True,
                  clean_first: bool = True, score_threshold: int = 2,
                  seed: int = 0, n_shards: int | None = None,
-                 parallel: bool = True, qos=None):
+                 parallel: bool = True, qos=None, faults=None):
         if qos is not None:
             raise NotImplementedError(
                 "per-tenant QoS couples every device through one scheduler "
@@ -468,6 +494,10 @@ class ShardedSAFSSim:
         self.score_threshold = score_threshold
         self.seed = seed
         self.parallel = parallel
+        self.faults = faults
+        if faults is not None:
+            from .faults import validate_fault_policy
+            validate_fault_policy(faults, n_ssds, layout=None)
         if n_shards is None:
             n_shards = min(os.cpu_count() or 1, n_ssds)
         self.sizes = shard_sizes(n_ssds, n_shards)
@@ -480,12 +510,19 @@ class ShardedSAFSSim:
         measures = _split_budget(measure_ops, self.sizes, self.n)
         warmups = _split_budget(warmup_ops, self.sizes, self.n) \
             if warmup_ops else [0] * len(self.sizes)
+        faults = [None] * len(self.sizes)
+        if self.faults is not None:
+            from .faults import slice_policy
+            lo = 0
+            for k, sz in enumerate(self.sizes):
+                faults[k] = slice_policy(self.faults, lo, lo + sz)
+                lo += sz
         return [
             (sz, self.p, self.occupancy,
              _shard_safs_workload(self.wl, sz, self.n),
              self.cache_frac, self.use_flusher, self.clean_first,
              self.score_threshold, shard_seed(self.seed, k),
-             measures[k], warmups[k])
+             measures[k], warmups[k], faults[k])
             for k, sz in enumerate(self.sizes)
         ]
 

@@ -1,0 +1,463 @@
+"""Fault injection + host-side resilience (core/faults.py, ISSUE 7).
+
+Three layers of guarantees:
+
+* ``faults=None`` is BYTE-IDENTICAL to the pre-fault path on every run loop
+  (fast JBOD, layout, qos, SAFS) — pinned against goldens captured
+  immediately before the fault wiring landed.
+* A faulted run is deterministic, and serial == sharded stays bit-identical
+  with a ``FaultPolicy`` attached (fault domains are single devices, so
+  ``slice_policy`` remaps them per shard without changing the decomposition).
+* The defenses do what they claim: bounded retries, crash -> degraded ->
+  rebuild -> heal, hedges fire and win, the detector quarantines the slow
+  member, the SAFS flusher defers (never drops) writebacks to sick devices.
+"""
+import pytest
+
+from repro.core.faults import Crash, FailSlow, FaultInjector, FaultPolicy, \
+    MediaError, RetryPolicy, merge_fault_stats, slice_policy
+from repro.core.gc_sim import ArraySim, SSDParams, Workload
+from repro.core.qos import QosPolicy, TenantSpec
+from repro.core.raid import Raid0Layout, Raid5Layout
+from repro.core.safs_sim import SAFSSim, SAFSWorkload
+from repro.core.sharded import ShardedArraySim, ShardedSAFSSim
+
+from test_golden_determinism import GOLDEN_ARRAY_UNIFORM
+
+P = SSDParams(capacity_pages=4096)
+
+
+# ---------------------------------------------------------------------------
+# validation: conflicting/out-of-range knobs fail fast with named errors
+# ---------------------------------------------------------------------------
+
+class TestValidation:
+    def test_crash_on_jbod_rejected(self):
+        pol = FaultPolicy(events=(Crash(device=0, at_time=0.01),))
+        with pytest.raises(ValueError, match="jbod.*no parity"):
+            ArraySim(3, P, 0.6, Workload(), faults=pol)
+
+    def test_crash_on_raid0_rejected(self):
+        pol = FaultPolicy(events=(Crash(device=0, at_time=0.01),))
+        with pytest.raises(ValueError, match="raid0.*no parity"):
+            ArraySim(3, P, 0.6, Workload(), faults=pol,
+                     layout=Raid0Layout(group=3))
+
+    def test_crash_device_out_of_range(self):
+        pol = FaultPolicy(events=(Crash(device=6, at_time=0.01),))
+        with pytest.raises(ValueError, match="Crash.device=6.*n_ssds=6"):
+            ArraySim(6, P, 0.6, Workload(), faults=pol,
+                     layout=Raid5Layout(group=3))
+
+    def test_crash_plus_static_degraded_rejected(self):
+        pol = FaultPolicy(events=(Crash(device=0, at_time=0.01),))
+        with pytest.raises(ValueError, match="degraded=1"):
+            ArraySim(6, P, 0.6, Workload(), faults=pol,
+                     layout=Raid5Layout(group=3, degraded=1))
+
+    def test_double_crash_rejected(self):
+        pol = FaultPolicy(events=(Crash(device=0, at_time=0.01),
+                                  Crash(device=1, at_time=0.02)))
+        with pytest.raises(ValueError, match="correlated failures"):
+            ArraySim(6, P, 0.6, Workload(), faults=pol,
+                     layout=Raid5Layout(group=3))
+
+    def test_crash_allowed_on_safs(self):
+        # layout-less SAFS array: crash = spare swap + flusher deferral
+        pol = FaultPolicy(events=(Crash(device=1, at_time=0.01),))
+        SAFSSim(n_ssds=3, ssd=P, occupancy=0.6,
+                workload=SAFSWorkload(concurrency=16), seed=0, faults=pol)
+
+    @pytest.mark.parametrize("pol, match", [
+        (FaultPolicy(events=(FailSlow(device=9),)), "FailSlow.device=9"),
+        (FaultPolicy(events=(FailSlow(device=0, slow_factor=0.5),)),
+         "slow_factor"),
+        (FaultPolicy(events=(FailSlow(device=0, duration=0.0),)),
+         "duration"),
+        (FaultPolicy(events=(MediaError(read_ber=1.5),)), "read_ber"),
+        (FaultPolicy(events=(MediaError(read_ber=1e-4, device=7),)),
+         "MediaError.device=7"),
+        (FaultPolicy(retry=RetryPolicy(max_retries=-1)), "max_retries"),
+        (FaultPolicy(retry=RetryPolicy(backoff=0.0)), "backoff"),
+        (FaultPolicy(retry=RetryPolicy(backoff_mult=0.5)), "backoff_mult"),
+        (FaultPolicy(retry=RetryPolicy(timeout=-1.0)), "timeout"),
+        (FaultPolicy(hedge_after=-1e-3), "hedge_after"),
+        (FaultPolicy(quarantine_qd=0), "quarantine_qd"),
+        (FaultPolicy(detect_alpha=0.0), "detect_alpha"),
+        (FaultPolicy(detect_ratio=2.0, detect_release=2.5),
+         "detect_release"),
+    ])
+    def test_knob_ranges(self, pol, match):
+        with pytest.raises(ValueError, match=match):
+            ArraySim(3, P, 0.6, Workload(), faults=pol)
+
+    def test_non_policy_and_unknown_event_rejected(self):
+        with pytest.raises(TypeError, match="FaultPolicy"):
+            ArraySim(3, P, 0.6, Workload(), faults={"events": ()})
+        with pytest.raises(TypeError, match="unknown fault event"):
+            ArraySim(3, P, 0.6, Workload(),
+                     faults=FaultPolicy(events=("flaky",)))
+
+
+# ---------------------------------------------------------------------------
+# faults=None byte-identity: goldens captured before the fault wiring
+# ---------------------------------------------------------------------------
+
+class TestFaultsOffIdentity:
+    def test_fast_loop_matches_golden(self):
+        r = ArraySim(3, P, 0.6, Workload(w_total=96, qd_per_ssd=32,
+                                         n_streams=3),
+                     seed=42, faults=None).run(6000)
+        assert r.iops == GOLDEN_ARRAY_UNIFORM["iops"]
+        assert r.p99_latency == GOLDEN_ARRAY_UNIFORM["p99"]
+        assert r.faults is None
+
+    def test_qos_loop_matches_golden(self):
+        qos = QosPolicy(tenants=(TenantSpec(tenant=0, weight=2.0,
+                                            read_frac=0.5),
+                                 TenantSpec(tenant=1, weight=1.0)))
+        r = ArraySim(3, P, 0.6, Workload(w_total=48, qd_per_ssd=16,
+                                         n_streams=2),
+                     seed=11, qos=qos, faults=None).run(4000)
+        assert r.iops == 45865.839675457
+        assert r.p99_latency == 0.004920958800186732
+        assert r.faults is None
+
+    def test_layout_loop_steered_matches_golden(self):
+        from repro.core.gc_coord import StaggeredGc
+        r = ArraySim(6, P, 0.6,
+                     Workload(w_total=48, qd_per_ssd=16, n_streams=4,
+                              read_frac=0.7),
+                     seed=5, layout=Raid5Layout(group=3),
+                     gc=StaggeredGc(max_concurrent=1, scope="group",
+                                    steer=True),
+                     faults=None).run(5000)
+        assert r.iops == 62404.307295619474
+        assert r.p99_latency == 0.0027993318160597566
+        assert r.steered_reads == 161
+        assert r.faults is None
+
+    def test_layout_loop_degraded_matches_golden(self):
+        r = ArraySim(6, P, 0.6,
+                     Workload(w_total=48, qd_per_ssd=16, n_streams=4,
+                              read_frac=0.5),
+                     seed=9,
+                     layout=Raid5Layout(group=3, degraded=1, rebuild=True),
+                     faults=None).run(4000)
+        assert r.iops == 49404.28568339584
+        assert r.p99_latency == 0.004262525239262362
+        assert r.rebuild_rows == 367
+        assert r.degraded_reads == 655
+        assert r.faults is None
+
+    def test_safs_matches_golden(self):
+        s = SAFSSim(n_ssds=3, ssd=P, occupancy=0.6,
+                    workload=SAFSWorkload(concurrency=48, read_frac=0.3),
+                    cache_frac=0.1, seed=3, faults=None)
+        r = s.run(3000)
+        assert r.app_iops == 151868.9155721029
+        assert r.p99_latency == 0.003824150957049485
+        assert r.flush_writes == 1262
+        assert r.ssd_reads == 808
+        assert r.demand_writes == 731
+        assert r.faults is None
+
+
+# ---------------------------------------------------------------------------
+# determinism + sharded bit-identity with faults ON
+# ---------------------------------------------------------------------------
+
+FAULTY = FaultPolicy(
+    events=(FailSlow(device=1, onset=0.0, slow_factor=4.0),
+            MediaError(read_ber=5e-3),
+            Crash(device=4, at_time=0.02)),
+    retry=RetryPolicy(max_retries=2, backoff=50e-6),
+    hedge_after=2e-3, detect=True, detect_min_samples=16, detect_every=16,
+    quarantine_qd=8)
+
+
+class TestFaultedDeterminism:
+    def _run(self):
+        wl = Workload(w_total=48, qd_per_ssd=16, n_streams=4, read_frac=0.6)
+        return ArraySim(6, P, 0.6, wl, seed=7, layout=Raid5Layout(group=3),
+                        faults=FAULTY).run(4000)
+
+    def test_same_seed_same_bytes(self):
+        a, b = self._run(), self._run()
+        assert a.iops == b.iops
+        assert a.p99_latency == b.p99_latency
+        assert a.faults == b.faults
+        assert a.faults["crashes"] == 1
+
+    def test_sharded_array_serial_equals_parallel(self):
+        wl = Workload(w_total=48, qd_per_ssd=16, n_streams=4, read_frac=0.6)
+        kw = dict(layout=Raid5Layout(group=3), faults=FAULTY, seed=7,
+                  n_shards=2)
+        a = ShardedArraySim(6, P, 0.6, wl, parallel=False, **kw).run(3000)
+        b = ShardedArraySim(6, P, 0.6, wl, parallel=True, **kw).run(3000)
+        assert a.iops == b.iops
+        assert a.p99_latency == b.p99_latency
+        assert a.faults == b.faults
+        # the per-shard remap really injected: the crash landed in shard 2
+        assert a.faults["crashes"] == 1
+        assert a.faults["media_errors"] > 0
+
+    def test_sharded_safs_serial_equals_parallel(self):
+        pol = FaultPolicy(events=(FailSlow(device=0, slow_factor=4.0),
+                                  MediaError(read_ber=5e-3),
+                                  Crash(device=3, at_time=0.01)),
+                          detect=True, detect_min_samples=16,
+                          detect_every=16)
+        wl = SAFSWorkload(concurrency=32, read_frac=0.5)
+        kw = dict(workload=wl, cache_frac=0.1, seed=5, n_shards=2,
+                  faults=pol)
+        a = ShardedSAFSSim(4, P, 0.6, parallel=False, **kw).run(3000)
+        b = ShardedSAFSSim(4, P, 0.6, parallel=True, **kw).run(3000)
+        assert a.app_iops == b.app_iops
+        assert a.p99_latency == b.p99_latency
+        assert a.faults == b.faults
+        assert a.faults["crashes"] == 1
+
+    def test_sharded_safs_qos_and_trace_still_refused(self):
+        with pytest.raises(NotImplementedError, match="QoS"):
+            ShardedSAFSSim(4, P, qos=QosPolicy(
+                tenants=(TenantSpec(tenant=0, weight=1.0),)))
+        with pytest.raises(NotImplementedError, match="trace"):
+            ShardedSAFSSim(4, P, workload=SAFSWorkload(scenario="trace"))
+
+
+# ---------------------------------------------------------------------------
+# slice/merge helpers
+# ---------------------------------------------------------------------------
+
+class TestSliceMerge:
+    def test_slice_policy_remaps_and_drops(self):
+        sub = slice_policy(FAULTY, 3, 6)
+        kinds = [type(e).__name__ for e in sub.events]
+        # FailSlow(1) is outside [3, 6); MediaError(-1) ships everywhere;
+        # Crash(4) remaps to local device 1
+        assert kinds == ["MediaError", "Crash"]
+        assert sub.events[1].device == 1
+        assert sub.hedge_after == FAULTY.hedge_after
+        assert sub.detect == FAULTY.detect
+
+    def test_merge_fault_stats(self):
+        assert merge_fault_stats([]) is None
+        assert merge_fault_stats([None, None]) is None
+        a = FaultInjector(FaultPolicy(), 1, 0).stats
+        b = dict(a)
+        a = dict(a)
+        a.update(media_errors=3, retries=2, max_attempts=1,
+                 detect_latency_s=0.5, quarantine_time_s=0.1)
+        b.update(media_errors=1, max_attempts=4, crash_at=0.2,
+                 rebuild_completed_at=0.9, data_at_risk_s=0.7,
+                 detect_latency_s=0.2, quarantine_time_s=0.2)
+        m = merge_fault_stats([a, None, b])
+        assert m["media_errors"] == 4
+        assert m["retries"] == 2
+        assert m["max_attempts"] == 4
+        assert m["crash_at"] == 0.2
+        assert m["data_at_risk_s"] == 0.7
+        assert m["detect_latency_s"] == 0.2      # earliest detection wins
+        assert m["quarantine_time_s"] == pytest.approx(0.3)
+
+
+# ---------------------------------------------------------------------------
+# defense behavior
+# ---------------------------------------------------------------------------
+
+class TestDefenses:
+    def test_media_retries_bounded_and_accounted(self):
+        pol = FaultPolicy(events=(MediaError(read_ber=0.05),),
+                          retry=RetryPolicy(max_retries=2, backoff=50e-6))
+        wl = Workload(w_total=48, qd_per_ssd=16, n_streams=3, read_frac=0.7)
+        r = ArraySim(3, P, 0.6, wl, seed=1, faults=pol).run(4000)
+        f = r.faults
+        assert f["media_errors"] > 0
+        assert 0 < f["retries"] <= f["media_errors"]
+        assert f["max_attempts"] <= pol.retry.max_retries + 1
+        assert r.iops > 0          # no op wedged on an exhausted retry
+
+    def test_retry_timeout_abandons_early(self):
+        # timeout smaller than the first backoff: every failed read gives
+        # up immediately instead of retrying
+        pol = FaultPolicy(events=(MediaError(read_ber=0.05),),
+                          retry=RetryPolicy(max_retries=3, backoff=1e-3,
+                                            timeout=1e-6))
+        wl = Workload(w_total=48, qd_per_ssd=16, n_streams=3, read_frac=0.7)
+        r = ArraySim(3, P, 0.6, wl, seed=1, faults=pol).run(4000)
+        f = r.faults
+        assert f["media_errors"] > 0
+        assert f["retries"] == 0
+        assert f["timeouts"] == f["media_errors"]
+
+    def test_detector_quarantines_slow_member(self):
+        pol = FaultPolicy(events=(FailSlow(device=0, onset=0.0,
+                                           slow_factor=8.0),),
+                          detect=True, detect_min_samples=16,
+                          detect_every=16, quarantine_qd=4)
+        wl = Workload(w_total=48, qd_per_ssd=16, n_streams=3, read_frac=0.5)
+        r = ArraySim(3, P, 0.6, wl, seed=2, faults=pol).run(4000)
+        f = r.faults
+        assert f["fail_slow_episodes"] == 1
+        assert f["quarantines"] >= 1
+        assert f["false_quarantines"] == 0
+        assert f["detect_latency_s"] >= 0.0
+        assert f["quarantine_time_s"] > 0.0
+
+    def test_hedged_reads_fire_and_win(self):
+        pol = FaultPolicy(events=(FailSlow(device=0, onset=0.0,
+                                           slow_factor=8.0),),
+                          hedge_after=1e-3)
+        wl = Workload(w_total=48, qd_per_ssd=16, n_streams=6, read_frac=1.0)
+        r = ArraySim(6, P, 0.6, wl, seed=0, layout=Raid5Layout(group=6),
+                     faults=pol).run(4000)
+        f = r.faults
+        assert f["hedged_reads"] > 0
+        assert 0 < f["hedge_wins"] <= f["hedged_reads"]
+
+    def test_crash_degrades_rebuilds_heals(self):
+        ssd = SSDParams(capacity_pages=2048)
+        pol = FaultPolicy(events=(Crash(device=1, at_time=0.05),))
+        wl = Workload(w_total=42, qd_per_ssd=32, n_streams=6, read_frac=0.5)
+        r = ArraySim(6, ssd, 0.5, wl, seed=0, layout=Raid5Layout(group=6),
+                     faults=pol).run(30000)
+        f = r.faults
+        assert f["crashes"] == 1
+        assert f["crash_at"] == pytest.approx(0.05)
+        # the group planned degraded between crash and heal...
+        assert r.degraded_reads > 0
+        # ...the rebuild tenant ran and finished...
+        assert r.rebuild_rows > 0
+        assert f["rebuild_completed_at"] > f["crash_at"]
+        assert f["data_at_risk_s"] == pytest.approx(
+            f["rebuild_completed_at"] - f["crash_at"])
+        # ...and rebuild stops once healed (rows bounded by one pass)
+        assert r.rebuild_rows <= 2 * 2048
+
+    def test_crash_on_qos_loop(self):
+        ssd = SSDParams(capacity_pages=2048)
+        pol = FaultPolicy(events=(Crash(device=1, at_time=0.05),))
+        qos = QosPolicy(tenants=(TenantSpec(tenant=0, weight=2.0,
+                                            read_frac=0.5),
+                                 TenantSpec(tenant=1, weight=1.0)))
+        r = ArraySim(6, ssd, 0.5, Workload(w_total=42, qd_per_ssd=32),
+                     seed=0, layout=Raid5Layout(group=6), qos=qos,
+                     faults=pol).run(30000)
+        f = r.faults
+        assert f["crashes"] == 1
+        assert f["rebuild_completed_at"] > f["crash_at"]
+        assert r.tenant_stats is not None
+
+    def test_safs_crash_defers_writebacks(self):
+        pol = FaultPolicy(events=(Crash(device=1, at_time=0.005),))
+        s = SAFSSim(n_ssds=3, ssd=P, occupancy=0.6,
+                    workload=SAFSWorkload(concurrency=48, read_frac=0.3),
+                    cache_frac=0.1, seed=3, faults=pol)
+        r = s.run(3000)
+        assert r.faults["crashes"] == 1
+        assert r.faults["flush_deferred"] > 0
+        assert r.app_iops > 0
+
+    def test_safs_media_retries_bounded(self):
+        pol = FaultPolicy(events=(MediaError(read_ber=0.05),),
+                          retry=RetryPolicy(max_retries=2, backoff=50e-6))
+        s = SAFSSim(n_ssds=3, ssd=P, occupancy=0.6,
+                    workload=SAFSWorkload(concurrency=48, read_frac=0.5),
+                    cache_frac=0.1, seed=3, faults=pol)
+        r = s.run(3000)
+        f = r.faults
+        assert f["media_errors"] > 0
+        assert f["max_attempts"] <= 3
+
+
+# ---------------------------------------------------------------------------
+# property: the retry/backoff schedule is pure, deterministic, and bounded
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:           # pragma: no cover - requirements-dev.txt
+    given = None
+
+
+if given is not None:
+    @given(max_retries=st.integers(min_value=0, max_value=8),
+           backoff=st.floats(min_value=1e-6, max_value=1e-2),
+           mult=st.floats(min_value=1.0, max_value=4.0),
+           timeout=st.one_of(st.just(0.0),
+                             st.floats(min_value=1e-5, max_value=1e-1)),
+           service=st.floats(min_value=1e-6, max_value=1e-2),
+           seed=st.integers(min_value=0, max_value=2**31))
+    @settings(max_examples=200, deadline=None)
+    def test_retry_schedule_property(max_retries, backoff, mult, timeout,
+                                     service, seed):
+        pol = FaultPolicy(retry=RetryPolicy(max_retries=max_retries,
+                                            backoff=backoff,
+                                            backoff_mult=mult,
+                                            timeout=timeout))
+
+        def chain():
+            """Walk one op's worst-case retry chain (every attempt
+            fails)."""
+            inj = FaultInjector(pol, 2, seed)
+            t_issue, now = 0.0, service
+            delays = []
+            attempt = 0
+            while True:
+                retry, delay = inj.retry_decision(attempt, t_issue, now)
+                if not retry:
+                    break
+                delays.append(delay)
+                now += delay + service
+                attempt += 1
+            return delays, inj.stats
+
+        d1, s1 = chain()
+        d2, s2 = chain()
+        assert d1 == d2 and s1 == s2             # deterministic
+        assert len(d1) <= max_retries            # bounded re-issues
+        assert s1["max_attempts"] <= max_retries + 1
+        assert all(b <= a for a, b in zip(d1[1:], d1))   # non-decreasing
+        for k, d in enumerate(d1):
+            assert d == pytest.approx(backoff * mult ** k)
+        if timeout > 0.0:
+            # every scheduled retry fit the op budget at decision time
+            elapsed = service
+            for d in d1:
+                assert elapsed + d <= timeout
+                elapsed += d + service
+
+
+# ---------------------------------------------------------------------------
+# nightly: the full fault-injection acceptance sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_faults_sweep_full_tier(tmp_path):
+    """Nightly: the full 18-SSD faults sweep (the committed BENCH_faults.json
+    tier) must pass every built-in check — hedging + quarantine cutting read
+    p99 and un-starving peers, the mid-run crash rebuilding with bounded
+    foreground p99, retries bounded, the faulted path deterministic."""
+    import json
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = tmp_path / "BENCH_faults.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.faults_sweep",
+         "--out", str(out)],
+        cwd=root, env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    payload = json.loads(out.read_text())
+    assert payload["all_checks_pass"]
+    assert payload["n_ssds"] >= 18
+    fs = payload["fail_slow"]
+    assert fs["defended"]["mean"]["p99_ms"] \
+        < fs["no_defense"]["mean"]["p99_ms"]
+    assert all(row["faults"]["rebuild_completed_at"] >= 0.0
+               for row in payload["crash_rebuild"]["crash"]["seeds"])
