@@ -10,21 +10,26 @@ nonzero iff any section failed, and a summary table names the failures.
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run --list      # section keys
   PYTHONPATH=src python -m benchmarks.run --only faults --fast
+  PYTHONPATH=src python -m benchmarks.run --json results.json
 
 ``--only <key>`` runs a single registered section — CI smoke steps invoke
 sections through it instead of duplicating per-benchmark subprocess
-incantations in ci.yml.
+incantations in ci.yml. ``--json <path>`` writes a machine-readable summary
+(per-section key/status/wall time + overall exit code) alongside the human
+table, so CI consumes results without log-scraping.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import json
 import time
 import traceback
+from pathlib import Path
 
 # (key, module, title, takes the --smoke tier args?) — in run order. The
 # non-tier sections import jax; they are registered LAST so the sharded
-# sims' worker pools (first six sections) can still use the fast 'fork'
+# sims' worker pools (first sections) can still use the fast 'fork'
 # start method (forking after the multithreaded JAX runtime initializes
 # risks worker deadlock, and the fallback 'spawn' pool is slower to start).
 _SECTIONS: list[tuple[str, str, str, bool]] = [
@@ -42,6 +47,9 @@ _SECTIONS: list[tuple[str, str, str, bool]] = [
      "GC coordination -- staggered/idle policies vs reactive trigger", True),
     ("faults", "faults_sweep",
      "Faults -- fail-slow/crash injection vs hedging + quarantine", True),
+    ("telemetry", "telemetry_demo",
+     "Telemetry -- GC rotation timeline, latency budget, overhead gate",
+     True),
     ("paper_tables", "paper_tables",
      "Paper -- Table 1 / Table 2 / Figure 2 (raw array under GC)", False),
     ("paper_figs", "paper_figs",
@@ -54,7 +62,7 @@ _SECTIONS: list[tuple[str, str, str, bool]] = [
 ]
 
 
-def _run_section(results: list, title: str, fn, *fn_args) -> None:
+def _run_section(results: list, key: str, title: str, fn, *fn_args) -> None:
     """Run one section, capturing its exit code (a raised exception counts
     as rc=1 and is printed, not propagated)."""
     print("=" * 72)
@@ -66,7 +74,7 @@ def _run_section(results: list, title: str, fn, *fn_args) -> None:
     except Exception:
         traceback.print_exc()
         rc = 1
-    results.append((title, rc, time.time() - t0))
+    results.append((key, title, rc, time.time() - t0))
     print()
 
 
@@ -79,6 +87,9 @@ def main(argv=None):
                     help=f"run a single section: {', '.join(keys)}")
     ap.add_argument("--list", action="store_true",
                     help="list registered section keys and exit")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write a machine-readable summary (per-section "
+                         "status, wall time, exit code) to PATH")
     args = ap.parse_args(argv)
     if args.list:
         for key, _, title, _ in _SECTIONS:
@@ -88,27 +99,44 @@ def main(argv=None):
     sections = [s for s in _SECTIONS if args.only is None or s[0] == args.only]
 
     t0 = time.time()
-    results: list[tuple[str, int, float]] = []
-    for _key, mod, title, takes_tier in sections:
+    results: list[tuple[str, str, int, float]] = []
+    for key, mod, title, takes_tier in sections:
         # lazy per-section import: --only never pays for (or breaks on) the
         # other sections' imports, and jax-importing sections stay unimported
         # until every fork-pool section has run
         module = importlib.import_module(f".{mod}", __package__)
         if takes_tier:
-            _run_section(results, title, module.main, tier)
+            _run_section(results, key, title, module.main, tier)
         else:
-            _run_section(results, title, module.main)
+            _run_section(results, key, title, module.main)
 
     print("=" * 72)
     print("summary")
     print("=" * 72)
-    for title, rc, dt in results:
+    for _key, title, rc, dt in results:
         status = "ok" if rc == 0 else f"FAIL (rc={rc})"
         print(f"  {status:12s} {dt:6.0f}s  {title}")
-    n_failed = sum(1 for _, rc, _ in results if rc)
+    n_failed = sum(1 for _, _, rc, _ in results if rc)
+    total_wall_s = time.time() - t0
     print(f"\n{len(results) - n_failed}/{len(results)} sections passed; "
-          f"total benchmark wall time: {time.time() - t0:.0f}s")
-    return 1 if n_failed else 0
+          f"total benchmark wall time: {total_wall_s:.0f}s")
+    exit_code = 1 if n_failed else 0
+    if args.json:
+        Path(args.json).write_text(json.dumps({
+            "fast": args.fast,
+            "only": args.only,
+            "sections": [
+                {"key": key, "title": title, "status":
+                 "ok" if rc == 0 else "fail", "exit_code": rc,
+                 "wall_s": dt}
+                for key, title, rc, dt in results
+            ],
+            "n_sections": len(results),
+            "n_failed": n_failed,
+            "total_wall_s": total_wall_s,
+            "exit_code": exit_code,
+        }, indent=1))
+    return exit_code
 
 
 if __name__ == "__main__":

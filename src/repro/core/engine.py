@@ -105,10 +105,14 @@ class EventLoop:
     __slots__ = ("now", "_seq", "_handlers", "_payloads", "_free",
                  "processed", "_stopped",
                  "_near", "_ni", "_far", "_bheap", "_cur", "_inv_w",
-                 "_dsamples")
+                 "_dsamples", "telemetry")
 
     def __init__(self) -> None:
         self.now = 0.0
+        # optional core/telemetry.py collector: the dispatch loops check
+        # tick-boundary crossings at event pop (one float compare per event
+        # when attached; no probe events are ever scheduled)
+        self.telemetry = None
         self._seq = 0
         self._handlers: list[Any] = []
         self._payloads: list[Any] = []
@@ -225,7 +229,11 @@ class EventLoop:
         elif ni > _COMPACT_AT:        # shed the consumed prefix (uncalibrated
             del near[:ni]             # mode never swaps the near list out)
             ni = 0
-        self.now, _, slot = near[ni]
+        t, _, slot = near[ni]
+        tel = self.telemetry
+        if tel is not None and t >= tel.next_tick:
+            tel.on_tick(t)
+        self.now = t
         self._ni = ni + 1
         handler = self._handlers[slot]
         payload = self._payloads[slot]
@@ -256,6 +264,10 @@ class EventLoop:
         n = 0
         near = self._near
         ni = self._ni
+        tel = self.telemetry
+        # tick-crossing guard held in a local: inf when telemetry is off, so
+        # the only per-event cost is one float compare
+        tick = tel.next_tick if tel is not None else float("inf")
         try:
             while not self._stopped:
                 if ni >= len(near):
@@ -271,7 +283,10 @@ class EventLoop:
                 elif ni > _COMPACT_AT:
                     del near[:ni]
                     ni = 0
-                self.now, _, slot = near[ni]
+                t, _, slot = near[ni]
+                if t >= tick:
+                    tick = tel.on_tick(t)
+                self.now = t
                 ni += 1
                 self._ni = ni
                 handler = handlers[slot]
@@ -584,6 +599,9 @@ class DeviceModel:
         s.busy_time += dt * s.p.channels
         if self.gc_coord is not None:
             self.gc_coord.on_gc_start(self, dt)
+        tel = self.loop.telemetry
+        if tel is not None:
+            tel.note_gc_start(self.dev_id, self.loop.now, dt)
         self.loop.schedule(dt, self._gc_done)
 
     def _start_idle_gc(self, blocks: int) -> None:
@@ -600,6 +618,9 @@ class DeviceModel:
         s.gc_time += dt
         s.busy_time += dt * s.p.channels
         self.gc_coord.on_gc_start(self, dt, idle=True)
+        tel = self.loop.telemetry
+        if tel is not None:
+            tel.note_gc_start(self.dev_id, self.loop.now, dt, idle=True)
         self.loop.schedule(dt, self._gc_done)
 
     def _gc_done(self) -> None:
@@ -607,6 +628,9 @@ class DeviceModel:
         self.server.in_gc = False
         if self.gc_coord is not None:
             self.gc_coord.on_gc_end(self)
+        tel = self.loop.telemetry
+        if tel is not None:
+            tel.note_gc_end(self.dev_id, self.loop.now)
         self.kick()
 
     def _complete(self, req: Any) -> None:

@@ -501,6 +501,8 @@ class ArrayResults:
     # -- fault injection results (core/faults.py; None when faults is off) ---
     faults: "dict | None" = None     # whole-run fault/defense counters
                                      # (see faults._new_fault_stats)
+    # -- telemetry (core/telemetry.py; None when telemetry is off) -----------
+    telemetry: "TelemetryResult | None" = None   # series/spans/budget snapshot
 
 
 class SSDServer:
@@ -590,6 +592,16 @@ def clear_prefill_cache() -> None:
     _PREFILL_CACHE.clear()
 
 
+def _plan_devs(plan) -> tuple:
+    """Sorted device set a plan touches across all phases (the span's GC
+    exposure set). Only called when span tracing is on."""
+    devs = set()
+    for ph in plan.phases:
+        for ch in ph:
+            devs.add(ch[0])
+    return tuple(sorted(devs))
+
+
 def _ftl_window_stats(ssds, ftl_snap, span, channels):
     """Measurement-window accounting shared by both run loops: per-SSD
     utilization plus the FTL (writes, gc_copies, trims) deltas against the
@@ -620,7 +632,8 @@ class ArraySim:
                  layout: "Layout | None" = None,
                  qos: "QosPolicy | None" = None,
                  gc: "GcPolicy | None" = None,
-                 faults: "FaultPolicy | None" = None):
+                 faults: "FaultPolicy | None" = None,
+                 telemetry: "TelemetrySpec | None" = None):
         from .gc_coord import GcPolicy
         from .raid import JBODLayout, Layout   # local: raid imports workloads
         self.n = n_ssds
@@ -651,6 +664,19 @@ class ArraySim:
         if faults is not None:
             from .faults import validate_fault_policy
             validate_fault_policy(faults, n_ssds, layout=self.layout)
+        self.telemetry = telemetry
+        if telemetry is not None:
+            from .telemetry import TelemetrySpec
+            if not isinstance(telemetry, TelemetrySpec):
+                raise TypeError(f"telemetry must be a core.telemetry."
+                                f"TelemetrySpec, got "
+                                f"{type(telemetry).__name__}")
+            if telemetry.spans and faults is not None:
+                raise ValueError(
+                    "telemetry spans cannot be combined with faults=: retry "
+                    "and hedge legs re-issue work outside the span "
+                    "lifecycle; use a spans=False spec (the series probes "
+                    "compose with faults)")
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         key = (n_ssds, ssd, occupancy, seed) if prefill_cache else None
@@ -677,6 +703,7 @@ class ArraySim:
         self.last_stall: np.ndarray | None = None     # stripe-stall samples
         self.last_tenant_latency: dict[int, np.ndarray] | None = None
         self.last_gc_wait: np.ndarray | None = None   # stagger-wait samples
+        self.last_telemetry = None                    # TelemetryResult
 
     def _make_injector(self):
         """Fresh per-run FaultInjector, or None when faults are off. Each
@@ -686,6 +713,15 @@ class ArraySim:
             return None
         from .faults import FaultInjector
         return FaultInjector(self.faults, self.n, self.seed)
+
+    def _make_telemetry(self, loop):
+        """Fresh per-run Telemetry collector attached to ``loop``, or None
+        when telemetry is off. Per-run construction keeps repeated runs
+        (``run_phased``) from mixing series."""
+        if self.telemetry is None:
+            return None
+        from .telemetry import Telemetry
+        return Telemetry(self.telemetry, self.n).attach(loop)
 
     # -- main loop -------------------------------------------------------------
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
@@ -698,6 +734,8 @@ class ArraySim:
             warmup_ops = measure_ops // 2
         total_ops = warmup_ops + measure_ops
         loop = EventLoop()
+        tel = self._make_telemetry(loop)
+        tel_spans = tel is not None and tel.spans_on
         qd = wl.qd_per_ssd
         coord = self.gc.make_coordinator(n, loop, self.layout.shard_unit(n)) \
             if self.gc is not None else None
@@ -797,6 +835,48 @@ class ArraySim:
             pw = s.pending_writes
             w = waiters[i]
 
+            if tel_spans:
+                # span variant: identical mutations in identical order; the
+                # span record rides as the request tuple's 7th element
+                # (spans+faults is rejected at construction, so this never
+                # collides with the media-retry attempt counter below)
+                t_read, t_prog = self.p.t_read, self.p.t_prog
+                t_coal, t_trim = self.p.t_coalesce, self.p.t_trim
+
+                def on_done(req):
+                    stream, lba, is_read, coal, t_issue, kind, sp = req
+                    outstanding[stream] -= 1
+                    if is_read:
+                        s.served_reads += 1
+                    elif kind == OP_TRIM:
+                        ftl.trim(lba)
+                        s.served_trims += 1
+                    else:
+                        s.served_writes += 1
+                        c = pw[lba] - 1
+                        if c:
+                            pw[lba] = c
+                        else:
+                            del pw[lba]
+                        if not coal:      # inlined ftl.user_write
+                            program(lba)
+                            ftl.writes += 1
+                    m = note_completion(t_issue)
+                    if m:
+                        measured[i] += 1
+                        if is_read:
+                            mr[0] += 1
+                        else:
+                            mr[1] += 1
+                    svc = t_coal if coal else (
+                        t_read if is_read else
+                        (t_trim if kind == OP_TRIM else t_prog))
+                    tel.close_fast_span(sp, loop.now, svc, m)
+                    if w:
+                        unpark(i)
+                    stream_fill(stream)
+                return on_done
+
             if media_on:
                 def on_done(req):
                     stream, lba, is_read, coal, t_issue, kind, att = req
@@ -879,6 +959,8 @@ class ArraySim:
         if coord is not None:
             for i, d in enumerate(devices):
                 coord.attach(d, i)
+        if tel is not None:
+            tel.register_array_probes(ssds, devices, host_queues)
 
         def enqueue(stream: int, ssd_i: int, lba: int, is_read: bool,
                     kind: int):
@@ -893,7 +975,10 @@ class ArraySim:
                     coal = True
                     pw[lba] = c + 1
             outstanding[stream] += 1
-            if media_on:   # attempt counter rides at the end; indices 0-5 keep
+            if tel_spans:  # span rides at the end; indices 0-5 keep meaning
+                req = (stream, lba, is_read, coal, loop.now, kind,
+                       tel.new_span(kind, stream, ssd_i, loop.now))
+            elif media_on:  # attempt counter rides at the end, same shape
                 req = (stream, lba, is_read, coal, loop.now, kind, 0)
             else:
                 req = (stream, lba, is_read, coal, loop.now, kind)
@@ -974,13 +1059,20 @@ class ArraySim:
         wall_s = time.perf_counter() - t_wall
 
         span = mw.span
+        if tel is not None:
+            tel.finalize(loop.now, mw.t0)
         summ = mw.latency.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = None
         self.last_tenant_latency = None
+        self.last_telemetry = tel.result() if tel is not None else None
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
+        if tel is not None and tel.has_series("busy_time"):
+            # derived from the telemetry busy-time probe's final sample —
+            # bit-identical to the legacy per-SSD arithmetic (pinned by test)
+            util = tel.util_final(span, self.p.channels)
         gkw = self._gc_window_stats(coord, loop, span)
         return ArrayResults(
             iops=float(measured_arr.sum() / span),
@@ -1004,6 +1096,7 @@ class ArraySim:
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
             faults=inj.finalize(loop.now) if inj is not None else None,
+            telemetry=self.last_telemetry,
             **gkw,
         )
 
@@ -1057,6 +1150,8 @@ class ArraySim:
             warmup_ops = measure_ops // 2
         total_ops = warmup_ops + measure_ops
         loop = EventLoop()
+        tel = self._make_telemetry(loop)
+        tel_spans = tel is not None and tel.spans_on
         qd = wl.qd_per_ssd
         coord = self.gc.make_coordinator(n, loop, self.layout.shard_unit(n)) \
             if self.gc is not None else None
@@ -1143,6 +1238,9 @@ class ArraySim:
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
         note_completion = mw.note_completion
+        # nominal per-kind media time, the span "service" component
+        # (indexed by OP_* kind; only read under tel_spans)
+        svc_k = (self.p.t_read, self.p.t_prog, self.p.t_trim, self.p.t_prog)
 
         def make_pull(i: int):
             hq = host_queues[i]
@@ -1175,6 +1273,9 @@ class ArraySim:
                 else:
                     coal = True
                     pw[lba] = c + 1
+            sp = plan.span
+            if sp is not None and sp.t_admit < 0.0:
+                tel.note_admit(sp, loop.now)   # first child admission
             if media_on:
                 req = (plan, lba, kind, coal, 0)
             else:
@@ -1218,13 +1319,20 @@ class ArraySim:
             if st >= 0:
                 outstanding[st] -= 1
             if plan.measured:
-                if note_completion(plan.t_issue):
+                m = note_completion(plan.t_issue)
+                if m:
                     if plan.kind == OP_READ:
                         mr[0] += 1
                     else:
                         mr[1] += 1
                 if plan.stall_track and mw.measuring and plan.t_first >= 0.0:
                     stall.record(plan.t_last - plan.t_first)
+                sp = plan.span
+                if sp is not None:
+                    sync = plan.t_last - plan.t_first \
+                        if plan.t_first >= 0.0 else 0.0
+                    tel.close_plan_span(sp, loop.now, sync,
+                                        svc_k[plan.kind], m)
             elif plan.kind == OP_REBUILD:
                 rebuild_done[0] += 1
                 if rebuild_need[0] and rebuild_done[0] >= rebuild_need[0]:
@@ -1340,6 +1448,8 @@ class ArraySim:
         if coord is not None:
             for i, d in enumerate(devices):
                 coord.attach(d, i)
+        if tel is not None:
+            tel.register_array_probes(ssds, devices, host_queues)
 
         def try_drain(st: int) -> bool:
             """Place the stream's pending children in order; parks the stream
@@ -1386,6 +1496,9 @@ class ArraySim:
                 return True           # only target is the failed member)
             plan.stream = st
             plan.t_issue = loop.now
+            if tel_spans and plan.measured:
+                plan.span = tel.new_plan_span(
+                    plan.kind, st, _plan_devs(plan), loop.now)
             outstanding[st] += 1
             if detached:
                 for d in detached:
@@ -1460,14 +1573,19 @@ class ArraySim:
         wall_s = time.perf_counter() - t_wall
 
         span = mw.span
+        if tel is not None:
+            tel.finalize(loop.now, mw.t0)
         summ = mw.latency.summary()
         stall_summ = stall.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = stall.values()
         self.last_tenant_latency = None
+        self.last_telemetry = tel.result() if tel is not None else None
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
+        if tel is not None and tel.has_series("busy_time"):
+            util = tel.util_final(span, self.p.channels)
         sd = planner.delta(stat_snap[0])
         parity_wa = sd["child_writes"] / sd["logical_writes"] \
             if sd["logical_writes"] else 1.0
@@ -1508,6 +1626,7 @@ class ArraySim:
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
             faults=inj.finalize(loop.now) if inj is not None else None,
+            telemetry=self.last_telemetry,
             **gkw,
         )
 
@@ -1543,6 +1662,8 @@ class ArraySim:
             warmup_ops = measure_ops // 2
         total_ops = warmup_ops + measure_ops
         loop = EventLoop()
+        tel = self._make_telemetry(loop)
+        tel_spans = tel is not None and tel.spans_on
         qd = wl.qd_per_ssd
         W = max(1, wl.w_total)
         coord = self.gc.make_coordinator(n, loop, self.layout.shard_unit(n)) \
@@ -1635,6 +1756,9 @@ class ArraySim:
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
         note_completion = mw.note_completion
+        # nominal per-kind media time, the span "service" component
+        # (indexed by OP_* kind; only read under tel_spans)
+        svc_k = (self.p.t_read, self.p.t_prog, self.p.t_trim, self.p.t_prog)
 
         def make_pull(i: int):
             hq = host_queues[i]
@@ -1667,6 +1791,9 @@ class ArraySim:
                 else:
                     coal = True
                     pw[lba] = c + 1
+            sp = plan.span
+            if sp is not None and sp.t_admit < 0.0:
+                tel.note_admit(sp, loop.now)   # first child admission
             if media_on:
                 req = (plan, lba, kind, coal, 0)
             else:
@@ -1719,7 +1846,8 @@ class ArraySim:
                     # (warmup included) so throttling reaches steady state
                     # before the measurement window opens
                     sched.note_completion(ids[st], now - plan.t_issue, now)
-                if note_completion(plan.t_issue):
+                m = note_completion(plan.t_issue)
+                if m:
                     if plan.kind == OP_READ:
                         mr[0] += 1
                     else:
@@ -1728,6 +1856,12 @@ class ArraySim:
                         trec[ids[st]].record(now - plan.t_issue)
                 if plan.stall_track and mw.measuring and plan.t_first >= 0.0:
                     stall.record(plan.t_last - plan.t_first)
+                sp = plan.span
+                if sp is not None:
+                    sync = plan.t_last - plan.t_first \
+                        if plan.t_first >= 0.0 else 0.0
+                    tel.close_plan_span(sp, loop.now, sync,
+                                        svc_k[plan.kind], m)
             elif plan.kind == OP_REBUILD:
                 rebuild_done[0] += 1
                 if rebuild_need[0] and rebuild_done[0] >= rebuild_need[0]:
@@ -1844,6 +1978,8 @@ class ArraySim:
         if coord is not None:
             for i, d in enumerate(devices):
                 coord.attach(d, i)
+        if tel is not None:
+            tel.register_array_probes(ssds, devices, host_queues)
 
         def try_drain(st: int) -> bool:
             pend = pending[st]
@@ -1884,6 +2020,10 @@ class ArraySim:
                 return
             plan.stream = st
             plan.t_issue = loop.now
+            if tel_spans and plan.measured:
+                plan.span = tel.new_plan_span(
+                    plan.kind, ids[st] if st < n_t else -1,
+                    _plan_devs(plan), loop.now)
             outstanding[st] += 1
             if st < n_t:
                 total_out[0] += 1
@@ -1996,14 +2136,19 @@ class ArraySim:
         wall_s = time.perf_counter() - t_wall
 
         span = mw.span
+        if tel is not None:
+            tel.finalize(loop.now, mw.t0)
         summ = mw.latency.summary()
         stall_summ = stall.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = stall.values()
         self.last_tenant_latency = {t: trec[t].values() for t in ids}
+        self.last_telemetry = tel.result() if tel is not None else None
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
+        if tel is not None and tel.has_series("busy_time"):
+            util = tel.util_final(span, self.p.channels)
         sd = planner.delta(stat_snap[0])
         parity_wa = sd["child_writes"] / sd["logical_writes"] \
             if sd["logical_writes"] else 1.0
@@ -2051,6 +2196,7 @@ class ArraySim:
             tenant_stats=tstats,
             share_error=share_error,
             faults=inj.finalize(loop.now) if inj is not None else None,
+            telemetry=self.last_telemetry,
             **gkw,
         )
 

@@ -136,7 +136,7 @@ class Plan:
 
     __slots__ = ("phases", "kind", "measured", "stall_track", "stream",
                  "t_issue", "phase_i", "remaining", "t_first", "t_last",
-                 "hedge")
+                 "hedge", "span")
 
     def __init__(self, phases, kind: int, measured: bool = True,
                  stall_track: bool = False):
@@ -154,6 +154,9 @@ class Plan:
         # hedged-read record shared by the primary and its hedge leg
         # (core/faults.py): [done, primary_plan]. None outside hedging.
         self.hedge = None
+        # telemetry span (core/telemetry.py); None unless span tracing is on
+        # and this is a measured foreground plan
+        self.span = None
 
 
 class RebuildSource(OpSource):

@@ -232,17 +232,19 @@ class SAFSResults:
     # -- fault injection results (core/faults.py; None when faults is off) ---
     faults: "dict | None" = None     # whole-run fault/defense counters
                                      # (see faults._new_fault_stats)
+    # -- telemetry (core/telemetry.py; None when telemetry is off) -----------
+    telemetry: "TelemetryResult | None" = None   # series/spans/budget snapshot
 
 
 class _Device:
     """DualQueue discipline + shared multi-slot service model for one SSD."""
 
     def __init__(self, loop: EventLoop, server: SSDServer, queue: DualQueue,
-                 service_time, on_done):
+                 service_time, on_done, dev_id: int = 0):
         self.server = server
         self.queue = queue
         self.model = DeviceModel(loop, server, queue.pop_next,
-                                 service_time, on_done)
+                                 service_time, on_done, dev_id=dev_id)
 
 
 class SAFSSim:
@@ -255,7 +257,8 @@ class SAFSSim:
                  source: OpSource | None = None,
                  trace: np.ndarray | None = None,
                  qos: "QosPolicy | None" = None,
-                 faults: "FaultPolicy | None" = None):
+                 faults: "FaultPolicy | None" = None,
+                 telemetry: "TelemetrySpec | None" = None):
         self.n = n_ssds
         self.p = ssd
         self.wl = workload
@@ -278,6 +281,25 @@ class SAFSSim:
         else:
             self._inj = None
         self._media_on = self._inj is not None and self._inj.any_media
+
+        self.telemetry = telemetry
+        if telemetry is not None:
+            from .telemetry import TelemetrySpec
+            if not isinstance(telemetry, TelemetrySpec):
+                raise TypeError(f"telemetry must be a core.telemetry."
+                                f"TelemetrySpec, got "
+                                f"{type(telemetry).__name__}")
+            if telemetry.spans and faults is not None:
+                raise ValueError(
+                    "telemetry spans cannot be combined with faults=: retry "
+                    "and hedge legs re-issue work outside the span "
+                    "lifecycle; use a spans=False spec (the series probes "
+                    "compose with faults)")
+        # per-run collector (run() attaches a fresh one; the persistent loop
+        # is detached again at the end of each run)
+        self._tel = None
+        self._tel_spans = False
+        self.last_telemetry = None                    # TelemetryResult
 
         if qos is not None:
             # per-tenant HIGH classes at the DualQueue admission point: one
@@ -303,7 +325,8 @@ class SAFSSim:
         self.devices = [
             _Device(self.loop, SSDServer(ssd, occupancy, self.rng),
                     make_queue(i),
-                    self._service_time_for(i), self._on_done_for(i))
+                    self._service_time_for(i), self._on_done_for(i),
+                    dev_id=i)
             for i in range(n_ssds)
         ]
         live_per_ssd = self.devices[0].server.ftl.live_lbas
@@ -527,7 +550,7 @@ class SAFSSim:
                 r.reset()
                 self._thr_snap[t] = self.sched.throttle_time(t, now)
 
-    def _complete_op(self, t_start: float, tenant: int = 0) -> None:
+    def _complete_op(self, t_start: float, tenant: int = 0) -> bool:
         measured = self._mw.note_completion(t_start)
         if self.sched is not None:
             now = self.loop.now
@@ -537,6 +560,7 @@ class SAFSSim:
                 if rec is not None:
                     rec.record(now - t_start)
         self._spawn_op()
+        return measured
 
     def _spawn_op(self) -> None:
         op = self.source.next_op(self.loop.now)
@@ -554,6 +578,8 @@ class SAFSSim:
 
     def _process_op(self, args) -> None:
         tag, is_read, t0, tenant = args
+        tel = self._tel if self._tel_spans else None
+        kind = 0 if is_read else 1
         s, slot = self.cache.lookup(tag)
         if slot >= 0:
             if not is_read:
@@ -561,34 +587,80 @@ class SAFSSim:
                 self.cache.mark_dirty(s, slot)
                 if not already:
                     self._note_write(s)
-            self._complete_op(t0, tenant)
+            m = self._complete_op(t0, tenant)
+            if tel is not None:
+                # hit path: the whole latency is CPU-stage queueing+service
+                now = self.loop.now
+                tel.record_span(t0, tenant, -1, 0, kind, now,
+                                (now - t0, 0.0, 0.0, 0.0, 0.0), m)
             return
         # miss: allocate a frame (clean-first GClock)
         needs_fill = is_read or self.wl.unaligned
         s, slot, victim_tag, victim_dirty = self.cache.insert(tag, dirty=not needs_fill and not is_read)
         dev = tag % self.n
+        # span stage tracker: [prev stage end, writeback, fill, gc, gc snap];
+        # read-only probes of sim state — never touches event scheduling
+        if tel is not None:
+            t_proc = self.loop.now
+            st = [t_proc, 0.0, 0.0, 0.0, 0.0]
+        else:
+            st = None
+
+        def close_span(measured):
+            now = self.loop.now
+            lat = now - t0
+            cpu = t_proc - t0
+            other = lat - cpu - st[1] - st[2] - st[3]
+            tel.record_span(t0, tenant, dev, 1, kind, now,
+                            (cpu, st[1], st[2], st[3], other), measured)
 
         def after_fill(_=None):
+            if st is not None:
+                # fill stage ends now; carve its GC overlap out of the stage
+                now = self.loop.now
+                fl = now - st[0]
+                g = tel.gc_cum(dev, now) - st[4]
+                g = 0.0 if g < 0.0 else (fl if g > fl else g)
+                st[2] = fl - g
+                st[3] += g
+                st[0] = now
             if not is_read:
                 self.cache.mark_dirty(s, slot)
                 self._note_write(s)
-            self._complete_op(t0, tenant)
+            m = self._complete_op(t0, tenant)
+            if st is not None:
+                close_span(m)
 
         def do_fill(_=None):
+            if st is not None and victim_dirty:
+                # writeback stage (this call is its completion) ends now
+                now = self.loop.now
+                wb = now - st[0]
+                g = tel.gc_cum(vdev, now) - st[4]
+                g = 0.0 if g < 0.0 else (wb if g > wb else g)
+                st[1] = wb - g
+                st[3] += g
+                st[0] = now
             if needs_fill:
+                if st is not None:
+                    st[4] = tel.gc_cum(dev, self.loop.now)
                 self._submit(dev, IORequest(
                     payload={"op": "read", "lba": tag // self.n},
                     priority=HIGH, on_complete=after_fill, tenant=tenant))
             else:
                 if not is_read:
                     self._note_write(s)
-                self._complete_op(t0, tenant)
+                m = self._complete_op(t0, tenant)
+                if st is not None:
+                    close_span(m)
 
         if victim_dirty:
             # demand writeback: the application op blocks on it (paper §3.3),
             # so it is classed by the tenant whose op triggered the eviction
             self.demand_writes += 1
             vdev = victim_tag % self.n
+            if st is not None:
+                st[4] = tel.gc_cum(vdev, self.loop.now)
             self._submit(vdev, IORequest(
                 payload={"op": "write", "lba": victim_tag // self.n},
                 priority=HIGH, on_complete=do_fill, tenant=tenant))
@@ -602,6 +674,16 @@ class SAFSSim:
         total = warmup_ops + measure_ops
         self._mw = mw = MeasurementWindow(self.loop, warmup_ops,
                                           self._begin_measure, target=total)
+        # fresh per-run collector on the persistent loop (detached below so
+        # spans from ops straddling a run boundary drop into the void)
+        tel = None
+        if self.telemetry is not None:
+            from .telemetry import SAFS_COMPONENTS, Telemetry
+            tel = Telemetry(self.telemetry, self.n,
+                            components=SAFS_COMPONENTS).attach(self.loop)
+            tel.register_safs_probes(self.devices, self.cache)
+        self._tel = tel
+        self._tel_spans = tel is not None and tel.spans_on
         # Seed the closed-loop concurrency exactly once per sim: the spawn
         # chain is self-sustaining (every completion respawns), so a later
         # run() — a new phase — resumes the in-flight population instead of
@@ -618,6 +700,10 @@ class SAFSSim:
         b = self._base
         summ = mw.latency.summary()
         self.last_latency = mw.latency.values()
+        if tel is not None:
+            tel.finalize(self.loop.now, mw.t0)
+            self.loop.telemetry = None   # the loop outlives the run
+        self.last_telemetry = tel.result() if tel is not None else None
         tstats, share_error = None, 0.0
         if self.qos is not None:
             from .qos import build_tenant_stats
@@ -626,6 +712,12 @@ class SAFSSim:
                               - self._thr_snap[t] for t in self.qos.ids}
             tstats, share_error = build_tenant_stats(
                 self.qos, self._trec, span, throttle_times)
+        util = np.array([d.server.busy_time / (span * self.p.channels)
+                         for d in self.devices])
+        if tel is not None and tel.has_series("busy_time"):
+            # derived from the telemetry busy-time probe's final sample —
+            # bit-identical to the legacy per-device arithmetic
+            util = tel.util_final(span, self.p.channels)
         fblock = None
         if self._inj is not None:
             if self.flusher is not None:
@@ -644,8 +736,7 @@ class SAFSSim:
             app_ops=summ.n,
             mean_latency=summ.mean,
             sim_time=span,
-            util=np.array([d.server.busy_time / (span * self.p.channels)
-                           for d in self.devices]),
+            util=util,
             p50_latency=summ.p50,
             p95_latency=summ.p95,
             p99_latency=summ.p99,
@@ -656,6 +747,7 @@ class SAFSSim:
             tenant_stats=tstats,
             share_error=share_error,
             faults=fblock,
+            telemetry=self.last_telemetry,
         )
 
     def run_phased(self, phases) -> "list[tuple[str, SAFSResults]]":

@@ -49,6 +49,7 @@ import numpy as np
 from .engine import LatencySummary
 from .gc_sim import ArrayResults, ArraySim, SSDParams, Workload
 from .safs_sim import SAFSResults, SAFSSim, SAFSWorkload
+from .telemetry import merge_telemetry
 from .workloads import _mix64
 
 __all__ = ["ShardedArraySim", "ShardedSAFSSim", "shard_sizes",
@@ -103,12 +104,27 @@ def _shard_qos(qos, sz: int, n_ssds: int):
     return replace(qos, tenants=tenants)
 
 
+def _check_telemetry(telemetry, faults) -> None:
+    """Fail fast in the parent on a bad telemetry spec (the per-shard
+    ``ArraySim``/``SAFSSim`` constructors re-validate in the workers, but a
+    worker traceback is a worse error surface)."""
+    if telemetry is None:
+        return
+    from .telemetry import TelemetrySpec
+    if not isinstance(telemetry, TelemetrySpec):
+        raise TypeError(f"telemetry must be a core.telemetry.TelemetrySpec, "
+                        f"got {type(telemetry).__name__}")
+    if telemetry.spans and faults is not None:
+        raise ValueError("telemetry spans cannot be combined with faults= "
+                         "(see ArraySim)")
+
+
 def _run_shard(args):
     (sz, ssd, occupancy, wl, seed, measure_ops, warmup_ops,
-     prefill_cache, layout, qos, gc, faults) = args
+     prefill_cache, layout, qos, gc, faults, telemetry) = args
     sim = ArraySim(sz, ssd, occupancy, wl, seed=seed,
                    prefill_cache=prefill_cache, layout=layout, qos=qos, gc=gc,
-                   faults=faults)
+                   faults=faults, telemetry=telemetry)
     res = sim.run(measure_ops, warmup_ops)
     return (res, sim.last_latency, sim.last_stall, sim.last_tenant_latency,
             sim.last_gc_wait)
@@ -133,6 +149,12 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
     throughput add, tenant percentiles are exact over ``tenant_pooled``
     (``qos.pool_tenant_samples``), shares/share_error are recomputed from
     the pooled op counts, and ``throttle_time`` reports the worst shard.
+
+    Telemetry block (``core/telemetry.py``): per-shard series concatenate
+    along the device axis on the common tick-grid prefix, spans merge by
+    ``(time, seq, shard)`` with device ids re-based, and budget sums add
+    exactly (``telemetry.merge_telemetry``) — deterministic, so
+    ``parallel=False`` == ``parallel=True`` bit-identical.
 
     GC-coordination block (``core/gc_coord.py``): each shard runs its own
     coordinator (stripe groups never span shards, so neither do leases);
@@ -226,6 +248,7 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
         gc_forced=sum(p.gc_forced for p in parts),
         idle_gc_frac=idle_frac,
         faults=_merge_faults(parts),
+        telemetry=merge_telemetry([p.telemetry for p in parts]),
     )
 
 
@@ -289,7 +312,8 @@ class ShardedArraySim:
                  occupancy: float = 0.6, workload: Workload = Workload(),
                  seed: int = 0, n_shards: int | None = None,
                  parallel: bool = True, prefill_cache: bool = True,
-                 layout=None, qos=None, gc=None, faults=None):
+                 layout=None, qos=None, gc=None, faults=None,
+                 telemetry=None):
         from .raid import JBODLayout
         self.layout = layout if layout is not None else JBODLayout()
         self.qos = qos               # QosPolicy | None (frozen — ships to
@@ -306,6 +330,10 @@ class ShardedArraySim:
         if faults is not None:
             from .faults import validate_fault_policy
             validate_fault_policy(faults, n_ssds, layout=self.layout)
+        self.telemetry = telemetry   # TelemetrySpec | None (frozen — ships
+                                     # to workers; per-shard results merge
+                                     # via telemetry.merge_telemetry)
+        _check_telemetry(telemetry, faults)
         unit = self.layout.shard_unit(n_ssds)   # SSDs per stripe group
         if n_ssds % unit:
             raise ValueError(f"n_ssds={n_ssds} not a multiple of the "
@@ -336,6 +364,7 @@ class ShardedArraySim:
         self.last_stall: np.ndarray | None = None
         self.last_tenant_latency: dict[int, np.ndarray] | None = None
         self.last_gc_wait: np.ndarray | None = None
+        self.last_telemetry = None   # merged TelemetryResult of the last run
         self.last_wall_s = 0.0       # observed wall clock of the last run()
 
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
@@ -356,7 +385,8 @@ class ShardedArraySim:
              _shard_workload(self.wl, sz, self.n),
              shard_seed(self.seed, k), measures[k], warmups[k],
              self.prefill_cache, self.layout,
-             _shard_qos(self.qos, sz, self.n), self.gc, faults[k])
+             _shard_qos(self.qos, sz, self.n), self.gc, faults[k],
+             self.telemetry)
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -383,6 +413,7 @@ class ShardedArraySim:
         self.last_stall = stall_pooled if stall_pooled.size else None
         self.last_tenant_latency = tenant_pooled
         self.last_gc_wait = gc_wait_pooled if gc_wait_pooled.size else None
+        self.last_telemetry = merged.telemetry
         return merged
 
 
@@ -409,10 +440,12 @@ def _shard_safs_workload(wl: SAFSWorkload, sz: int, n_ssds: int) -> SAFSWorkload
 
 def _run_safs_shard(args):
     (sz, ssd, occupancy, wl, cache_frac, use_flusher, clean_first,
-     score_threshold, seed, measure_ops, warmup_ops, faults) = args
+     score_threshold, seed, measure_ops, warmup_ops, faults,
+     telemetry) = args
     sim = SAFSSim(sz, ssd, occupancy, wl, cache_frac=cache_frac,
                   use_flusher=use_flusher, clean_first=clean_first,
-                  score_threshold=score_threshold, seed=seed, faults=faults)
+                  score_threshold=score_threshold, seed=seed, faults=faults,
+                  telemetry=telemetry)
     res = sim.run(measure_ops, warmup_ops)
     return (res, sim.last_latency)
 
@@ -452,6 +485,7 @@ def merge_safs_results(parts: list[SAFSResults],
         cache_hits=hits,
         cache_lookups=lookups,
         faults=_merge_faults(parts),
+        telemetry=merge_telemetry([p.telemetry for p in parts]),
     )
 
 
@@ -475,7 +509,8 @@ class ShardedSAFSSim:
                  cache_frac: float = 0.1, use_flusher: bool = True,
                  clean_first: bool = True, score_threshold: int = 2,
                  seed: int = 0, n_shards: int | None = None,
-                 parallel: bool = True, qos=None, faults=None):
+                 parallel: bool = True, qos=None, faults=None,
+                 telemetry=None):
         if qos is not None:
             raise NotImplementedError(
                 "per-tenant QoS couples every device through one scheduler "
@@ -498,10 +533,13 @@ class ShardedSAFSSim:
         if faults is not None:
             from .faults import validate_fault_policy
             validate_fault_policy(faults, n_ssds, layout=None)
+        self.telemetry = telemetry
+        _check_telemetry(telemetry, faults)
         if n_shards is None:
             n_shards = min(os.cpu_count() or 1, n_ssds)
         self.sizes = shard_sizes(n_ssds, n_shards)
         self.last_latency: np.ndarray | None = None
+        self.last_telemetry = None   # merged TelemetryResult of the last run
         self.last_wall_s = 0.0       # observed wall clock of the last run()
 
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
@@ -522,7 +560,7 @@ class ShardedSAFSSim:
              _shard_safs_workload(self.wl, sz, self.n),
              self.cache_frac, self.use_flusher, self.clean_first,
              self.score_threshold, shard_seed(self.seed, k),
-             measures[k], warmups[k], faults[k])
+             measures[k], warmups[k], faults[k], self.telemetry)
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -539,4 +577,5 @@ class ShardedSAFSSim:
         pooled = pool_samples([s for _, s in out])
         merged = merge_safs_results(parts, pooled)
         self.last_latency = pooled if pooled.size else None
+        self.last_telemetry = merged.telemetry
         return merged

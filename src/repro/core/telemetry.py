@@ -1,0 +1,600 @@
+"""Deterministic run telemetry: time-series probes, per-op spans, and a
+latency-budget decomposition.
+
+The collector is *passive by construction*: series samples piggyback on the
+existing event stream (the :class:`~repro.core.engine.EventLoop` checks
+tick-boundary crossings when it pops an event — no probe events are ever
+scheduled), probes are read-only closures over live simulator state, and no
+telemetry path consumes RNG.  Consequently a run with telemetry attached
+produces **byte-identical** simulation results (latency samples, counters,
+event count, RNG stream) to the same run with ``telemetry=None`` — an
+invariant pinned by ``tests/test_telemetry.py`` on all four run loops.
+
+Three capabilities:
+
+* **Time-series probes** — per-device utilization (cumulative busy-time),
+  queue backlog, free blocks, and GC-active flag, plus SAFS cache
+  hit/lookup/dirty-fraction scalars, sampled at fixed sim-time ticks
+  ``k * series_dt``.  An event at time ``t`` is dispatched *after* every
+  boundary ``<= t`` is sampled, so a tick reflects the state produced by all
+  events strictly before it (plus same-time events already dispatched).
+* **Per-op spans** — one record per completed operation with additive
+  wait-cause components (see ``ARRAY_COMPONENTS`` / ``SAFS_COMPONENTS``),
+  exportable as Chrome trace-event JSON viewable in Perfetto
+  (:meth:`TelemetryResult.export_trace`).
+* **Latency budget** — the measured-window mean (and p99-tail) latency
+  decomposed into those components, per tenant and per device; the
+  components of every span sum to that span's measured latency, so the
+  budget means sum to the run's mean latency within float tolerance.
+
+Span component vocabulary (each list partitions a span's latency):
+
+``ARRAY_COMPONENTS`` (ArraySim fast / layout / QoS loops)
+    ``park``     time between plan issue and first child admission (stream
+                 parked on a full device queue; structurally 0 in the fast
+                 loop, whose latency clock starts at admission),
+    ``queue``    host-queue + NCQ wait not otherwise attributed,
+    ``gc``       on-device GC episode time overlapping the op's residency
+                 (exact for single-device ops: episodes never overlap an
+                 individual request's service slice, so the cumulative
+                 GC-time delta over the op's window is pure wait),
+    ``service``  nominal media service time for the op kind,
+    ``sync``     stripe-member fan-in skew (first-to-last child completion
+                 of the final phase; 0 for single-child plans).
+
+``SAFS_COMPONENTS`` (SAFSSim cache path)
+    ``cpu``        CPU-stage queueing + service,
+    ``writeback``  demand writeback of a dirty victim (miss path),
+    ``fill``       device fill read (miss path),
+    ``gc``         GC overlap during writeback/fill residency,
+    ``other``      remainder (hit path: 0).
+
+Merging (sharded runners): per-device series concatenate along the device
+axis on the shared tick grid (trimmed to the shortest shard), spans merge
+sorted by ``(time, seq, shard)``, device ids are re-based to global ids, and
+budget sums add exactly — so ``parallel=False`` and ``parallel=True`` runs
+of the same shard decomposition produce bit-identical merged telemetry.
+Tenant/stream ids in merged spans remain shard-local (each shard owns its
+streams); per-shard percentile tails are dropped from merged budgets (only
+exact-mergeable sums survive).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+ARRAY_COMPONENTS = ("park", "queue", "gc", "service", "sync")
+SAFS_COMPONENTS = ("cpu", "writeback", "fill", "gc", "other")
+
+_KIND_NAMES = {0: "read", 1: "write", 2: "trim", 3: "rebuild"}
+
+
+@dataclass(frozen=True)
+class TelemetrySpec:
+    """Frozen, picklable telemetry configuration (ships to shard workers).
+
+    ``series_dt``
+        tick spacing in sim-seconds for the time-series probes.
+    ``spans`` / ``span_limit``
+        per-op span tracing on/off; at most ``span_limit`` span records are
+        retained (overflow is counted in ``spans_dropped``, and the latency
+        budget keeps accumulating regardless).
+    ``probe_*``
+        per-subsystem series toggles.
+    """
+
+    series_dt: float = 1e-3
+    spans: bool = False
+    span_limit: int = 65536
+    probe_util: bool = True
+    probe_queues: bool = True
+    probe_free_blocks: bool = True
+    probe_gc: bool = True
+    probe_cache: bool = True
+
+    def __post_init__(self):
+        if self.series_dt <= 0.0:
+            raise ValueError("series_dt must be > 0")
+        if self.span_limit < 0:
+            raise ValueError("span_limit must be >= 0")
+
+
+class _Span(object):
+    """In-flight op span (closed spans become plain tuples)."""
+
+    __slots__ = ("kind", "tenant", "dev", "nd", "devs", "t_arr", "t_admit",
+                 "gc0")
+
+
+@dataclass
+class TelemetryResult:
+    """Picklable end-of-run telemetry snapshot.
+
+    ``series[name]`` is ``(T, n_devices)`` for per-device probes and
+    ``(T,)`` for per-sim scalars (``(T, n_shards)`` after a sharded merge);
+    ``ticks`` is the shared ``(T,)`` tick-time axis.  ``final[name]`` is one
+    extra sample taken at loop end (off the tick grid).  Span records are
+    ``(t_start, seq, tenant, dev, n_devs, kind, dur, components, measured)``
+    with ``components`` aligned to ``components`` below.
+    """
+
+    spec: TelemetrySpec
+    components: tuple
+    n_devices: int
+    ticks: np.ndarray
+    series: dict
+    final: dict
+    window_t0: float
+    t_end: float
+    gc_episodes: list
+    spans: list
+    spans_dropped: int
+    budget: Optional[dict] = None
+    merged: bool = False
+
+    def util_series(self, channels: int) -> np.ndarray:
+        """Per-tick utilization ``(T, n)`` from the cumulative busy-time
+        series: the busy-time delta per tick over the tick width, clamped to
+        ``>= 0`` (the measurement-window reset zeroes busy-time mid-run,
+        producing one negative delta at the warmup boundary)."""
+        busy = np.asarray(self.series["busy_time"], dtype=np.float64)
+        if busy.ndim == 1:
+            busy = busy[:, None]
+        d = np.diff(busy, axis=0, prepend=busy[:1])
+        np.maximum(d, 0.0, out=d)
+        return d / (float(self.spec.series_dt) * channels)
+
+    def gc_active_any(self) -> np.ndarray:
+        """Bool ``(T,)``: any device in GC at each tick."""
+        g = np.asarray(self.series["gc_active"])
+        return g.max(axis=1) > 0.0 if g.ndim == 2 else g > 0.0
+
+    def gc_active_all(self) -> np.ndarray:
+        """Bool ``(T,)``: *every* device in GC at each tick."""
+        g = np.asarray(self.series["gc_active"])
+        return g.min(axis=1) > 0.0 if g.ndim == 2 else g > 0.0
+
+    def export_trace(self, path, time_scale: float = 1.0) -> int:
+        """Write Chrome trace-event JSON (open at https://ui.perfetto.dev —
+        "Open trace file" — or chrome://tracing).  Spans become ``"X"``
+        duration events on one track per device, GC episodes a second
+        process, series a third (``"C"`` counter events).  ``ts``/``dur``
+        are microseconds of sim time (scaled by ``time_scale``).  Returns
+        the number of trace events written."""
+        us = 1e6 * time_scale
+        ev = [
+            {"name": "process_name", "ph": "M", "pid": 0,
+             "args": {"name": "io spans"}},
+            {"name": "process_name", "ph": "M", "pid": 1,
+             "args": {"name": "gc episodes"}},
+            {"name": "process_name", "ph": "M", "pid": 2,
+             "args": {"name": "series"}},
+        ]
+        comp = self.components
+        for rec in sorted(self.spans, key=lambda r: (r[0], r[1])):
+            t_arr, seq, tenant, dev, nd, kind, dur, comps, measured = rec
+            args = dict(zip(comp, comps))
+            args["tenant"] = tenant
+            args["n_devs"] = nd
+            args["measured"] = bool(measured)
+            ev.append({"name": _KIND_NAMES.get(kind, str(kind)),
+                       "cat": "op", "ph": "X", "ts": t_arr * us,
+                       "dur": dur * us, "pid": 0,
+                       "tid": dev if dev >= 0 else 9999, "args": args})
+        for dev, t0, t1, idle in self.gc_episodes:
+            ev.append({"name": "idle-gc" if idle else "gc", "cat": "gc",
+                       "ph": "X", "ts": t0 * us, "dur": (t1 - t0) * us,
+                       "pid": 1, "tid": dev})
+        ticks = self.ticks
+        for name, arr in self.series.items():
+            a = np.asarray(arr)
+            if a.ndim == 1:
+                a = a[:, None]
+            for i, t in enumerate(ticks):
+                ev.append({"name": name, "ph": "C", "pid": 2, "ts": t * us,
+                           "args": {str(d): float(a[i, d])
+                                    for d in range(a.shape[1])}})
+        payload = {"traceEvents": ev, "displayTimeUnit": "ms"}
+        with open(path, "w") as f:
+            json.dump(payload, f, default=float)
+        return len(ev)
+
+
+class Telemetry:
+    """Per-run collector.  Attach to an :class:`EventLoop` (sets
+    ``loop.telemetry``); the loop calls :meth:`on_tick` at tick-boundary
+    crossings.  Simulators register read-only probes and feed span
+    lifecycle notes; :meth:`finalize` freezes everything into a
+    :class:`TelemetryResult`."""
+
+    def __init__(self, spec: TelemetrySpec, n_devices: int,
+                 components: tuple = ARRAY_COMPONENTS):
+        self.spec = spec
+        self.n_devices = n_devices
+        self.components = components
+        self.spans_on = bool(spec.spans)
+        self.dt = float(spec.series_dt)
+        self._k = 0
+        self.next_tick = 0.0
+        self._probes: list[tuple[str, Callable, list]] = []
+        self._ticks: list[float] = []
+        # GC cumulative-time function C_d(t) (closed episodes + open one)
+        self._gc_closed = [0.0] * n_devices
+        self._gc_open = [-1.0] * n_devices
+        self.gc_episodes: list[tuple] = []
+        # closed spans + budget accumulators (budget: measured ops only)
+        self._seq = 0
+        self.spans: list[tuple] = []
+        self.spans_dropped = 0
+        self._b_lat: list[float] = []
+        self._b_comps: list[tuple] = []
+        self._b_tenant: list[int] = []
+        self._b_dev: list[int] = []
+        self._res: Optional[TelemetryResult] = None
+
+    # -- wiring -----------------------------------------------------------
+    def attach(self, loop) -> "Telemetry":
+        """Hook into ``loop`` and align the tick grid: the first tick is the
+        smallest ``k * series_dt >= loop.now`` (keeps the grid anchored at
+        sim time 0 even when the loop is resumed mid-stream)."""
+        now = loop.now
+        dt = self.dt
+        k = int(now / dt)
+        while k * dt < now:
+            k += 1
+        self._k = k
+        self.next_tick = k * dt
+        loop.telemetry = self
+        return self
+
+    def add_series(self, name: str, fn: Callable[[], object]) -> None:
+        """Register a read-only probe; ``fn()`` is called at every tick and
+        must return a per-device sequence (or a scalar for per-sim
+        series)."""
+        self._probes.append((name, fn, []))
+
+    def has_series(self, name: str) -> bool:
+        return any(n == name for n, _, _ in self._probes)
+
+    def register_array_probes(self, ssds, devices, host_queues) -> None:
+        """Standard ArraySim probe set (per-device)."""
+        sp = self.spec
+        if sp.probe_util:
+            self.add_series("busy_time",
+                            lambda: [s.busy_time for s in ssds])
+        if sp.probe_queues:
+            self.add_series(
+                "backlog",
+                lambda: [len(q) + len(d.admitted) + d.in_service
+                         for q, d in zip(host_queues, devices)])
+        if sp.probe_free_blocks:
+            self.add_series(
+                "free_blocks",
+                lambda: [float(len(s.ftl.free_blocks)) for s in ssds])
+        if sp.probe_gc:
+            self.add_series(
+                "gc_active",
+                lambda: [1.0 if d.in_gc else 0.0 for d in devices])
+
+    def register_safs_probes(self, devices, cache) -> None:
+        """Standard SAFSSim probe set: per-device series over the wrapped
+        DeviceModels plus per-sim cache scalars."""
+        sp = self.spec
+        if sp.probe_util:
+            self.add_series(
+                "busy_time", lambda: [d.server.busy_time for d in devices])
+        if sp.probe_queues:
+            self.add_series(
+                "backlog", lambda: [_qlen(d.queue) + d.model.occupancy
+                                    for d in devices])
+        if sp.probe_free_blocks:
+            self.add_series(
+                "free_blocks",
+                lambda: [float(len(d.server.ftl.free_blocks))
+                         for d in devices])
+        if sp.probe_gc:
+            self.add_series(
+                "gc_active",
+                lambda: [1.0 if d.model.in_gc else 0.0 for d in devices])
+        if sp.probe_cache:
+            self.add_series("cache_hits", lambda: float(cache.hit_count))
+            self.add_series("cache_lookups", lambda: float(cache.lookups))
+            cap = float(max(cache.num_sets * cache.set_size, 1))
+            self.add_series(
+                "cache_dirty_frac",
+                lambda: float(sum(cache._dirty_n)) / cap)
+
+    # -- tick sampling (called by the EventLoop hot path) -----------------
+    def on_tick(self, now: float) -> float:
+        """Sample every boundary ``k * series_dt <= now`` and return the
+        next boundary.  Boundaries are computed multiplicatively from the
+        integer tick index — no accumulated float drift."""
+        dt = self.dt
+        k = self._k
+        t = k * dt
+        ticks = self._ticks
+        probes = self._probes
+        while t <= now:
+            ticks.append(t)
+            for _, fn, store in probes:
+                store.append(fn())
+            k += 1
+            t = k * dt
+        self._k = k
+        self.next_tick = t
+        return t
+
+    # -- GC episode notes (DeviceModel cold paths) ------------------------
+    def note_gc_start(self, dev: int, now: float, dur: float,
+                      idle: bool = False) -> None:
+        self._gc_open[dev] = now
+        self.gc_episodes.append((dev, now, now + dur, idle))
+
+    def note_gc_end(self, dev: int, now: float) -> None:
+        t0 = self._gc_open[dev]
+        if t0 >= 0.0:
+            self._gc_closed[dev] += now - t0
+            self._gc_open[dev] = -1.0
+
+    def gc_cum(self, dev: int, now: float) -> float:
+        """Cumulative on-device GC time through ``now`` (C_d(t)); the delta
+        over an op's residency window is its GC-wait exposure."""
+        t0 = self._gc_open[dev]
+        c = self._gc_closed[dev]
+        return c + (now - t0) if t0 >= 0.0 else c
+
+    # -- spans ------------------------------------------------------------
+    def new_span(self, kind: int, tenant: int, dev: int,
+                 now: float) -> _Span:
+        """Single-device op admitted now (fast loop / SAFS)."""
+        sp = _Span()
+        sp.kind = kind
+        sp.tenant = tenant
+        sp.dev = dev
+        sp.nd = 1
+        sp.devs = None
+        sp.t_arr = now
+        sp.t_admit = now
+        sp.gc0 = self.gc_cum(dev, now) if dev >= 0 else 0.0
+        return sp
+
+    def new_plan_span(self, kind: int, tenant: int, devs: tuple,
+                      now: float) -> _Span:
+        """Striped plan issued now; admission is noted at the first child
+        enqueue (:meth:`note_admit`)."""
+        sp = _Span()
+        sp.kind = kind
+        sp.tenant = tenant
+        sp.devs = devs
+        sp.dev = devs[0] if len(devs) == 1 else -1
+        sp.nd = len(devs)
+        sp.t_arr = now
+        sp.t_admit = -1.0
+        sp.gc0 = 0.0
+        return sp
+
+    def note_admit(self, sp: _Span, now: float) -> None:
+        sp.t_admit = now
+        gc_cum = self.gc_cum
+        sp.gc0 = sum(gc_cum(d, now) for d in sp.devs)
+
+    def close_fast_span(self, sp: _Span, now: float, svc: float,
+                        measured: bool) -> None:
+        """Fast loop: latency clock == admission; park is structurally 0."""
+        devt = now - sp.t_arr
+        if svc > devt:
+            svc = devt
+        gc = self.gc_cum(sp.dev, now) - sp.gc0
+        lim = devt - svc
+        gc = 0.0 if gc < 0.0 else (lim if gc > lim else gc)
+        self.record_span(sp.t_arr, sp.tenant, sp.dev, 1, sp.kind, now,
+                         (0.0, devt - svc - gc, gc, svc, 0.0), measured)
+
+    def close_plan_span(self, sp: _Span, now: float, sync: float,
+                        svc: float, measured: bool) -> None:
+        t_admit = sp.t_admit if sp.t_admit >= 0.0 else now
+        park = t_admit - sp.t_arr
+        devt = (now - t_admit) - sync
+        if devt < 0.0:
+            devt = 0.0
+        if svc > devt:
+            svc = devt
+        gc_cum = self.gc_cum
+        gc = sum(gc_cum(d, now) for d in sp.devs) - sp.gc0
+        lim = devt - svc
+        gc = 0.0 if gc < 0.0 else (lim if gc > lim else gc)
+        self.record_span(sp.t_arr, sp.tenant, sp.dev, sp.nd, sp.kind, now,
+                         (park, devt - svc - gc, gc, svc, sync), measured)
+
+    def record_span(self, t_arr: float, tenant: int, dev: int, nd: int,
+                    kind: int, t_end: float, comps: tuple,
+                    measured: bool) -> None:
+        """Append a closed span; ``comps`` aligns with ``self.components``
+        and sums (with the clamps above) to ``t_end - t_arr``.  Measured
+        (in-window) spans also feed the latency budget — past
+        ``span_limit`` the span record is dropped but the budget still
+        accumulates."""
+        if self._res is not None:     # op straddled a finalized run
+            return
+        seq = self._seq
+        self._seq = seq + 1
+        if len(self.spans) < self.spec.span_limit:
+            self.spans.append((t_arr, seq, tenant, dev, nd, kind,
+                               t_end - t_arr, comps, measured))
+        else:
+            self.spans_dropped += 1
+        if measured:
+            self._b_lat.append(t_end - t_arr)
+            self._b_comps.append(comps)
+            self._b_tenant.append(tenant)
+            self._b_dev.append(dev)
+
+    # -- finalize ---------------------------------------------------------
+    def finalize(self, now: float, window_t0: float = 0.0) -> TelemetryResult:
+        """Freeze collected data into a :class:`TelemetryResult` (detaching
+        from the loop is the caller's job where the loop outlives the
+        run)."""
+        series = {}
+        final = {}
+        for name, fn, store in self._probes:
+            series[name] = np.asarray(store, dtype=np.float64)
+            final[name] = np.asarray(fn(), dtype=np.float64)
+        self._res = TelemetryResult(
+            spec=self.spec, components=self.components,
+            n_devices=self.n_devices,
+            ticks=np.asarray(self._ticks, dtype=np.float64),
+            series=series, final=final, window_t0=window_t0, t_end=now,
+            gc_episodes=self.gc_episodes, spans=self.spans,
+            spans_dropped=self.spans_dropped,
+            budget=self._build_budget() if self.spans_on else None)
+        return self._res
+
+    def result(self) -> Optional[TelemetryResult]:
+        return self._res
+
+    def util_final(self, span: float, channels: int) -> np.ndarray:
+        """Measured-window utilization from the busy-time probe's final
+        sample — bit-identical to the legacy per-SSD computation
+        (``busy_time`` is reset to 0 at the window start, so the final
+        cumulative value *is* the window total)."""
+        assert self._res is not None
+        busy = self._res.final["busy_time"]
+        return busy / (span * channels)
+
+    def _group(self, idx: np.ndarray, lat: np.ndarray,
+               comps: np.ndarray) -> dict:
+        out = {"n": int(idx.size), "lat_sum": float(lat[idx].sum())}
+        out["sums"] = {c: float(comps[idx, j].sum())
+                       for j, c in enumerate(self.components)}
+        n = max(out["n"], 1)
+        out["mean_latency"] = out["lat_sum"] / n
+        out["mean"] = {c: s / n for c, s in out["sums"].items()}
+        return out
+
+    def _build_budget(self) -> dict:
+        lat = np.asarray(self._b_lat, dtype=np.float64)
+        comps = np.asarray(self._b_comps, dtype=np.float64)
+        if lat.size == 0:
+            comps = comps.reshape(0, len(self.components))
+        every = np.arange(lat.size)
+        budget = self._group(every, lat, comps)
+        budget["components"] = list(self.components)
+        budget["merged"] = False
+        if lat.size:
+            p50 = float(np.percentile(lat, 50))
+            p99 = float(np.percentile(lat, 99))
+            budget["p50_latency"] = p50
+            budget["p99_latency"] = p99
+            budget["tail_p99"] = self._group(np.nonzero(lat >= p99)[0],
+                                             lat, comps)
+        else:
+            budget["p50_latency"] = budget["p99_latency"] = 0.0
+            budget["tail_p99"] = None
+        tenants = np.asarray(self._b_tenant)
+        devs = np.asarray(self._b_dev)
+        budget["by_tenant"] = {
+            int(t): self._group(np.nonzero(tenants == t)[0], lat, comps)
+            for t in np.unique(tenants)} if lat.size else {}
+        budget["by_device"] = {
+            int(d): self._group(np.nonzero(devs == d)[0], lat, comps)
+            for d in np.unique(devs)} if lat.size else {}
+        return budget
+
+
+def _qlen(q) -> int:
+    """Backlog of a DualQueue-like object (plain ``high``/``low`` deques or
+    the QoS per-tenant ``high`` dict-of-deques)."""
+    h = q.high
+    n = sum(len(d) for d in h.values()) if isinstance(h, dict) else len(h)
+    return n + len(q.low)
+
+
+def _merge_budgets(parts: list, components: tuple,
+                   bases: list) -> Optional[dict]:
+    if all(p.budget is None for p in parts):
+        return None
+    comp = list(components)
+    out = {"components": comp, "merged": True, "n": 0, "lat_sum": 0.0,
+           "sums": {c: 0.0 for c in comp},
+           "p50_latency": None, "p99_latency": None, "tail_p99": None}
+    by_tenant: dict = {}
+    by_dev: dict = {}
+    for p, base in zip(parts, bases):
+        b = p.budget
+        if b is None:
+            continue
+        out["n"] += b["n"]
+        out["lat_sum"] += b["lat_sum"]
+        for c in comp:
+            out["sums"][c] += b["sums"][c]
+        # device keys re-base to global ids (shard order = device order);
+        # tenant/stream ids stay shard-local (each shard owns its streams)
+        for dst, src, off in ((by_tenant, b.get("by_tenant") or {}, 0),
+                              (by_dev, b.get("by_device") or {}, base)):
+            for k, g in src.items():
+                gk = k + off if k >= 0 else k
+                d = dst.setdefault(gk, {"n": 0, "lat_sum": 0.0,
+                                        "sums": {c: 0.0 for c in comp}})
+                d["n"] += g["n"]
+                d["lat_sum"] += g["lat_sum"]
+                for c in comp:
+                    d["sums"][c] += g["sums"][c]
+    for g in [out] + list(by_tenant.values()) + list(by_dev.values()):
+        n = max(g["n"], 1)
+        g["mean_latency"] = g["lat_sum"] / n
+        g["mean"] = {c: s / n for c, s in g["sums"].items()}
+    out["by_tenant"] = by_tenant
+    out["by_device"] = by_dev
+    return out
+
+
+def merge_telemetry(parts: list) -> Optional[TelemetryResult]:
+    """Merge per-shard :class:`TelemetryResult` objects (shard order =
+    device order).  Deterministic: series concatenate along the device axis
+    on the common tick-grid prefix, per-sim scalar series become
+    ``(T, n_shards)`` columns, spans/GC episodes re-base device ids by each
+    shard's device offset and sort by ``(time, seq, shard)``.  Returns
+    ``None`` if no shard carried telemetry."""
+    if any(p is None for p in parts) or not parts:
+        return None
+    T = min(p.ticks.size for p in parts)
+    first = parts[0]
+    series = {}
+    final = {}
+    for name in first.series:
+        cols = []
+        fins = []
+        for p in parts:
+            a = np.asarray(p.series[name])[:T]
+            cols.append(a if a.ndim == 2 else a[:, None])
+            f = np.atleast_1d(np.asarray(p.final[name]))
+            fins.append(f)
+        series[name] = np.concatenate(cols, axis=1)
+        final[name] = np.concatenate(fins)
+    bases = np.cumsum([0] + [p.n_devices for p in parts[:-1]])
+    spans = []
+    episodes = []
+    for si, (p, base) in enumerate(zip(parts, map(int, bases))):
+        for rec in p.spans:
+            t_arr, seq, tenant, dev, nd, kind, dur, comps, m = rec
+            spans.append((t_arr, seq, si,
+                          (t_arr, seq, tenant,
+                           dev + base if dev >= 0 else -1, nd, kind, dur,
+                           comps, m)))
+        for dev, t0, t1, idle in p.gc_episodes:
+            episodes.append((dev + base, t0, t1, idle))
+    spans.sort(key=lambda r: (r[0], r[1], r[2]))
+    episodes.sort(key=lambda r: (r[1], r[0]))
+    return TelemetryResult(
+        spec=first.spec, components=first.components,
+        n_devices=int(sum(p.n_devices for p in parts)),
+        ticks=first.ticks[:T], series=series, final=final,
+        window_t0=min(p.window_t0 for p in parts),
+        t_end=max(p.t_end for p in parts),
+        gc_episodes=episodes, spans=[r[3] for r in spans],
+        spans_dropped=int(sum(p.spans_dropped for p in parts)),
+        budget=_merge_budgets(parts, first.components,
+                              [int(b) for b in bases]), merged=True)

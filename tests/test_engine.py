@@ -323,3 +323,105 @@ def test_kick_skips_pull_when_backlog_empty():
     while loop.step():
         pass
     assert server.busy_time == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Calendar-queue far-bucket edges (two-level near/far structure)
+# ---------------------------------------------------------------------------
+
+def _calibrate_loop(dt=1e-3):
+    """Drive enough scheduling deltas through an EventLoop to trip width
+    self-calibration (``_CALIB_SAMPLES`` positive deltas)."""
+    from repro.core.engine import _CALIB_SAMPLES
+    loop = EventLoop()
+    for k in range(_CALIB_SAMPLES + 1):
+        loop.at((k + 1) * dt, lambda: None)
+    assert loop._inv_w > 0.0            # calibrated
+    return loop
+
+
+def test_far_bucket_events_far_beyond_near_window():
+    """Events scheduled far beyond the current near window land in far
+    buckets and still dispatch in exact (time, seq) order."""
+    loop = _calibrate_loop()
+    order = []
+    # far-future events, deliberately out of order, spanning many buckets
+    for t in (5.0, 0.5, 50.0, 2.0, 0.9, 50.0):
+        loop.at(t, lambda t=t: order.append((t, loop.now)))
+    assert loop._far                    # at least one far bucket exists
+    while loop.step():
+        pass
+    assert [t for t, _ in order] == [0.5, 0.9, 2.0, 5.0, 50.0, 50.0]
+    assert all(t == now for t, now in order)
+    assert not loop._far and not loop._bheap    # fully drained
+
+
+def test_far_bucket_width_calibration_deterministic():
+    """Two loops fed identical event streams must calibrate to the same
+    bucket width and the same calendar shape (the determinism contract:
+    calendar shape is a pure function of the event stream)."""
+    def feed(loop):
+        # irregular but fixed deltas, then a far-future burst
+        t = 0.0
+        for k in range(200):
+            t += 1e-4 * (1 + (k * 7) % 13)
+            loop.at(t, lambda: None)
+        for k in range(50):
+            loop.at(10.0 + k * 1e-3, lambda: None)
+    a, b = EventLoop(), EventLoop()
+    feed(a)
+    feed(b)
+    assert a._inv_w == b._inv_w and a._inv_w > 0.0
+    assert a._cur == b._cur
+    assert sorted(a._far) == sorted(b._far)
+    assert [len(a._far[i]) for i in sorted(a._far)] == \
+           [len(b._far[i]) for i in sorted(b._far)]
+    na, nb = 0, 0
+    while a.step():
+        na += 1
+    while b.step():
+        nb += 1
+    assert na == nb == 250
+    assert a.now == b.now
+
+
+def test_far_bucket_drain_order_same_time_bursts():
+    """A burst of same-time events inside one far bucket drains FIFO (the
+    seq tie-break survives the bucket's deferred sort), interleaved exactly
+    with distinct-time events in the same bucket."""
+    loop = _calibrate_loop()
+    width = 1.0 / loop._inv_w
+    # pick a time safely inside a single far bucket
+    base = (loop._cur + 10) * width + 0.25 * width
+    order = []
+    for k in range(8):
+        loop.at(base, lambda k=k: order.append(("burst", k)))
+    loop.at(base + 0.1 * width, lambda: order.append(("later", 0)))
+    loop.at(base - 0.1 * width, lambda: order.append(("earlier", 0)))
+    for k in range(8, 16):
+        loop.at(base, lambda k=k: order.append(("burst", k)))
+    while loop.step():
+        pass
+    assert order[0] == ("earlier", 0)
+    assert order[-1] == ("later", 0)
+    assert [k for tag, k in order if tag == "burst"] == list(range(16))
+
+
+def test_far_bucket_insert_after_promotion_stays_exact():
+    """A handler scheduling into the already-promoted current bucket must
+    insort into the live near list, not a stale far bucket."""
+    loop = _calibrate_loop()
+    width = 1.0 / loop._inv_w
+    base = (loop._cur + 5) * width + 0.2 * width
+    order = []
+
+    def chain():
+        order.append("first")
+        # same bucket, later time — near list is the promoted bucket now
+        loop.at(base + 0.3 * width, lambda: order.append("chained"))
+
+    loop.at(base, chain)
+    loop.at(base + 0.5 * width, lambda: order.append("tail"))
+    while loop.step():
+        pass
+    assert order == ["first", "chained", "tail"]

@@ -1,0 +1,333 @@
+"""Telemetry subsystem (core/telemetry.py): the passive-observer contract.
+
+The load-bearing invariant: attaching telemetry must not change the
+simulation. Series sampling piggybacks on the event stream (no probe events),
+probes are read-only, and no telemetry path consumes RNG — so a run with
+telemetry on must be BYTE-IDENTICAL (latency samples, counters, event count,
+RNG stream) to the same run with ``telemetry=None``, on every run loop.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.engine import EventLoop
+from repro.core.gc_coord import StaggeredGc
+from repro.core.gc_sim import ArraySim, SSDParams, Workload
+from repro.core.qos import QosPolicy, TenantSpec
+from repro.core.raid import Raid5Layout
+from repro.core.safs_sim import SAFSSim, SAFSWorkload
+from repro.core.sharded import ShardedArraySim, ShardedSAFSSim
+from repro.core.telemetry import (ARRAY_COMPONENTS, SAFS_COMPONENTS,
+                                  Telemetry, TelemetrySpec, merge_telemetry)
+
+P = SSDParams(capacity_pages=2048)
+FULL = TelemetrySpec(series_dt=2e-4, spans=True)
+
+
+def _array(telemetry=None, **kw):
+    base = dict(n_ssds=3, ssd=P, occupancy=0.6,
+                workload=Workload(w_total=96, qd_per_ssd=16, n_streams=3),
+                seed=42, telemetry=telemetry)
+    base.update(kw)
+    return ArraySim(**base)
+
+
+def _assert_same_results(a, b):
+    """Byte-identity of everything the simulation computes."""
+    assert a.iops == b.iops
+    assert a.mean_latency == b.mean_latency
+    assert a.p50_latency == b.p50_latency
+    assert a.p99_latency == b.p99_latency
+    assert a.events == b.events          # no extra scheduled events
+    np.testing.assert_array_equal(a.util, b.util)
+    np.testing.assert_array_equal(a.per_ssd_iops, b.per_ssd_iops)
+    np.testing.assert_array_equal(a.gc_pause_frac, b.gc_pause_frac)
+
+
+# ---------------------------------------------------------------------------
+# On/off byte-identity on every run loop
+# ---------------------------------------------------------------------------
+
+def test_fast_loop_identity():
+    off, on = _array(), _array(FULL)
+    ra, rb = off.run(4000), on.run(4000)
+    _assert_same_results(ra, rb)
+    # identical raw latency samples and identical RNG consumption
+    np.testing.assert_array_equal(off.last_latency, on.last_latency)
+    assert off.rng.bit_generator.state == on.rng.bit_generator.state
+    assert ra.telemetry is None
+    assert rb.telemetry is not None
+
+
+def test_layout_loop_identity():
+    kw = dict(n_ssds=6, workload=Workload(w_total=192, qd_per_ssd=16,
+                                          n_streams=6),
+              layout=Raid5Layout(group=6), seed=7)
+    off, on = _array(**kw), _array(FULL, **kw)
+    ra, rb = off.run(3000), on.run(3000)
+    _assert_same_results(ra, rb)
+    np.testing.assert_array_equal(off.last_latency, on.last_latency)
+    assert off.rng.bit_generator.state == on.rng.bit_generator.state
+
+
+def test_qos_loop_identity():
+    qos = QosPolicy(tenants=(TenantSpec(0, weight=2.0),
+                             TenantSpec(1, weight=1.0)))
+    kw = dict(n_ssds=4, workload=Workload(w_total=128, qd_per_ssd=16,
+                                          n_streams=4),
+              qos=qos, seed=3)
+    off, on = _array(**kw), _array(FULL, **kw)
+    ra, rb = off.run(3000), on.run(3000)
+    _assert_same_results(ra, rb)
+    np.testing.assert_array_equal(off.last_latency, on.last_latency)
+    # per-tenant budget groups exist for exactly the configured tenants
+    assert sorted(rb.telemetry.budget["by_tenant"]) == [0, 1]
+
+
+def test_safs_loop_identity():
+    def mk(tel):
+        return SAFSSim(n_ssds=4, ssd=P, occupancy=0.85,
+                       workload=SAFSWorkload(read_frac=0.3, concurrency=128),
+                       cache_frac=0.08, seed=11, telemetry=tel)
+    off, on = mk(None), mk(FULL)
+    ra, rb = off.run(3000), on.run(3000)
+    assert ra.app_iops == rb.app_iops
+    assert ra.mean_latency == rb.mean_latency
+    assert ra.p99_latency == rb.p99_latency
+    assert ra.events == rb.events
+    assert ra.hit_rate == rb.hit_rate
+    assert ra.ssd_page_writes == rb.ssd_page_writes
+    np.testing.assert_array_equal(ra.util, rb.util)
+    np.testing.assert_array_equal(off.last_latency, on.last_latency)
+    assert off.rng.bit_generator.state == on.rng.bit_generator.state
+    assert rb.telemetry is not None
+    assert rb.telemetry.components == SAFS_COMPONENTS
+
+
+def test_staggered_gc_identity_and_episodes():
+    kw = dict(gc=StaggeredGc(max_concurrent=1), seed=4)
+    off, on = _array(**kw), _array(FULL, **kw)
+    ra, rb = off.run(4000), on.run(4000)
+    _assert_same_results(ra, rb)
+    t = rb.telemetry
+    # the coordinator grants one lease at a time, so episode intervals on
+    # distinct devices never overlap
+    eps = sorted((t0, t1, d) for d, t0, t1, _ in t.gc_episodes)
+    for (a0, a1, _), (b0, _, _) in zip(eps, eps[1:]):
+        assert b0 >= a1 - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Series / tick grid
+# ---------------------------------------------------------------------------
+
+def test_tick_grid_and_series_shape():
+    res = _array(FULL).run(4000)
+    t = res.telemetry
+    dt = FULL.series_dt
+    np.testing.assert_allclose(t.ticks,
+                               np.arange(t.ticks.size) * dt, atol=0.0)
+    assert t.ticks[-1] <= t.t_end
+    for name in ("busy_time", "backlog", "free_blocks", "gc_active"):
+        assert t.series[name].shape == (t.ticks.size, 3)
+    # busy_time is cumulative within the window: non-decreasing except for
+    # the single warmup-boundary reset
+    busy = t.series["busy_time"]
+    drops = (np.diff(busy, axis=0) < 0).any(axis=1)
+    assert drops.sum() <= 1
+    u = t.util_series(P.channels)
+    assert u.shape == busy.shape
+    assert float(u.min()) >= 0.0
+
+
+def test_attach_aligns_grid_to_resumed_loop():
+    loop = EventLoop()
+    loop.schedule(1.05e-3, lambda: None)
+    loop.run()
+    tel = Telemetry(TelemetrySpec(series_dt=1e-3), 1).attach(loop)
+    # first boundary is the smallest k*dt >= now, anchored at sim time 0
+    assert tel.next_tick == pytest.approx(2e-3)
+    assert tel.next_tick >= loop.now
+
+
+def test_on_tick_samples_every_boundary():
+    tel = Telemetry(TelemetrySpec(series_dt=1.0), 1)
+    tel.add_series("x", lambda: [1.0])
+    nxt = tel.on_tick(3.5)        # boundaries 0,1,2,3
+    assert nxt == 4.0
+    assert tel.next_tick == 4.0
+    res = tel.finalize(3.5)
+    np.testing.assert_array_equal(res.ticks, [0.0, 1.0, 2.0, 3.0])
+    assert res.series["x"].shape == (4, 1)
+
+
+def test_probe_toggles():
+    spec = TelemetrySpec(series_dt=2e-4, probe_queues=False,
+                         probe_free_blocks=False)
+    t = _array(spec).run(2000).telemetry
+    assert set(t.series) == {"busy_time", "gc_active"}
+    assert t.budget is None          # spans off => no budget
+
+
+def test_util_min_matches_legacy_exactly():
+    """Satellite: ``util`` (and thus ``util_min``) is derived from the
+    telemetry busy-time probe when present — bit-identical to the legacy
+    per-SSD arithmetic."""
+    for kw in (dict(), dict(layout=Raid5Layout(group=6), n_ssds=6,
+                            workload=Workload(w_total=192, qd_per_ssd=16,
+                                              n_streams=6))):
+        ra = _array(**kw).run(2500)
+        rb = _array(TelemetrySpec(series_dt=5e-4), **kw).run(2500)
+        np.testing.assert_array_equal(ra.util, rb.util)
+        assert ra.util_min == rb.util_min
+
+
+# ---------------------------------------------------------------------------
+# Spans / latency budget
+# ---------------------------------------------------------------------------
+
+def test_budget_sums_to_mean_latency():
+    for kw in (dict(), dict(layout=Raid5Layout(group=6), n_ssds=6,
+                            workload=Workload(w_total=192, qd_per_ssd=16,
+                                              n_streams=6))):
+        res = _array(FULL, **kw).run(3000)
+        bud = res.telemetry.budget
+        assert bud["n"] == 3000                     # measured ops only
+        assert bud["mean_latency"] == pytest.approx(res.mean_latency,
+                                                    rel=1e-12)
+        assert sum(bud["mean"].values()) == pytest.approx(
+            bud["mean_latency"], rel=1e-9)
+        for g in list(bud["by_device"].values()) + \
+                list(bud["by_tenant"].values()):
+            assert sum(g["mean"].values()) == pytest.approx(
+                g["mean_latency"], rel=1e-9)
+        assert all(v >= 0.0 for v in bud["sums"].values())
+
+
+def test_span_records_and_limit():
+    res = _array(FULL).run(3000)
+    t = res.telemetry
+    assert t.components == ARRAY_COMPONENTS
+    assert t.spans_dropped == 0
+    assert len(t.spans) == 4500          # warmup 1500 + measured 3000
+    for t_arr, seq, tenant, dev, nd, kind, dur, comps, m in t.spans[:100]:
+        assert dur >= 0.0
+        assert len(comps) == len(ARRAY_COMPONENTS)
+        assert sum(comps) == pytest.approx(dur, abs=1e-15)
+    # truncation: span records stop at the limit, the budget keeps counting
+    lim = TelemetrySpec(series_dt=2e-4, spans=True, span_limit=100)
+    t2 = _array(lim).run(3000).telemetry
+    assert len(t2.spans) == 100
+    assert t2.spans_dropped == 4400
+    assert t2.budget["n"] == 3000
+
+
+def test_safs_span_components_partition():
+    res = SAFSSim(n_ssds=4, ssd=P, occupancy=0.85,
+                  workload=SAFSWorkload(read_frac=0.3, concurrency=128),
+                  cache_frac=0.08, seed=11, telemetry=FULL).run(3000)
+    t = res.telemetry
+    bud = t.budget
+    assert bud["mean_latency"] == pytest.approx(res.mean_latency, rel=1e-12)
+    assert sum(bud["mean"].values()) == pytest.approx(bud["mean_latency"],
+                                                      rel=1e-9)
+    # hit-path spans are pure-CPU: dev == -1 and only the cpu component set
+    hits = [r for r in t.spans if r[3] == -1]
+    assert hits
+    for r in hits[:50]:
+        comps = r[7]
+        assert comps[1] == comps[2] == comps[3] == comps[4] == 0.0
+
+
+def test_spans_reject_faults():
+    from repro.core.faults import FailSlow, FaultPolicy
+    fp = FaultPolicy(events=(FailSlow(device=0, slow_factor=4.0),))
+    with pytest.raises(ValueError, match="spans"):
+        _array(FULL, faults=fp)
+    with pytest.raises(TypeError, match="TelemetrySpec"):
+        _array(telemetry=object())
+    # series-only probes DO compose with faults
+    r = _array(TelemetrySpec(series_dt=5e-4), faults=fp).run(1000)
+    assert r.telemetry is not None and r.telemetry.budget is None
+
+
+# ---------------------------------------------------------------------------
+# Sharded merge: serial == parallel bit-identical
+# ---------------------------------------------------------------------------
+
+def _assert_same_telemetry(a, b):
+    assert a is not None and b is not None
+    np.testing.assert_array_equal(a.ticks, b.ticks)
+    assert set(a.series) == set(b.series)
+    for k in a.series:
+        np.testing.assert_array_equal(a.series[k], b.series[k])
+        np.testing.assert_array_equal(a.final[k], b.final[k])
+    assert a.spans == b.spans
+    assert a.gc_episodes == b.gc_episodes
+    assert a.budget == b.budget
+    assert a.n_devices == b.n_devices
+
+
+def test_sharded_array_serial_equals_parallel_with_telemetry():
+    kw = dict(n_ssds=6, ssd=P, occupancy=0.6,
+              workload=Workload(w_total=96, qd_per_ssd=16, n_streams=6),
+              seed=5, n_shards=2, telemetry=FULL)
+    rs = ShardedArraySim(parallel=False, **kw).run(3000)
+    rp = ShardedArraySim(parallel=True, **kw).run(3000)
+    assert rs.iops == rp.iops and rs.p99_latency == rp.p99_latency
+    _assert_same_telemetry(rs.telemetry, rp.telemetry)
+    t = rs.telemetry
+    assert t.merged
+    assert t.n_devices == 6
+    assert t.series["busy_time"].shape[1] == 6
+    # device ids in merged spans and budget are re-based to global ids
+    assert all(-1 <= r[3] < 6 for r in t.spans)
+    assert all(0 <= d < 6 for d in t.budget["by_device"])
+    assert t.budget["merged"] and t.budget["tail_p99"] is None
+
+
+def test_sharded_safs_serial_equals_parallel_with_telemetry():
+    kw = dict(n_ssds=4, ssd=P, occupancy=0.8,
+              workload=SAFSWorkload(read_frac=0.3, concurrency=96),
+              cache_frac=0.08, seed=9, n_shards=2, telemetry=FULL)
+    rs = ShardedSAFSSim(parallel=False, **kw).run(2000)
+    rp = ShardedSAFSSim(parallel=True, **kw).run(2000)
+    assert rs.app_iops == rp.app_iops
+    assert rs.p99_latency == rp.p99_latency
+    _assert_same_telemetry(rs.telemetry, rp.telemetry)
+    # per-sim cache scalars become one column per shard
+    assert rs.telemetry.series["cache_hits"].shape[1] == 2
+    assert rs.telemetry.series["busy_time"].shape[1] == 4
+
+
+def test_merge_telemetry_none_propagates():
+    assert merge_telemetry([]) is None
+    assert merge_telemetry([None]) is None
+    r = _array(FULL).run(500)
+    assert merge_telemetry([r.telemetry, None]) is None
+
+
+# ---------------------------------------------------------------------------
+# Trace export
+# ---------------------------------------------------------------------------
+
+def test_export_trace_chrome_json(tmp_path):
+    res = _array(FULL, gc=StaggeredGc(max_concurrent=1)).run(2000)
+    path = tmp_path / "trace.json"
+    n = res.telemetry.export_trace(path)
+    payload = json.loads(path.read_text())
+    ev = payload["traceEvents"]
+    assert n == len(ev)
+    phases = {e["ph"] for e in ev}
+    assert {"M", "X", "C"} <= phases
+    ops = [e for e in ev if e["ph"] == "X" and e.get("cat") == "op"]
+    gcs = [e for e in ev if e["ph"] == "X" and e.get("cat") == "gc"]
+    assert len(ops) == len(res.telemetry.spans)
+    assert len(gcs) == len(res.telemetry.gc_episodes)
+    for e in ops[:20]:
+        assert e["dur"] >= 0.0
+        assert set(ARRAY_COMPONENTS) <= set(e["args"])
+    # spans are sorted by (ts, seq) for stable diffs
+    ts = [(e["ts"]) for e in ops]
+    assert ts == sorted(ts)
