@@ -1,0 +1,166 @@
+"""Diff two benchmark artifacts and gate on regressions.
+
+Compares two ``BENCH_*.json`` artifacts (any of the self-checking demos)
+or two ``run.py --json`` summaries, flattening each to dotted-path scalar
+metrics, and prints a regression table of per-metric relative deltas.
+
+Gated regressions (nonzero exit):
+
+* a ``checks.*`` boolean (or ``all_checks_pass``) that was true in the
+  baseline and is false in the candidate — a self-check that used to pass
+  now fails;
+* a ``sections[].status`` (run.py summaries; keyed by section name) that
+  goes ``ok`` -> ``fail``;
+* any ``--gate PATH[:PCT]`` numeric metric whose relative drop vs the
+  baseline exceeds PCT percent (default 10; higher-is-better convention —
+  prefix the path with ``-`` for lower-is-better metrics like latency).
+
+New/removed paths and non-gated numeric drift are reported but never fail
+the diff: artifacts legitimately grow fields across PRs, and raw rates
+move with the host. Only the explicit gates above are load-bearing.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.compare BASELINE CANDIDATE \
+        [--gate overhead.events_per_s_off:15] [--min-delta 1.0]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+__all__ = ["flatten", "diff", "main"]
+
+
+def flatten(obj, prefix: str = "") -> dict:
+    """Flatten nested JSON to ``{dotted.path: scalar}``. Lists of objects
+    that carry a ``"key"`` or ``"seed"`` field index by it (stable across
+    reorderings); other lists index by position."""
+    out: dict = {}
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            out.update(flatten(v, f"{prefix}.{k}" if prefix else str(k)))
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            tag = str(i)
+            if isinstance(v, dict):
+                for field in ("key", "seed"):
+                    if field in v and not isinstance(v[field], (dict, list)):
+                        tag = str(v[field])
+                        break
+            out.update(flatten(v, f"{prefix}.{tag}" if prefix else tag))
+    elif isinstance(obj, (bool, int, float, str)) or obj is None:
+        out[prefix] = obj
+    return out
+
+
+def _is_check(path: str, value) -> bool:
+    return isinstance(value, bool) and (
+        ".checks." in path or path.endswith("all_checks_pass")
+        or path.startswith("checks."))
+
+
+def _is_status(path: str, value) -> bool:
+    return path.endswith(".status") and value in ("ok", "fail")
+
+
+def diff(base: dict, cand: dict, gates: list, min_delta: float):
+    """Compare flattened metric maps; returns (rows, regressions) where
+    rows are display tuples and regressions are failure strings."""
+    rows, regressions = [], []
+    gate_map = {}
+    for g in gates:
+        path, _, pct = g.partition(":")
+        lower_better = path.startswith("-")
+        gate_map[path.lstrip("-")] = (float(pct) if pct else 10.0,
+                                      lower_better)
+    for path in sorted(set(base) | set(cand)):
+        b, c = base.get(path), cand.get(path)
+        if path not in cand:
+            rows.append((path, b, "(removed)", ""))
+            continue
+        if path not in base:
+            rows.append((path, "(new)", c, ""))
+            continue
+        if _is_check(path, b) or _is_check(path, c):
+            if b is True and c is not True:
+                rows.append((path, b, c, "REGRESSION"))
+                regressions.append(f"check {path}: true -> {c}")
+            elif b != c:
+                rows.append((path, b, c, "changed"))
+            continue
+        if _is_status(path, b) or _is_status(path, c):
+            if b == "ok" and c != "ok":
+                rows.append((path, b, c, "REGRESSION"))
+                regressions.append(f"section {path}: ok -> {c}")
+            elif b != c:
+                rows.append((path, b, c, "changed"))
+            continue
+        if isinstance(b, (int, float)) and isinstance(c, (int, float)) \
+                and not isinstance(b, bool) and not isinstance(c, bool):
+            delta = (c - b) / abs(b) if b else (0.0 if c == b else
+                                                float("inf"))
+            gate = gate_map.get(path)
+            if gate is not None:
+                pct, lower_better = gate
+                drop = delta if lower_better else -delta
+                if drop * 100.0 > pct:
+                    rows.append((path, b, c, f"{100 * delta:+.1f}% "
+                                 f"REGRESSION (gate {pct:g}%)"))
+                    regressions.append(
+                        f"metric {path}: {b:g} -> {c:g} "
+                        f"({100 * delta:+.1f}%, gate {pct:g}%)")
+                    continue
+            if abs(delta) * 100.0 >= min_delta:
+                rows.append((path, b, c, f"{100 * delta:+.1f}%"))
+            continue
+        if b != c:
+            rows.append((path, b, c, "changed"))
+    return rows, regressions
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="baseline artifact (JSON)")
+    ap.add_argument("candidate", help="candidate artifact (JSON)")
+    ap.add_argument("--gate", action="append", default=[],
+                    metavar="PATH[:PCT]",
+                    help="numeric metric to gate: fail if it drops more "
+                         "than PCT%% vs baseline (default 10; prefix the "
+                         "path with '-' for lower-is-better metrics)")
+    ap.add_argument("--min-delta", type=float, default=1.0,
+                    help="hide numeric drift below this %% (default 1)")
+    args = ap.parse_args(argv)
+
+    base = flatten(json.loads(Path(args.baseline).read_text()))
+    cand = flatten(json.loads(Path(args.candidate).read_text()))
+    rows, regressions = diff(base, cand, args.gate, args.min_delta)
+
+    print(f"comparing {args.baseline} (baseline) -> {args.candidate}")
+    print(f"{len(base)} baseline metrics, {len(cand)} candidate metrics, "
+          f"{len(rows)} differences shown (|delta| >= "
+          f"{args.min_delta:g}%)\n")
+    if rows:
+        w = max(len(r[0]) for r in rows)
+        for path, b, c, note in rows:
+            print(f"  {path:<{w}}  {_fmt(b):>14} -> {_fmt(c):<14} {note}")
+    else:
+        print("  no differences")
+    if regressions:
+        print(f"\n{len(regressions)} gated regression(s):")
+        for r in regressions:
+            print(f"  FAIL {r}")
+        return 1
+    print("\nno gated regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -50,6 +50,9 @@ _SECTIONS: list[tuple[str, str, str, bool]] = [
     ("telemetry", "telemetry_demo",
      "Telemetry -- GC rotation timeline, latency budget, overhead gate",
      True),
+    ("monitor", "monitor_demo",
+     "Monitor -- online alert rules, root causes, alert-vs-quarantine race",
+     True),
     ("paper_tables", "paper_tables",
      "Paper -- Table 1 / Table 2 / Figure 2 (raw array under GC)", False),
     ("paper_figs", "paper_figs",

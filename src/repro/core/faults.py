@@ -53,6 +53,7 @@ from dataclasses import dataclass, field, replace
 
 import numpy as np
 
+from .metrics import Ewma, peer_median
 from .workloads import _mix64
 
 _MASK = (1 << 64) - 1
@@ -332,8 +333,9 @@ class FaultInjector:
         self.hedge_after = policy.hedge_after
         # -- detector / quarantine ------------------------------------------
         self.detect = policy.detect
-        self.ewma = [0.0] * n
-        self.ew_n = [0] * n
+        # per-device service-time EWMA (core/metrics.py: first-sample init,
+        # then value += alpha*(dt - value) — the pre-refactor arithmetic)
+        self.ew = [Ewma(policy.detect_alpha) for _ in range(n)]
         self.quarantined = [False] * n
         self._q_since = [0.0] * n
         self._notes = 0
@@ -436,12 +438,7 @@ class FaultInjector:
 
     # -- detector ------------------------------------------------------------
     def note_service(self, i: int, dt: float, now: float) -> None:
-        if self.ew_n[i] == 0:
-            self.ewma[i] = dt
-        else:
-            a = self.policy.detect_alpha
-            self.ewma[i] += a * (dt - self.ewma[i])
-        self.ew_n[i] += 1
+        self.ew[i].update(dt)
         notes = self._notes + 1
         self._notes = notes
         if notes % self.policy.detect_every == 0:
@@ -450,19 +447,19 @@ class FaultInjector:
     def _sweep(self, now: float) -> None:
         pol = self.policy
         min_n = pol.detect_min_samples
-        ready = [self.ewma[i] for i in range(self.n)
-                 if self.ew_n[i] >= min_n and not self.crashed[i]]
+        ready = [self.ew[i].value for i in range(self.n)
+                 if self.ew[i].n >= min_n and not self.crashed[i]]
         # peer-relative: need a quorum of sampled peers for a stable median
         if len(ready) < max(2, self.n // 2):
             return
-        med = float(np.median(ready))
+        med = peer_median(ready)
         if med <= 0.0:
             return
         st = self.stats
         for i in range(self.n):
-            if self.ew_n[i] < min_n or self.crashed[i]:
+            if self.ew[i].n < min_n or self.crashed[i]:
                 continue
-            ew = self.ewma[i]
+            ew = self.ew[i].value
             if not self.quarantined[i]:
                 if ew > pol.detect_ratio * med:
                     self.quarantined[i] = True

@@ -184,7 +184,7 @@ class GcCoordinator:
                  "starts", "forced", "idle_starts", "gc_time", "gc_time_idle",
                  "_count", "_last_t", "_t_overlap", "on_release",
                  "_max_conc", "_idle", "_floor", "_early", "steer",
-                 "steer_qd")
+                 "steer_qd", "quarantined", "lease_skipped", "_defers")
 
     def __init__(self, policy: GcPolicy, n: int, loop, unit: int = 1) -> None:
         self.policy = policy
@@ -228,6 +228,13 @@ class GcCoordinator:
             if isinstance(policy, StaggeredGc) else 0
         self.steer = policy.steer
         self.steer_qd = policy.steer_qd
+        # fault-aware coordination: the simulators point this at the
+        # injector's live quarantine list when the detector is on. Only
+        # deferring policies (StaggeredGc) consult it, so ReactiveGc stays
+        # behavior-identical to gc=None under faults.
+        self.quarantined: "list[bool] | None" = None
+        self.lease_skipped = 0
+        self._defers = self._max_conc <= n
 
     def attach(self, dev, dev_id: int) -> None:
         self.devices[dev_id] = dev
@@ -242,6 +249,7 @@ class GcCoordinator:
         self.idle_starts = 0
         self.gc_time = 0.0
         self.gc_time_idle = 0.0
+        self.lease_skipped = 0
 
     def finalize(self, now: float) -> None:
         self._advance(now)
@@ -266,6 +274,11 @@ class GcCoordinator:
                     and not ftl.gc_satisfied():
                 d = self.dom[dev.dev_id]
                 if self.active[d] < self._max_conc:
+                    if self._skip_quarantined(dev.dev_id):
+                        # proactive GC on a quarantined member would stack a
+                        # pause on a device the host already capped; it is
+                        # above the low watermark, so just don't volunteer it
+                        return False
                     # proactive rotation: take the free lease now, while the
                     # episode is still shallow (short pause), instead of
                     # deferring everyone to the watermark at once
@@ -275,6 +288,11 @@ class GcCoordinator:
         i = dev.dev_id
         d = self.dom[i]
         if self.active[d] < self._max_conc:
+            if len(dev.server.ftl.free_blocks) > self._floor \
+                    and self._skip_quarantined(i):
+                # defer the lease while the member is quarantined (the hard
+                # floor below still forces forward progress)
+                return False
             self._grant(dev, i, d)
             return True
         if len(ftl.free_blocks) <= self._floor:
@@ -287,6 +305,16 @@ class GcCoordinator:
             self.wait_since[i] = self.loop.now
             self.waiting[d].append(i)
             self.gc_busy[i] = True   # "about to enter" for steering
+        return False
+
+    def _skip_quarantined(self, i: int) -> bool:
+        """True when a free lease should be withheld from member ``i``
+        because the fail-slow detector has it quarantined (deferring
+        policies only); counts the skip."""
+        q = self.quarantined
+        if q is not None and self._defers and q[i]:
+            self.lease_skipped += 1
+            return True
         return False
 
     def _grant(self, dev, i: int, d: int) -> None:
@@ -341,6 +369,15 @@ class GcCoordinator:
                 continue             # force-started meanwhile
             w = self.devices[j]
             if w.server.ftl.need_gc():
+                if len(w.server.ftl.free_blocks) > self._floor \
+                        and self._skip_quarantined(j):
+                    # quarantined waiter: release it to keep serving under
+                    # its admission cap; its next gate() re-evaluates
+                    self.is_waiting[j] = False
+                    self.gc_busy[j] = False
+                    if self.on_release is not None:
+                        self.on_release(j)
+                    continue
                 self._grant(w, j, d)
                 if w.in_service != 0:
                     # draining: stop further admissions via its next gate
@@ -365,4 +402,5 @@ class GcCoordinator:
             "gc_forced": self.forced,
             "idle_gc_frac": (self.gc_time_idle / self.gc_time
                              if self.gc_time > 0 else 0.0),
+            "gc_lease_skipped": self.lease_skipped,
         }

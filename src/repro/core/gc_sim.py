@@ -498,11 +498,15 @@ class ArrayResults:
     idle_gc_frac: float = 0.0        # fraction of GC time from idle steps
     steered_reads: int = 0           # RAID-5 reads redirected around a
                                      # GC-busy member (steer=True)
+    gc_lease_skipped: int = 0        # leases withheld from quarantined
+                                     # members (faults + gc coordination)
     # -- fault injection results (core/faults.py; None when faults is off) ---
     faults: "dict | None" = None     # whole-run fault/defense counters
                                      # (see faults._new_fault_stats)
     # -- telemetry (core/telemetry.py; None when telemetry is off) -----------
     telemetry: "TelemetryResult | None" = None   # series/spans/budget snapshot
+    # -- health monitoring (core/monitor.py; None when monitor is off) -------
+    monitor: "MonitorResult | None" = None       # structured alert log
 
 
 class SSDServer:
@@ -633,7 +637,8 @@ class ArraySim:
                  qos: "QosPolicy | None" = None,
                  gc: "GcPolicy | None" = None,
                  faults: "FaultPolicy | None" = None,
-                 telemetry: "TelemetrySpec | None" = None):
+                 telemetry: "TelemetrySpec | None" = None,
+                 monitor: "MonitorSpec | None" = None):
         from .gc_coord import GcPolicy
         from .raid import JBODLayout, Layout   # local: raid imports workloads
         self.n = n_ssds
@@ -671,12 +676,13 @@ class ArraySim:
                 raise TypeError(f"telemetry must be a core.telemetry."
                                 f"TelemetrySpec, got "
                                 f"{type(telemetry).__name__}")
-            if telemetry.spans and faults is not None:
-                raise ValueError(
-                    "telemetry spans cannot be combined with faults=: retry "
-                    "and hedge legs re-issue work outside the span "
-                    "lifecycle; use a spans=False spec (the series probes "
-                    "compose with faults)")
+        self.monitor = monitor
+        if monitor is not None:
+            from .monitor import MonitorSpec
+            if not isinstance(monitor, MonitorSpec):
+                raise TypeError(f"monitor must be a core.monitor."
+                                f"MonitorSpec, got "
+                                f"{type(monitor).__name__}")
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         key = (n_ssds, ssd, occupancy, seed) if prefill_cache else None
@@ -704,6 +710,7 @@ class ArraySim:
         self.last_tenant_latency: dict[int, np.ndarray] | None = None
         self.last_gc_wait: np.ndarray | None = None   # stagger-wait samples
         self.last_telemetry = None                    # TelemetryResult
+        self.last_monitor = None                      # MonitorResult
 
     def _make_injector(self):
         """Fresh per-run FaultInjector, or None when faults are off. Each
@@ -723,6 +730,15 @@ class ArraySim:
         from .telemetry import Telemetry
         return Telemetry(self.telemetry, self.n).attach(loop)
 
+    def _make_monitor(self, loop, tel):
+        """Fresh per-run HealthMonitor, or None when monitoring is off.
+        Chains off ``tel``'s tick grid when telemetry is on; otherwise it
+        installs its own identical loop hook."""
+        if self.monitor is None:
+            return None
+        from .monitor import HealthMonitor
+        return HealthMonitor(self.monitor, self.n).attach(loop, tel)
+
     # -- main loop -------------------------------------------------------------
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
         if self.qos is not None:
@@ -735,6 +751,7 @@ class ArraySim:
         total_ops = warmup_ops + measure_ops
         loop = EventLoop()
         tel = self._make_telemetry(loop)
+        mon = self._make_monitor(loop, tel)
         tel_spans = tel is not None and tel.spans_on
         qd = wl.qd_per_ssd
         coord = self.gc.make_coordinator(n, loop, self.layout.shard_unit(n)) \
@@ -748,6 +765,8 @@ class ArraySim:
         # FailSlow, MediaError + retries, and the quarantine detector;
         # Crash/hedging need parity and are rejected/ignored for JBOD.
         inj = self._make_injector()
+        if coord is not None and inj is not None and inj.detect:
+            coord.quarantined = inj.quarantined
         media_on = inj is not None and inj.any_media
         qcap: "list[int] | None" = None
         if inj is not None and inj.detect:
@@ -790,6 +809,8 @@ class ArraySim:
                            for s in ssds]
             if coord is not None:
                 coord.begin_measure(loop.now)
+            if mon is not None:
+                mon.begin_measure(loop.now)
 
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
@@ -835,11 +856,67 @@ class ArraySim:
             pw = s.pending_writes
             w = waiters[i]
 
+            if tel_spans and media_on:
+                # combined variant: the span AND the media-retry attempt
+                # counter ride at the tuple tail (indices 6/7); mutations
+                # match the media_on branch in identical order, with the
+                # span's retry note / close layered on passively
+                t_read, t_prog = self.p.t_read, self.p.t_prog
+                t_coal, t_trim = self.p.t_coalesce, self.p.t_trim
+
+                def on_done(req):
+                    stream, lba, is_read, coal, t_issue, kind, sp, att = req
+                    if is_read:
+                        if inj.read_fails(i):
+                            retry, delay = inj.retry_decision(
+                                att, t_issue, loop.now)
+                            if retry:
+                                tel.note_retry(sp, loop.now)
+                                loop.call_at(
+                                    loop.now + delay, reissue,
+                                    (i, (stream, lba, True, coal, t_issue,
+                                         kind, sp, att + 1)))
+                                if w:
+                                    unpark(i)
+                                return
+                            # exhausted/timed out: surface as a failed read —
+                            # the op completes (token returns) without data
+                        s.served_reads += 1
+                        outstanding[stream] -= 1
+                    else:
+                        outstanding[stream] -= 1
+                        if kind == OP_TRIM:
+                            ftl.trim(lba)
+                            s.served_trims += 1
+                        else:
+                            s.served_writes += 1
+                            c = pw[lba] - 1
+                            if c:
+                                pw[lba] = c
+                            else:
+                                del pw[lba]
+                            if not coal:      # inlined ftl.user_write
+                                program(lba)
+                                ftl.writes += 1
+                    m = note_completion(t_issue)
+                    if m:
+                        measured[i] += 1
+                        if is_read:
+                            mr[0] += 1
+                        else:
+                            mr[1] += 1
+                    svc = t_coal if coal else (
+                        t_read if is_read else
+                        (t_trim if kind == OP_TRIM else t_prog))
+                    tel.close_fast_span(sp, loop.now, svc, m)
+                    if w:
+                        unpark(i)
+                    stream_fill(stream)
+                return on_done
+
             if tel_spans:
                 # span variant: identical mutations in identical order; the
                 # span record rides as the request tuple's 7th element
-                # (spans+faults is rejected at construction, so this never
-                # collides with the media-retry attempt counter below)
                 t_read, t_prog = self.p.t_read, self.p.t_prog
                 t_coal, t_trim = self.p.t_coalesce, self.p.t_trim
 
@@ -961,6 +1038,9 @@ class ArraySim:
                 coord.attach(d, i)
         if tel is not None:
             tel.register_array_probes(ssds, devices, host_queues)
+        if mon is not None:
+            mon.register_array_sources(ssds, devices, host_queues, qd,
+                                       inj=inj)
 
         def enqueue(stream: int, ssd_i: int, lba: int, is_read: bool,
                     kind: int):
@@ -976,8 +1056,12 @@ class ArraySim:
                     pw[lba] = c + 1
             outstanding[stream] += 1
             if tel_spans:  # span rides at the end; indices 0-5 keep meaning
-                req = (stream, lba, is_read, coal, loop.now, kind,
-                       tel.new_span(kind, stream, ssd_i, loop.now))
+                if media_on:  # ... plus the attempt counter at index 7
+                    req = (stream, lba, is_read, coal, loop.now, kind,
+                           tel.new_span(kind, stream, ssd_i, loop.now), 0)
+                else:
+                    req = (stream, lba, is_read, coal, loop.now, kind,
+                           tel.new_span(kind, stream, ssd_i, loop.now))
             elif media_on:  # attempt counter rides at the end, same shape
                 req = (stream, lba, is_read, coal, loop.now, kind, 0)
             else:
@@ -1061,11 +1145,14 @@ class ArraySim:
         span = mw.span
         if tel is not None:
             tel.finalize(loop.now, mw.t0)
+        if mon is not None:
+            mon.finalize(loop.now)
         summ = mw.latency.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = None
         self.last_tenant_latency = None
         self.last_telemetry = tel.result() if tel is not None else None
+        self.last_monitor = mon.result() if mon is not None else None
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
@@ -1097,6 +1184,7 @@ class ArraySim:
             ftl_gc_copies=ftl_c,
             faults=inj.finalize(loop.now) if inj is not None else None,
             telemetry=self.last_telemetry,
+            monitor=self.last_monitor,
             **gkw,
         )
 
@@ -1151,6 +1239,7 @@ class ArraySim:
         total_ops = warmup_ops + measure_ops
         loop = EventLoop()
         tel = self._make_telemetry(loop)
+        mon = self._make_monitor(loop, tel)
         tel_spans = tel is not None and tel.spans_on
         qd = wl.qd_per_ssd
         coord = self.gc.make_coordinator(n, loop, self.layout.shard_unit(n)) \
@@ -1169,6 +1258,8 @@ class ArraySim:
         # (sibling reconstruction racing a slow member) and mid-run Crash
         # (the group flips degraded and the rebuild stream opens live).
         inj = self._make_injector()
+        if coord is not None and inj is not None and inj.detect:
+            coord.quarantined = inj.quarantined
         media_on = inj is not None and inj.any_media
         hedge_on = inj is not None and inj.hedge_after > 0.0 and layout.parity
         crash = inj.crash_event if inj is not None else None
@@ -1234,6 +1325,8 @@ class ArraySim:
             stall.reset()
             if coord is not None:
                 coord.begin_measure(loop.now)
+            if mon is not None:
+                mon.begin_measure(loop.now)
 
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
@@ -1361,6 +1454,9 @@ class ArraySim:
                             retry, delay = inj.retry_decision(
                                 att, plan.t_issue, loop.now)
                             if retry:
+                                sp = plan.span
+                                if sp is not None:
+                                    tel.note_retry(sp, loop.now)
                                 loop.call_at(loop.now + delay, reissue_child,
                                              (i, (plan, lba, kind, coal,
                                                   att + 1)))
@@ -1450,6 +1546,9 @@ class ArraySim:
                 coord.attach(d, i)
         if tel is not None:
             tel.register_array_probes(ssds, devices, host_queues)
+        if mon is not None:
+            mon.register_array_sources(ssds, devices, host_queues, qd,
+                                       inj=inj)
 
         def try_drain(st: int) -> bool:
             """Place the stream's pending children in order; parks the stream
@@ -1486,6 +1585,9 @@ class ArraySim:
             if hp is None:      # group went degraded meanwhile: the planner
                 return          # would reconstruct from a missing member
             inj.note_hedge()
+            sp = plan.span
+            if sp is not None:
+                tel.note_hedge_issue(sp, loop.now)
             hp.hedge = h
             hp.t_issue = plan.t_issue
             submit_phase(hp)    # latency rescue: bypasses the qd bound
@@ -1575,12 +1677,15 @@ class ArraySim:
         span = mw.span
         if tel is not None:
             tel.finalize(loop.now, mw.t0)
+        if mon is not None:
+            mon.finalize(loop.now)
         summ = mw.latency.summary()
         stall_summ = stall.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = stall.values()
         self.last_tenant_latency = None
         self.last_telemetry = tel.result() if tel is not None else None
+        self.last_monitor = mon.result() if mon is not None else None
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
@@ -1627,6 +1732,7 @@ class ArraySim:
             ftl_gc_copies=ftl_c,
             faults=inj.finalize(loop.now) if inj is not None else None,
             telemetry=self.last_telemetry,
+            monitor=self.last_monitor,
             **gkw,
         )
 
@@ -1663,6 +1769,7 @@ class ArraySim:
         total_ops = warmup_ops + measure_ops
         loop = EventLoop()
         tel = self._make_telemetry(loop)
+        mon = self._make_monitor(loop, tel)
         tel_spans = tel is not None and tel.spans_on
         qd = wl.qd_per_ssd
         W = max(1, wl.w_total)
@@ -1678,6 +1785,8 @@ class ArraySim:
         # note in the docstring); only the rebuild stream index (n_t) and the
         # window bookkeeping (rebuild_win) differ
         inj = self._make_injector()
+        if coord is not None and inj is not None and inj.detect:
+            coord.quarantined = inj.quarantined
         media_on = inj is not None and inj.any_media
         hedge_on = inj is not None and inj.hedge_after > 0.0 and layout.parity
         crash = inj.crash_event if inj is not None else None
@@ -1752,6 +1861,8 @@ class ArraySim:
                 thr_snap[t] = sched.throttle_time(t, now)
             if coord is not None:
                 coord.begin_measure(loop.now)
+            if mon is not None:
+                mon.begin_measure(loop.now)
 
         mw = MeasurementWindow(loop, warmup_ops, begin_measure,
                                target=total_ops)
@@ -1846,6 +1957,8 @@ class ArraySim:
                     # (warmup included) so throttling reaches steady state
                     # before the measurement window opens
                     sched.note_completion(ids[st], now - plan.t_issue, now)
+                    if mon is not None:
+                        mon.note_completion(ids[st], now - plan.t_issue, now)
                 m = note_completion(plan.t_issue)
                 if m:
                     if plan.kind == OP_READ:
@@ -1891,6 +2004,9 @@ class ArraySim:
                             retry, delay = inj.retry_decision(
                                 att, plan.t_issue, loop.now)
                             if retry:
+                                sp = plan.span
+                                if sp is not None:
+                                    tel.note_retry(sp, loop.now)
                                 loop.call_at(loop.now + delay, reissue_child,
                                              (i, (plan, lba, kind, coal,
                                                   att + 1)))
@@ -1980,6 +2096,9 @@ class ArraySim:
                 coord.attach(d, i)
         if tel is not None:
             tel.register_array_probes(ssds, devices, host_queues)
+        if mon is not None:
+            mon.register_array_sources(ssds, devices, host_queues, qd,
+                                       inj=inj, sched=sched)
 
         def try_drain(st: int) -> bool:
             pend = pending[st]
@@ -2010,6 +2129,9 @@ class ArraySim:
             if hp is None:
                 return
             inj.note_hedge()
+            sp = plan.span
+            if sp is not None:
+                tel.note_hedge_issue(sp, loop.now)
             hp.hedge = h
             hp.t_issue = plan.t_issue
             submit_phase(hp)    # latency rescue: bypasses the qd bound
@@ -2138,12 +2260,15 @@ class ArraySim:
         span = mw.span
         if tel is not None:
             tel.finalize(loop.now, mw.t0)
+        if mon is not None:
+            mon.finalize(loop.now)
         summ = mw.latency.summary()
         stall_summ = stall.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = stall.values()
         self.last_tenant_latency = {t: trec[t].values() for t in ids}
         self.last_telemetry = tel.result() if tel is not None else None
+        self.last_monitor = mon.result() if mon is not None else None
         measured_arr = np.asarray(measured, dtype=np.int64)
         util, ftl_w, ftl_c, trims, gc_wa = _ftl_window_stats(
             ssds, ftl_snap, span, self.p.channels)
@@ -2197,6 +2322,7 @@ class ArraySim:
             share_error=share_error,
             faults=inj.finalize(loop.now) if inj is not None else None,
             telemetry=self.last_telemetry,
+            monitor=self.last_monitor,
             **gkw,
         )
 

@@ -1,0 +1,182 @@
+"""Deterministic streaming aggregators shared by the online subsystems.
+
+Before this module, every online consumer of the event stream grew its own
+private windowed-stat implementation: the SLO controller kept a deque +
+``sorted()`` p99 (qos.py), the fail-slow detector kept parallel
+``ewma``/``ew_n`` lists (faults.py), and the health monitor would have been
+a third. This module is the single home for those primitives; the two
+existing call sites are refactored onto it with **byte-identical**
+arithmetic — same operations in the same order on the same floats — so
+every golden and BENCH gate is unchanged.
+
+Contract (matches the telemetry/monitor determinism rules):
+
+- zero RNG — every aggregator is a pure fold over its inputs;
+- picklable — plain attributes only, so sharded workers can ship state
+  back through the pool (``__reduce__``-free, deque/list/float members);
+- allocation-light — hot-path ``push``/``update`` methods do O(1) work
+  (``SlidingWindow.quantile`` pays its ``sorted()`` only when asked, which
+  is once per check interval, exactly like the code it replaced).
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import numpy as np
+
+__all__ = [
+    "SlidingWindow", "Ewma", "WindowDelta", "EdgeLatch", "peer_median",
+    "fast_median",
+]
+
+
+class SlidingWindow:
+    """Fixed-size sliding window of samples with order-statistic queries.
+
+    ``quantile(0.99)`` reproduces ``SloController._p99`` exactly:
+    ``sorted(win)[min(len-1, int(len*q))]`` — the same upper-index pick on
+    the same sorted list, so the refactored controller is byte-identical.
+    """
+
+    __slots__ = ("_win",)
+
+    def __init__(self, maxlen: int):
+        self._win: deque = deque(maxlen=maxlen)
+
+    def push(self, x: float) -> None:
+        self._win.append(x)
+
+    def __len__(self) -> int:
+        return len(self._win)
+
+    def clear(self) -> None:
+        self._win.clear()
+
+    def oldest(self) -> float:
+        """The sample that falls off on the next full-window push."""
+        return self._win[0]
+
+    def quantile(self, q: float) -> float:
+        """Empirical quantile by upper-index pick (window must be non-empty)."""
+        a = sorted(self._win)
+        return a[min(len(a) - 1, int(len(a) * q))]
+
+    def count_above(self, thresh: float) -> int:
+        """How many window samples exceed ``thresh`` (SLO burn numerator)."""
+        n = 0
+        for x in self._win:
+            if x > thresh:
+                n += 1
+        return n
+
+
+class Ewma:
+    """Exponentially weighted moving average, first-sample initialised.
+
+    Reproduces ``FaultInjector.note_service`` exactly: the first sample
+    *sets* the value (no zero-bias warmup), every later sample folds in as
+    ``value += alpha * (x - value)`` — identical float ops in identical
+    order, so the refactored fail-slow detector is byte-identical.
+    """
+
+    __slots__ = ("alpha", "value", "n")
+
+    def __init__(self, alpha: float):
+        self.alpha = alpha
+        self.value = 0.0
+        self.n = 0
+
+    def update(self, x: float) -> None:
+        if self.n == 0:
+            self.value = x
+        else:
+            self.value += self.alpha * (x - self.value)
+        self.n += 1
+
+
+class WindowDelta:
+    """Windowed delta of a cumulative counter sampled on a fixed tick grid.
+
+    ``push(total)`` records the counter's current cumulative value and
+    returns the increase over the trailing ``window`` pushes (or over the
+    shorter available history while filling). Used for per-tick-window
+    rates: busy-time per window, writes per window, GC copies per window.
+    """
+
+    __slots__ = ("_hist", "_window")
+
+    def __init__(self, window: int):
+        if window < 1:
+            raise ValueError("WindowDelta window must be >= 1")
+        # window+1 samples span `window` intervals
+        self._hist: deque = deque(maxlen=window + 1)
+        self._window = window
+
+    def push(self, total: float) -> float:
+        h = self._hist
+        h.append(total)
+        return h[-1] - h[0]
+
+    def full(self) -> bool:
+        return len(self._hist) == self._hist.maxlen
+
+
+class EdgeLatch:
+    """Rising-edge detector with a consecutive-tick arming requirement.
+
+    ``push(cond)`` returns True exactly once per episode: when ``cond`` has
+    held for ``arm_ticks`` consecutive pushes and the latch is clear. The
+    latch clears when ``cond`` drops, so a sustained condition produces one
+    alert, not one per tick — the property that keeps alert streams bounded
+    and deterministic.
+    """
+
+    __slots__ = ("arm_ticks", "_run", "_latched")
+
+    def __init__(self, arm_ticks: int = 1):
+        if arm_ticks < 1:
+            raise ValueError("EdgeLatch arm_ticks must be >= 1")
+        self.arm_ticks = arm_ticks
+        self._run = 0
+        self._latched = False
+
+    def push(self, cond: bool) -> bool:
+        if not cond:
+            self._run = 0
+            self._latched = False
+            return False
+        self._run += 1
+        if self._latched or self._run < self.arm_ticks:
+            return False
+        self._latched = True
+        return True
+
+    def rearm(self) -> None:
+        """Clear the latch without resetting the arming run: an active
+        condition re-fires on the next push (used at the warmup boundary
+        so a persisting pathology alerts once the window opens)."""
+        self._latched = False
+
+    @property
+    def active(self) -> bool:
+        return self._latched
+
+
+def peer_median(values) -> float:
+    """Median across peers, as the fail-slow sweep computes it
+    (``float(np.median(...))`` — identical to the pre-refactor call)."""
+    return float(np.median(values))
+
+
+def fast_median(values) -> float:
+    """Median without the numpy dispatch overhead (same result as
+    ``np.median`` for finite floats: middle element for odd n, mean of the
+    two middles for even n). The health monitor evaluates a peer median
+    every tick over a handful of devices, where ``np.median``'s ~100 us of
+    array setup would dominate the whole rule engine."""
+    a = sorted(values)
+    n = len(a)
+    m = n // 2
+    if n % 2:
+        return float(a[m])
+    return (a[m - 1] + a[m]) / 2.0

@@ -1,0 +1,499 @@
+"""Online health monitoring: a deterministic alert engine over the live run.
+
+The paper's pathology is *silent*: unsynchronized GC degrades individual
+members while the host-visible aggregate only droops — nothing says which
+device, when, or why. PR 8's telemetry records everything passively for
+post-hoc analysis; this module is the online consumer. A per-run
+:class:`HealthMonitor` (configured by a frozen, picklable
+:class:`MonitorSpec`) watches read-only probes on the telemetry tick grid
+plus op completions, evaluates the alert rules below, and emits a
+sim-time-stamped structured alert log where every alert carries a
+root-cause annotation (active fault episode, overlapping GC activity, or
+tenant throttle action).
+
+Alert rules (all edge-latched: one alert per episode at the rising edge,
+re-armed when the condition clears):
+
+``gc_storm``
+    >= ``gc_storm_frac`` of devices in GC simultaneously for
+    ``gc_storm_ticks`` consecutive ticks — the paper's synchronized-GC
+    pathology (reactive GC hits it ~1e3 ticks/run where staggered hits 0).
+``util_skew``
+    one device's busy-time accumulation over the trailing
+    ``util_skew_window`` ticks exceeds ``util_skew_ratio`` x the peer
+    median — the online face of the fail-slow detector, but window-based,
+    so it typically fires at or before quarantine.
+``backlog_sat``
+    a device's backlog (host queue + admitted + in service) sits at
+    >= ``backlog_frac`` of its admission bound for ``backlog_ticks``
+    consecutive ticks.
+``wa_spike``
+    windowed write amplification ``(writes + gc_copies) / writes`` jumps
+    above ``wa_ratio`` x the previous window's value.
+``hit_collapse``
+    windowed SAFS cache hit rate drops below ``hit_drop`` x the previous
+    window's rate.
+``slo_burn``
+    a protected tenant's violation fraction over its last
+    ``slo_burn_window`` completions exceeds ``slo_burn_frac`` — it is
+    burning its SLO budget even if the controller's p99 check has not
+    tripped yet.
+
+Determinism contract (same as telemetry, stricter than most subsystems):
+``monitor=None`` is byte-identical everywhere, and monitoring ON is a
+passive observer — it piggybacks on the telemetry tick grid (or installs
+the identical grid itself when telemetry is off), schedules no events,
+draws no randomness, and only *reads* simulator state, so enabling it
+never perturbs results. Sharded runs keep per-shard monitors whose alert
+streams merge by ``(time, seq)`` with device ids re-based — serial and
+parallel shard execution produce bit-identical streams.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .metrics import EdgeLatch, SlidingWindow, WindowDelta, fast_median
+
+RULES = ("gc_storm", "util_skew", "backlog_sat", "wa_spike",
+         "hit_collapse", "slo_burn")
+
+
+@dataclass(frozen=True)
+class MonitorSpec:
+    """Frozen, picklable monitor configuration (ships to shard workers).
+
+    ``tick_dt`` is used only when the run has no telemetry — with
+    telemetry attached the monitor locks to its ``series_dt`` grid so both
+    consumers sample identical instants. ``include_warmup=False`` (the
+    default) suppresses alerts until the measurement window opens; latches
+    are re-armed at the boundary, so a pathology persisting across it
+    still alerts on the first measured tick.
+    """
+
+    tick_dt: float = 1e-3
+    include_warmup: bool = False
+    rules: tuple = RULES
+    # gc_storm
+    gc_storm_frac: float = 1.0
+    gc_storm_ticks: int = 3
+    # util_skew
+    util_skew_ratio: float = 2.0
+    util_skew_window: int = 50
+    util_skew_min_busy: float = 1e-4   # min peer-median window busy (s)
+    # backlog_sat
+    backlog_frac: float = 1.0
+    backlog_ticks: int = 50
+    # wa_spike
+    wa_ratio: float = 1.5
+    wa_window: int = 100
+    wa_min_writes: float = 100.0
+    # hit_collapse
+    hit_window: int = 100
+    hit_drop: float = 0.5
+    hit_min_lookups: float = 100.0
+    # slo_burn
+    slo_burn_window: int = 256
+    slo_burn_frac: float = 0.5
+    slo_burn_min_samples: int = 64
+
+    def __post_init__(self):
+        if self.tick_dt <= 0.0:
+            raise ValueError("tick_dt must be > 0")
+        bad = [r for r in self.rules if r not in RULES]
+        if bad:
+            raise ValueError(f"unknown monitor rules: {bad} "
+                             f"(known: {list(RULES)})")
+
+
+@dataclass
+class MonitorResult:
+    """Picklable end-of-run alert log.
+
+    ``alerts`` records are ``(time, seq, rule, device, tenant, value,
+    threshold, cause)`` — ``device``/``tenant`` are ``-1`` for array-wide
+    or tenant-less alerts, ``cause`` is the root-cause annotation string
+    (``fault:...``, ``gc:...``, ``throttle:...``, or ``none``).
+    """
+
+    spec: MonitorSpec
+    n_devices: int
+    alerts: list
+    counts: dict = field(default_factory=dict)
+    merged: bool = False
+
+    @property
+    def n_alerts(self) -> int:
+        return len(self.alerts)
+
+    def by_rule(self, rule: str) -> list:
+        return [a for a in self.alerts if a[2] == rule]
+
+    def to_jsonl(self, path) -> int:
+        """Write the alert log as JSON-lines (one object per alert, in
+        stream order); returns the number of lines written."""
+        with open(path, "w") as f:
+            for t, seq, rule, dev, tenant, value, thresh, cause in self.alerts:
+                f.write(json.dumps({
+                    "time": t, "seq": seq, "rule": rule, "device": dev,
+                    "tenant": tenant, "value": value, "threshold": thresh,
+                    "cause": cause}) + "\n")
+        return len(self.alerts)
+
+
+class HealthMonitor:
+    """Per-run online rule engine. Implements the same loop-hook protocol
+    as :class:`~.telemetry.Telemetry` (``next_tick`` + ``on_tick``), so it
+    either chains off an attached telemetry's tick grid or installs itself
+    as ``loop.telemetry`` when the run carries no telemetry."""
+
+    def __init__(self, spec: MonitorSpec, n_devices: int):
+        self.spec = spec
+        self.n = n_devices
+        self.dt = float(spec.tick_dt)
+        self._k = 0
+        self.next_tick = 0.0
+        self.armed = bool(spec.include_warmup)
+        self.alerts: list[tuple] = []
+        self.counts: dict[str, int] = {}
+        self._seq = 0
+        self._res: Optional[MonitorResult] = None
+        # probe closures (read-only; registered by the simulators)
+        self._gc_fn: Optional[Callable] = None
+        self._busy_fn: Optional[Callable] = None
+        self._backlog_fn: Optional[Callable] = None
+        self._qd = 0
+        self._wa_fn: Optional[Callable] = None       # () -> (writes, copies)
+        self._cache_fn: Optional[Callable] = None    # () -> (hits, lookups)
+        # root-cause sources
+        self._inj = None
+        self._slo = None
+        # rule state
+        r = spec.rules
+        self._gc_latch = EdgeLatch(spec.gc_storm_ticks) \
+            if "gc_storm" in r else None
+        if "util_skew" in r:
+            self._skew_d = [WindowDelta(spec.util_skew_window)
+                            for _ in range(n_devices)]
+            self._skew_latch = [EdgeLatch(1) for _ in range(n_devices)]
+        else:
+            self._skew_d = None
+        if "backlog_sat" in r:
+            self._bl_latch = [EdgeLatch(spec.backlog_ticks)
+                              for _ in range(n_devices)]
+        else:
+            self._bl_latch = None
+        self._wa_on = "wa_spike" in r
+        self._wa_k = 0
+        self._wa_prev = (-1.0, 0.0)      # (prev window WA, prev writes)
+        self._wa_snap = (0.0, 0.0)
+        self._wa_latch = EdgeLatch(1)
+        self._hit_on = "hit_collapse" in r
+        self._hit_k = 0
+        self._hit_prev = -1.0
+        self._hit_snap = (0.0, 0.0)
+        self._hit_latch = EdgeLatch(1)
+        self._slo_on = "slo_burn" in r
+        self._burn_win: dict[int, SlidingWindow] = {}
+        self._burn_bad: dict[int, int] = {}
+        self._burn_p99: dict[int, float] = {}
+        self._burn_latch: dict[int, EdgeLatch] = {}
+
+    # -- wiring -----------------------------------------------------------
+    def attach(self, loop, telemetry=None) -> "HealthMonitor":
+        """Hook into the run. With ``telemetry`` the monitor chains off its
+        tick grid (``telemetry.monitor = self``, identical ``dt``);
+        without, it installs itself as the loop's tick hook with the same
+        grid-anchoring rule as ``Telemetry.attach``."""
+        if telemetry is not None:
+            self.dt = telemetry.dt
+            telemetry.monitor = self
+        now = loop.now
+        dt = self.dt
+        k = int(now / dt)
+        while k * dt < now:
+            k += 1
+        self._k = k
+        self.next_tick = k * dt
+        if telemetry is None:
+            loop.telemetry = self
+        return self
+
+    def register_array_sources(self, ssds, devices, host_queues, qd,
+                               inj=None, sched=None) -> None:
+        """ArraySim sources: read-only closures over live simulator state
+        (independent of which telemetry probes are enabled)."""
+        self._busy_fn = lambda: [s.busy_time for s in ssds]
+        self._backlog_fn = lambda: [
+            len(q) + len(d.admitted) + d.in_service
+            for q, d in zip(host_queues, devices)]
+        self._qd = qd
+        self._gc_fn = lambda: [d.in_gc for d in devices]
+        self._wa_fn = lambda: (
+            float(sum(s.ftl.writes for s in ssds)),
+            float(sum(s.ftl.gc_copies for s in ssds)))
+        self._inj = inj
+        if sched is not None:
+            self._slo = sched.slo
+            self.register_slo(sched.policy)
+
+    def register_safs_sources(self, devices, cache, qd,
+                              inj=None, sched=None) -> None:
+        """SAFSSim sources (device list wraps DeviceModels; cache adds the
+        hit-collapse scalars)."""
+        from .telemetry import _qlen
+        self._busy_fn = lambda: [d.server.busy_time for d in devices]
+        self._backlog_fn = lambda: [_qlen(d.queue) + d.model.occupancy
+                                    for d in devices]
+        self._qd = qd
+        self._gc_fn = lambda: [d.model.in_gc for d in devices]
+        self._wa_fn = lambda: (
+            float(sum(d.server.ftl.writes for d in devices)),
+            float(sum(d.server.ftl.gc_copies for d in devices)))
+        self._cache_fn = lambda: (float(cache.hit_count),
+                                  float(cache.lookups))
+        self._inj = inj
+        if sched is not None:
+            self._slo = sched.slo
+            self.register_slo(sched.policy)
+
+    def register_slo(self, policy) -> None:
+        """Track SLO burn for every protected tenant of ``policy``."""
+        if not self._slo_on:
+            return
+        w = self.spec.slo_burn_window
+        for s in policy.tenants:
+            if s.protected:
+                self._burn_win[s.tenant] = SlidingWindow(w)
+                self._burn_bad[s.tenant] = 0
+                self._burn_p99[s.tenant] = s.slo_p99
+                self._burn_latch[s.tenant] = EdgeLatch(1)
+
+    def begin_measure(self, now: float) -> None:
+        """Measurement window opened: arm alerting (unless already armed
+        via ``include_warmup``) and re-arm active latches so pathologies
+        persisting across the boundary alert on the first measured tick."""
+        if self.armed:
+            return
+        self.armed = True
+        if self._gc_latch is not None:
+            self._gc_latch.rearm()
+        if self._skew_d is not None:
+            for la in self._skew_latch:
+                la.rearm()
+        if self._bl_latch is not None:
+            for la in self._bl_latch:
+                la.rearm()
+        self._wa_latch.rearm()
+        self._hit_latch.rearm()
+        for la in self._burn_latch.values():
+            la.rearm()
+
+    # -- alert emission ---------------------------------------------------
+    def _alert(self, t: float, rule: str, dev: int, tenant: int,
+               value: float, thresh: float) -> None:
+        seq = self._seq
+        self._seq = seq + 1
+        self.alerts.append((t, seq, rule, dev, tenant, value, thresh,
+                            self._root_cause(dev, t)))
+        self.counts[rule] = self.counts.get(rule, 0) + 1
+
+    def _root_cause(self, dev: int, now: float) -> str:
+        """Best overlapping explanation, most specific first: an active
+        fault episode on the device (or any device, for array-wide
+        alerts), then overlapping GC activity, then an active tenant
+        throttle, else ``none``."""
+        inj = self._inj
+        if inj is not None:
+            devs = range(self.n) if dev < 0 else (dev,)
+            for i in devs:
+                if inj.quarantined[i]:
+                    return f"fault:quarantined:dev{i}"
+                if inj.crashed[i]:
+                    return f"fault:crashed:dev{i}"
+                if inj.is_slow_now(i, now):
+                    return f"fault:fail_slow:dev{i}"
+        gc_fn = self._gc_fn
+        if gc_fn is not None:
+            g = gc_fn()
+            if dev >= 0:
+                if g[dev]:
+                    return f"gc:dev{dev}"
+            else:
+                n_gc = sum(1 for x in g if x)
+                if n_gc:
+                    return f"gc:{n_gc}_devices"
+        slo = self._slo
+        if slo is not None:
+            for t, f in slo.throttle.items():
+                if f < 1.0:
+                    return f"throttle:tenant{t}:{f:.3g}"
+        return "none"
+
+    # -- loop-hook compatibility ------------------------------------------
+    # When self-hooked as ``loop.telemetry`` the engine also routes its GC
+    # episode notes here; the monitor reads GC state through its own probe
+    # closures, so these are deliberate no-ops.
+    def note_gc_start(self, dev: int, now: float, dur: float,
+                      idle: bool = False) -> None:
+        pass
+
+    def note_gc_end(self, dev: int, now: float) -> None:
+        pass
+
+    # -- tick evaluation (loop hook protocol) -----------------------------
+    def on_tick(self, now: float) -> float:
+        """Evaluate every boundary ``k * dt <= now``; returns the next
+        boundary (the loop-hook contract). When chained from telemetry
+        this is called once per boundary and the loop body runs once."""
+        dt = self.dt
+        k = self._k
+        t = k * dt
+        while t <= now:
+            self._eval(t)
+            k += 1
+            t = k * dt
+        self._k = k
+        self.next_tick = t
+        return t
+
+    def _eval(self, t: float) -> None:
+        armed = self.armed
+        spec = self.spec
+        if self._gc_latch is not None:
+            g = self._gc_fn()
+            n_gc = sum(1 for x in g if x)
+            frac = n_gc / self.n
+            if self._gc_latch.push(frac >= spec.gc_storm_frac) and armed:
+                self._alert(t, "gc_storm", -1, -1, frac, spec.gc_storm_frac)
+        busy = None
+        if self._skew_d is not None:
+            busy = self._busy_fn()
+            deltas = [wd.push(busy[i])
+                      for i, wd in enumerate(self._skew_d)]
+            # the busy-time counters reset at the window boundary — a
+            # negative delta marks stale pre-reset samples; skip the sweep
+            if all(d >= 0.0 for d in deltas) and self.n >= 2:
+                med = fast_median(deltas)
+                if med > spec.util_skew_min_busy:
+                    lim = spec.util_skew_ratio * med
+                    for i, d in enumerate(deltas):
+                        if self._skew_latch[i].push(d > lim) and armed:
+                            self._alert(t, "util_skew", i, -1, d / med,
+                                        spec.util_skew_ratio)
+        if self._bl_latch is not None:
+            bl = self._backlog_fn()
+            lim = spec.backlog_frac * self._qd
+            for i, b in enumerate(bl):
+                if self._bl_latch[i].push(b >= lim) and armed:
+                    self._alert(t, "backlog_sat", i, -1, float(b), lim)
+        if self._wa_on and self._wa_fn is not None:
+            self._wa_k += 1
+            if self._wa_k >= spec.wa_window:
+                self._wa_k = 0
+                w, c = self._wa_fn()
+                dw = w - self._wa_snap[0]
+                dc = c - self._wa_snap[1]
+                self._wa_snap = (w, c)
+                prev = self._wa_prev[0]
+                if dw >= spec.wa_min_writes:
+                    wa = (dw + dc) / dw
+                    fire = prev > 0.0 and wa > spec.wa_ratio * prev
+                    if self._wa_latch.push(fire) and armed:
+                        self._alert(t, "wa_spike", -1, -1, wa,
+                                    spec.wa_ratio * prev)
+                    self._wa_prev = (wa, dw)
+                else:
+                    self._wa_latch.push(False)
+        if self._hit_on and self._cache_fn is not None:
+            self._hit_k += 1
+            if self._hit_k >= spec.hit_window:
+                self._hit_k = 0
+                h, lk = self._cache_fn()
+                dh = h - self._hit_snap[0]
+                dl = lk - self._hit_snap[1]
+                self._hit_snap = (h, lk)
+                prev = self._hit_prev
+                if dl >= spec.hit_min_lookups:
+                    rate = dh / dl
+                    fire = prev > 0.0 and rate < spec.hit_drop * prev
+                    if self._hit_latch.push(fire) and armed:
+                        self._alert(t, "hit_collapse", -1, -1, rate,
+                                    spec.hit_drop * prev)
+                    self._hit_prev = rate
+                else:
+                    self._hit_latch.push(False)
+
+    # -- completion stream (slo_burn) -------------------------------------
+    def note_completion(self, tenant: int, latency: float,
+                        now: float) -> None:
+        """Protected-tenant completion (wired next to the QoS scheduler's
+        own ``note_completion``); evaluates SLO burn online."""
+        w = self._burn_win.get(tenant)
+        if w is None:
+            return
+        p99 = self._burn_p99[tenant]
+        bad = self._burn_bad[tenant]
+        if len(w) == self.spec.slo_burn_window:
+            # the sample about to fall off the window leaves the count
+            if w.oldest() > p99:
+                bad -= 1
+        w.push(latency)
+        if latency > p99:
+            bad += 1
+        self._burn_bad[tenant] = bad
+        n = len(w)
+        fire = (n >= self.spec.slo_burn_min_samples
+                and bad / n > self.spec.slo_burn_frac)
+        if self._burn_latch[tenant].push(fire) and self.armed:
+            self._alert(now, "slo_burn", -1, tenant, bad / n,
+                        self.spec.slo_burn_frac)
+
+    # -- finalize ---------------------------------------------------------
+    def finalize(self, now: float) -> MonitorResult:
+        self._res = MonitorResult(spec=self.spec, n_devices=self.n,
+                                  alerts=self.alerts, counts=self.counts)
+        return self._res
+
+    def result(self) -> Optional[MonitorResult]:
+        return self._res
+
+
+def merge_monitor(parts: list) -> Optional[MonitorResult]:
+    """Merge per-shard :class:`MonitorResult` objects (shard order =
+    device order). Deterministic: alerts re-base device ids by each
+    shard's device offset, sort by ``(time, seq, shard)``, and renumber
+    ``seq`` in merged stream order; rule counts add. Returns ``None`` if
+    no shard carried a monitor."""
+    if not parts or any(p is None for p in parts):
+        return None
+    base = 0
+    keyed = []
+    for si, p in enumerate(parts):
+        for (t, seq, rule, dev, tenant, value, thresh, cause) in p.alerts:
+            if dev >= 0:
+                dev += base
+            keyed.append((t, seq, si,
+                          (rule, dev, tenant, value, thresh,
+                           _rebase_cause(cause, base))))
+        base += p.n_devices
+    keyed.sort(key=lambda r: (r[0], r[1], r[2]))
+    alerts = [(t, i) + rec for i, (t, _seq, _si, rec) in enumerate(keyed)]
+    counts: dict[str, int] = {}
+    for p in parts:
+        for rule, c in p.counts.items():
+            counts[rule] = counts.get(rule, 0) + c
+    return MonitorResult(spec=parts[0].spec, n_devices=base,
+                         alerts=alerts, counts=counts, merged=True)
+
+
+def _rebase_cause(cause: str, base: int) -> str:
+    """Shift the ``devN`` suffix of a root-cause annotation by the shard's
+    device offset (tenant/throttle annotations pass through — tenant ids
+    stay shard-local, matching the budget merge convention)."""
+    if base and ":dev" in cause:
+        head, _, tail = cause.rpartition(":dev")
+        if tail.isdigit():
+            return f"{head}:dev{int(tail) + base}"
+    return cause

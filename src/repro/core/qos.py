@@ -55,6 +55,7 @@ import numpy as np
 
 from .engine import LatencyRecorder
 from .io_queues import HIGH, IOStats
+from .metrics import SlidingWindow
 from .workloads import (OpSource, SequentialSource, UniformSource, ZipfSource,
                         _mix64)
 
@@ -284,7 +285,7 @@ class SloController:
         self.policy = policy
         self._prot = [s for s in policy.tenants if s.protected]
         self._unprot = [s.tenant for s in policy.tenants if not s.protected]
-        self._win = {s.tenant: deque(maxlen=policy.slo_window_ops)
+        self._win = {s.tenant: SlidingWindow(policy.slo_window_ops)
                      for s in self._prot}
         self.throttle = {s.tenant: 1.0 for s in policy.tenants}
         self._n = 0
@@ -293,15 +294,10 @@ class SloController:
         self.checks = 0
         self.violations = 0
 
-    @staticmethod
-    def _p99(win) -> float:
-        a = sorted(win)
-        return a[min(len(a) - 1, int(len(a) * 0.99))]
-
     def note(self, tenant: int, latency: float, now: float) -> None:
         w = self._win.get(tenant)
         if w is not None:
-            w.append(latency)
+            w.push(latency)
         self._n += 1
         if self._prot and self._n % self.policy.slo_check_ops == 0:
             self._evaluate(now)
@@ -316,7 +312,7 @@ class SloController:
             if len(w) < p.slo_min_samples:
                 all_clear = False
                 continue
-            q99 = self._p99(w)
+            q99 = w.quantile(0.99)
             if q99 > s.slo_p99:
                 violated = True
             if q99 > s.slo_p99 * p.throttle_recover:

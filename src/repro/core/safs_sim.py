@@ -234,6 +234,8 @@ class SAFSResults:
                                      # (see faults._new_fault_stats)
     # -- telemetry (core/telemetry.py; None when telemetry is off) -----------
     telemetry: "TelemetryResult | None" = None   # series/spans/budget snapshot
+    # -- health monitoring (core/monitor.py; None when monitor is off) -------
+    monitor: "MonitorResult | None" = None       # structured alert log
 
 
 class _Device:
@@ -258,7 +260,8 @@ class SAFSSim:
                  trace: np.ndarray | None = None,
                  qos: "QosPolicy | None" = None,
                  faults: "FaultPolicy | None" = None,
-                 telemetry: "TelemetrySpec | None" = None):
+                 telemetry: "TelemetrySpec | None" = None,
+                 monitor: "MonitorSpec | None" = None):
         self.n = n_ssds
         self.p = ssd
         self.wl = workload
@@ -289,17 +292,20 @@ class SAFSSim:
                 raise TypeError(f"telemetry must be a core.telemetry."
                                 f"TelemetrySpec, got "
                                 f"{type(telemetry).__name__}")
-            if telemetry.spans and faults is not None:
-                raise ValueError(
-                    "telemetry spans cannot be combined with faults=: retry "
-                    "and hedge legs re-issue work outside the span "
-                    "lifecycle; use a spans=False spec (the series probes "
-                    "compose with faults)")
+        self.monitor = monitor
+        if monitor is not None:
+            from .monitor import MonitorSpec
+            if not isinstance(monitor, MonitorSpec):
+                raise TypeError(f"monitor must be a core.monitor."
+                                f"MonitorSpec, got "
+                                f"{type(monitor).__name__}")
         # per-run collector (run() attaches a fresh one; the persistent loop
         # is detached again at the end of each run)
         self._tel = None
         self._tel_spans = False
         self.last_telemetry = None                    # TelemetryResult
+        self._mon = None
+        self.last_monitor = None                      # MonitorResult
 
         if qos is not None:
             # per-tenant HIGH classes at the DualQueue admission point: one
@@ -549,12 +555,16 @@ class SAFSSim:
             for t, r in self._trec.items():
                 r.reset()
                 self._thr_snap[t] = self.sched.throttle_time(t, now)
+        if self._mon is not None:
+            self._mon.begin_measure(self.loop.now)
 
     def _complete_op(self, t_start: float, tenant: int = 0) -> bool:
         measured = self._mw.note_completion(t_start)
         if self.sched is not None:
             now = self.loop.now
             self.sched.note_completion(tenant, now - t_start, now)
+            if self._mon is not None:
+                self._mon.note_completion(tenant, now - t_start, now)
             if measured:
                 rec = self._trec.get(tenant)
                 if rec is not None:
@@ -684,6 +694,14 @@ class SAFSSim:
             tel.register_safs_probes(self.devices, self.cache)
         self._tel = tel
         self._tel_spans = tel is not None and tel.spans_on
+        mon = None
+        if self.monitor is not None:
+            from .monitor import HealthMonitor
+            mon = HealthMonitor(self.monitor, self.n).attach(self.loop, tel)
+            mon.register_safs_sources(self.devices, self.cache,
+                                      self.p.device_slots, inj=self._inj,
+                                      sched=self.sched)
+        self._mon = mon
         # Seed the closed-loop concurrency exactly once per sim: the spawn
         # chain is self-sustaining (every completion respawns), so a later
         # run() — a new phase — resumes the in-flight population instead of
@@ -704,6 +722,12 @@ class SAFSSim:
             tel.finalize(self.loop.now, mw.t0)
             self.loop.telemetry = None   # the loop outlives the run
         self.last_telemetry = tel.result() if tel is not None else None
+        if mon is not None:
+            mon.finalize(self.loop.now)
+            if self.loop.telemetry is mon:   # self-hooked (no telemetry)
+                self.loop.telemetry = None
+            self._mon = None
+        self.last_monitor = mon.result() if mon is not None else None
         tstats, share_error = None, 0.0
         if self.qos is not None:
             from .qos import build_tenant_stats
@@ -748,6 +772,7 @@ class SAFSSim:
             share_error=share_error,
             faults=fblock,
             telemetry=self.last_telemetry,
+            monitor=self.last_monitor,
         )
 
     def run_phased(self, phases) -> "list[tuple[str, SAFSResults]]":

@@ -48,6 +48,7 @@ import numpy as np
 
 from .engine import LatencySummary
 from .gc_sim import ArrayResults, ArraySim, SSDParams, Workload
+from .monitor import merge_monitor
 from .safs_sim import SAFSResults, SAFSSim, SAFSWorkload
 from .telemetry import merge_telemetry
 from .workloads import _mix64
@@ -114,17 +115,24 @@ def _check_telemetry(telemetry, faults) -> None:
     if not isinstance(telemetry, TelemetrySpec):
         raise TypeError(f"telemetry must be a core.telemetry.TelemetrySpec, "
                         f"got {type(telemetry).__name__}")
-    if telemetry.spans and faults is not None:
-        raise ValueError("telemetry spans cannot be combined with faults= "
-                         "(see ArraySim)")
+
+
+def _check_monitor(monitor) -> None:
+    """Same fail-fast-in-the-parent rationale as ``_check_telemetry``."""
+    if monitor is None:
+        return
+    from .monitor import MonitorSpec
+    if not isinstance(monitor, MonitorSpec):
+        raise TypeError(f"monitor must be a core.monitor.MonitorSpec, "
+                        f"got {type(monitor).__name__}")
 
 
 def _run_shard(args):
     (sz, ssd, occupancy, wl, seed, measure_ops, warmup_ops,
-     prefill_cache, layout, qos, gc, faults, telemetry) = args
+     prefill_cache, layout, qos, gc, faults, telemetry, monitor) = args
     sim = ArraySim(sz, ssd, occupancy, wl, seed=seed,
                    prefill_cache=prefill_cache, layout=layout, qos=qos, gc=gc,
-                   faults=faults, telemetry=telemetry)
+                   faults=faults, telemetry=telemetry, monitor=monitor)
     res = sim.run(measure_ops, warmup_ops)
     return (res, sim.last_latency, sim.last_stall, sim.last_tenant_latency,
             sim.last_gc_wait)
@@ -165,7 +173,14 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
 
     Faults block (``core/faults.py``): fault domains never span shards
     (``slice_policy``), so the per-shard blocks merge by plain counter
-    addition / sentinel adoption (``merge_fault_stats``)."""
+    addition / sentinel adoption (``merge_fault_stats``).
+
+    Monitor block (``core/monitor.py``): per-shard alert streams merge by
+    ``(time, seq, shard)`` with device ids (and ``:devN`` root-cause
+    suffixes) re-based to array-wide ids, then seq renumbered over the
+    merged order; rule counts add (``monitor.merge_monitor``) —
+    deterministic, so ``parallel=False`` == ``parallel=True`` bit-identical
+    alert for alert."""
     if pooled.size:
         p50, p95, p99 = np.percentile(pooled, [50.0, 95.0, 99.0])
         summ = LatencySummary(mean=float(pooled.mean()), p50=float(p50),
@@ -249,6 +264,8 @@ def merge_results(parts: list[ArrayResults], pooled: np.ndarray,
         idle_gc_frac=idle_frac,
         faults=_merge_faults(parts),
         telemetry=merge_telemetry([p.telemetry for p in parts]),
+        gc_lease_skipped=sum(p.gc_lease_skipped for p in parts),
+        monitor=merge_monitor([p.monitor for p in parts]),
     )
 
 
@@ -313,7 +330,7 @@ class ShardedArraySim:
                  seed: int = 0, n_shards: int | None = None,
                  parallel: bool = True, prefill_cache: bool = True,
                  layout=None, qos=None, gc=None, faults=None,
-                 telemetry=None):
+                 telemetry=None, monitor=None):
         from .raid import JBODLayout
         self.layout = layout if layout is not None else JBODLayout()
         self.qos = qos               # QosPolicy | None (frozen — ships to
@@ -334,6 +351,11 @@ class ShardedArraySim:
                                      # to workers; per-shard results merge
                                      # via telemetry.merge_telemetry)
         _check_telemetry(telemetry, faults)
+        self.monitor = monitor       # MonitorSpec | None (frozen — ships to
+                                     # workers; each shard runs its own
+                                     # HealthMonitor over its slice, alert
+                                     # streams merge via monitor.merge_monitor)
+        _check_monitor(monitor)
         unit = self.layout.shard_unit(n_ssds)   # SSDs per stripe group
         if n_ssds % unit:
             raise ValueError(f"n_ssds={n_ssds} not a multiple of the "
@@ -365,6 +387,7 @@ class ShardedArraySim:
         self.last_tenant_latency: dict[int, np.ndarray] | None = None
         self.last_gc_wait: np.ndarray | None = None
         self.last_telemetry = None   # merged TelemetryResult of the last run
+        self.last_monitor = None     # merged MonitorResult of the last run
         self.last_wall_s = 0.0       # observed wall clock of the last run()
 
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
@@ -386,7 +409,7 @@ class ShardedArraySim:
              shard_seed(self.seed, k), measures[k], warmups[k],
              self.prefill_cache, self.layout,
              _shard_qos(self.qos, sz, self.n), self.gc, faults[k],
-             self.telemetry)
+             self.telemetry, self.monitor)
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -414,6 +437,7 @@ class ShardedArraySim:
         self.last_tenant_latency = tenant_pooled
         self.last_gc_wait = gc_wait_pooled if gc_wait_pooled.size else None
         self.last_telemetry = merged.telemetry
+        self.last_monitor = merged.monitor
         return merged
 
 
@@ -441,11 +465,11 @@ def _shard_safs_workload(wl: SAFSWorkload, sz: int, n_ssds: int) -> SAFSWorkload
 def _run_safs_shard(args):
     (sz, ssd, occupancy, wl, cache_frac, use_flusher, clean_first,
      score_threshold, seed, measure_ops, warmup_ops, faults,
-     telemetry) = args
+     telemetry, monitor) = args
     sim = SAFSSim(sz, ssd, occupancy, wl, cache_frac=cache_frac,
                   use_flusher=use_flusher, clean_first=clean_first,
                   score_threshold=score_threshold, seed=seed, faults=faults,
-                  telemetry=telemetry)
+                  telemetry=telemetry, monitor=monitor)
     res = sim.run(measure_ops, warmup_ops)
     return (res, sim.last_latency)
 
@@ -486,6 +510,7 @@ def merge_safs_results(parts: list[SAFSResults],
         cache_lookups=lookups,
         faults=_merge_faults(parts),
         telemetry=merge_telemetry([p.telemetry for p in parts]),
+        monitor=merge_monitor([p.monitor for p in parts]),
     )
 
 
@@ -510,7 +535,7 @@ class ShardedSAFSSim:
                  clean_first: bool = True, score_threshold: int = 2,
                  seed: int = 0, n_shards: int | None = None,
                  parallel: bool = True, qos=None, faults=None,
-                 telemetry=None):
+                 telemetry=None, monitor=None):
         if qos is not None:
             raise NotImplementedError(
                 "per-tenant QoS couples every device through one scheduler "
@@ -535,11 +560,14 @@ class ShardedSAFSSim:
             validate_fault_policy(faults, n_ssds, layout=None)
         self.telemetry = telemetry
         _check_telemetry(telemetry, faults)
+        self.monitor = monitor
+        _check_monitor(monitor)
         if n_shards is None:
             n_shards = min(os.cpu_count() or 1, n_ssds)
         self.sizes = shard_sizes(n_ssds, n_shards)
         self.last_latency: np.ndarray | None = None
         self.last_telemetry = None   # merged TelemetryResult of the last run
+        self.last_monitor = None     # merged MonitorResult of the last run
         self.last_wall_s = 0.0       # observed wall clock of the last run()
 
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
@@ -560,7 +588,8 @@ class ShardedSAFSSim:
              _shard_safs_workload(self.wl, sz, self.n),
              self.cache_frac, self.use_flusher, self.clean_first,
              self.score_threshold, shard_seed(self.seed, k),
-             measures[k], warmups[k], faults[k], self.telemetry)
+             measures[k], warmups[k], faults[k], self.telemetry,
+             self.monitor)
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -578,4 +607,5 @@ class ShardedSAFSSim:
         merged = merge_safs_results(parts, pooled)
         self.last_latency = pooled if pooled.size else None
         self.last_telemetry = merged.telemetry
+        self.last_monitor = merged.monitor
         return merged

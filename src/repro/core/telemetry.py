@@ -66,7 +66,14 @@ from typing import Callable, Optional
 
 import numpy as np
 
-ARRAY_COMPONENTS = ("park", "queue", "gc", "service", "sync")
+# Array span components partition an op's latency exactly.  ``retry`` is
+# media-error recovery time (first failed read completion -> op end) and
+# ``hedge`` the post-hedge-issue wait on parity-reconstruction legs — both
+# 0.0 on fault-free runs, so budgets stay additive with ``faults`` attached.
+ARRAY_COMPONENTS = ("park", "queue", "gc", "service", "sync", "retry",
+                    "hedge")
+# SAFS spans need no extra vocabulary: ``other`` is the remainder, so
+# media-retry backoff is absorbed there and additivity holds structurally.
 SAFS_COMPONENTS = ("cpu", "writeback", "fill", "gc", "other")
 
 _KIND_NAMES = {0: "read", 1: "write", 2: "trim", 3: "rebuild"}
@@ -106,7 +113,7 @@ class _Span(object):
     """In-flight op span (closed spans become plain tuples)."""
 
     __slots__ = ("kind", "tenant", "dev", "nd", "devs", "t_arr", "t_admit",
-                 "gc0")
+                 "gc0", "retry_t", "hedge_t")
 
 
 @dataclass
@@ -157,13 +164,16 @@ class TelemetryResult:
         g = np.asarray(self.series["gc_active"])
         return g.min(axis=1) > 0.0 if g.ndim == 2 else g > 0.0
 
-    def export_trace(self, path, time_scale: float = 1.0) -> int:
+    def export_trace(self, path, time_scale: float = 1.0,
+                     monitor=None) -> int:
         """Write Chrome trace-event JSON (open at https://ui.perfetto.dev —
         "Open trace file" — or chrome://tracing).  Spans become ``"X"``
         duration events on one track per device, GC episodes a second
-        process, series a third (``"C"`` counter events).  ``ts``/``dur``
-        are microseconds of sim time (scaled by ``time_scale``).  Returns
-        the number of trace events written."""
+        process, series a third (``"C"`` counter events); pass the run's
+        :class:`~.monitor.MonitorResult` as ``monitor`` to add its alerts
+        as ``"i"`` instant events on a fourth process.  ``ts``/``dur`` are
+        microseconds of sim time (scaled by ``time_scale``).  Returns the
+        number of trace events written."""
         us = 1e6 * time_scale
         ev = [
             {"name": "process_name", "ph": "M", "pid": 0,
@@ -173,6 +183,18 @@ class TelemetryResult:
             {"name": "process_name", "ph": "M", "pid": 2,
              "args": {"name": "series"}},
         ]
+        if monitor is not None:
+            ev.append({"name": "process_name", "ph": "M", "pid": 3,
+                       "args": {"name": "alerts"}})
+            for a in monitor.alerts:
+                t, seq, rule, dev, tenant, value, thresh, cause = a
+                ev.append({
+                    "name": rule, "cat": "alert", "ph": "i", "s": "g",
+                    "ts": t * us, "pid": 3,
+                    "tid": dev if dev >= 0 else 9999,
+                    "args": {"seq": seq, "device": dev, "tenant": tenant,
+                             "value": value, "threshold": thresh,
+                             "cause": cause}})
         comp = self.components
         for rec in sorted(self.spans, key=lambda r: (r[0], r[1])):
             t_arr, seq, tenant, dev, nd, kind, dur, comps, measured = rec
@@ -234,6 +256,9 @@ class Telemetry:
         self._b_tenant: list[int] = []
         self._b_dev: list[int] = []
         self._res: Optional[TelemetryResult] = None
+        # optional chained HealthMonitor (core/monitor.py): shares this
+        # telemetry's tick grid instead of installing its own loop hook
+        self.monitor = None
 
     # -- wiring -----------------------------------------------------------
     def attach(self, loop) -> "Telemetry":
@@ -317,10 +342,13 @@ class Telemetry:
         t = k * dt
         ticks = self._ticks
         probes = self._probes
+        mon = self.monitor
         while t <= now:
             ticks.append(t)
             for _, fn, store in probes:
                 store.append(fn())
+            if mon is not None:
+                mon.on_tick(t)
             k += 1
             t = k * dt
         self._k = k
@@ -359,6 +387,8 @@ class Telemetry:
         sp.t_arr = now
         sp.t_admit = now
         sp.gc0 = self.gc_cum(dev, now) if dev >= 0 else 0.0
+        sp.retry_t = -1.0
+        sp.hedge_t = -1.0
         return sp
 
     def new_plan_span(self, kind: int, tenant: int, devs: tuple,
@@ -374,12 +404,25 @@ class Telemetry:
         sp.t_arr = now
         sp.t_admit = -1.0
         sp.gc0 = 0.0
+        sp.retry_t = -1.0
+        sp.hedge_t = -1.0
         return sp
 
     def note_admit(self, sp: _Span, now: float) -> None:
         sp.t_admit = now
         gc_cum = self.gc_cum
         sp.gc0 = sum(gc_cum(d, now) for d in sp.devs)
+
+    def note_retry(self, sp: _Span, now: float) -> None:
+        """First media-error retry decision for this op: everything from
+        here to op end that isn't gc/service is recovery time."""
+        if sp.retry_t < 0.0:
+            sp.retry_t = now
+
+    def note_hedge_issue(self, sp: _Span, now: float) -> None:
+        """Hedged reconstruction leg issued for this op's plan."""
+        if sp.hedge_t < 0.0:
+            sp.hedge_t = now
 
     def close_fast_span(self, sp: _Span, now: float, svc: float,
                         measured: bool) -> None:
@@ -390,8 +433,15 @@ class Telemetry:
         gc = self.gc_cum(sp.dev, now) - sp.gc0
         lim = devt - svc
         gc = 0.0 if gc < 0.0 else (lim if gc > lim else gc)
+        rem = devt - svc - gc
+        if sp.retry_t >= 0.0:
+            retry = now - sp.retry_t
+            retry = 0.0 if retry < 0.0 else (rem if retry > rem else retry)
+        else:
+            retry = 0.0
         self.record_span(sp.t_arr, sp.tenant, sp.dev, 1, sp.kind, now,
-                         (0.0, devt - svc - gc, gc, svc, 0.0), measured)
+                         (0.0, rem - retry, gc, svc, 0.0, retry, 0.0),
+                         measured)
 
     def close_plan_span(self, sp: _Span, now: float, sync: float,
                         svc: float, measured: bool) -> None:
@@ -406,8 +456,21 @@ class Telemetry:
         gc = sum(gc_cum(d, now) for d in sp.devs) - sp.gc0
         lim = devt - svc
         gc = 0.0 if gc < 0.0 else (lim if gc > lim else gc)
+        rem = devt - svc - gc
+        if sp.retry_t >= 0.0:
+            retry = now - sp.retry_t
+            retry = 0.0 if retry < 0.0 else (rem if retry > rem else retry)
+        else:
+            retry = 0.0
+        if sp.hedge_t >= 0.0:
+            lim = rem - retry
+            hedge = now - sp.hedge_t
+            hedge = 0.0 if hedge < 0.0 else (lim if hedge > lim else hedge)
+        else:
+            hedge = 0.0
         self.record_span(sp.t_arr, sp.tenant, sp.dev, sp.nd, sp.kind, now,
-                         (park, devt - svc - gc, gc, svc, sync), measured)
+                         (park, rem - retry - hedge, gc, svc, sync, retry,
+                          hedge), measured)
 
     def record_span(self, t_arr: float, tenant: int, dev: int, nd: int,
                     kind: int, t_end: float, comps: tuple,

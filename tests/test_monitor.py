@@ -1,0 +1,532 @@
+"""Health monitor (core/monitor.py) + streaming metrics (core/metrics.py).
+
+The monitor inherits telemetry's passive-observer contract: attaching it
+must not change the simulation (``monitor=None`` byte-identical, monitoring
+ON byte-identical, no RNG, no scheduled events), and its alert stream must
+be deterministic — serial == sharded bit-identical on both sharded runners.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.faults import FailSlow, FaultPolicy
+from repro.core.gc_coord import ReactiveGc, StaggeredGc
+from repro.core.gc_sim import ArraySim, SSDParams, Workload
+from repro.core.metrics import (EdgeLatch, Ewma, SlidingWindow, WindowDelta,
+                                fast_median, peer_median)
+from repro.core.monitor import (RULES, HealthMonitor, MonitorResult,
+                                MonitorSpec, _rebase_cause, merge_monitor)
+from repro.core.qos import QosPolicy, TenantSpec
+from repro.core.raid import Raid5Layout
+from repro.core.safs_sim import SAFSSim, SAFSWorkload
+from repro.core.sharded import ShardedArraySim, ShardedSAFSSim
+from repro.core.telemetry import TelemetrySpec
+
+P = SSDParams(capacity_pages=2048)
+MON = MonitorSpec()
+
+
+def _array(monitor=None, **kw):
+    base = dict(n_ssds=3, ssd=P, occupancy=0.6,
+                workload=Workload(w_total=96, qd_per_ssd=16, n_streams=3),
+                seed=42, monitor=monitor)
+    base.update(kw)
+    return ArraySim(**base)
+
+
+def _assert_same_results(a, b):
+    assert a.iops == b.iops
+    assert a.mean_latency == b.mean_latency
+    assert a.p50_latency == b.p50_latency
+    assert a.p99_latency == b.p99_latency
+    assert a.events == b.events          # no extra scheduled events
+    np.testing.assert_array_equal(a.util, b.util)
+    np.testing.assert_array_equal(a.per_ssd_iops, b.per_ssd_iops)
+
+
+# ---------------------------------------------------------------------------
+# metrics.py primitives
+# ---------------------------------------------------------------------------
+
+def test_sliding_window_quantile_is_upper_index_pick():
+    w = SlidingWindow(8)
+    for x in (5.0, 1.0, 9.0, 3.0):
+        w.push(x)
+    a = sorted([5.0, 1.0, 9.0, 3.0])
+    # same arithmetic as the pre-refactor SloController._p99
+    assert w.quantile(0.99) == a[min(len(a) - 1, int(len(a) * 0.99))]
+    assert w.quantile(0.5) == a[2]
+    assert w.oldest() == 5.0
+    assert w.count_above(4.0) == 2
+    for x in range(10):
+        w.push(float(x))
+    assert len(w) == 8 and w.oldest() == 2.0
+
+
+def test_ewma_first_sample_initialises():
+    e = Ewma(0.25)
+    e.update(4.0)
+    assert e.value == 4.0 and e.n == 1     # no zero-bias warmup
+    e.update(8.0)
+    assert e.value == 4.0 + 0.25 * (8.0 - 4.0)
+
+
+def test_window_delta_spans_window_pushes():
+    d = WindowDelta(3)
+    assert d.push(10.0) == 0.0
+    assert d.push(12.0) == 2.0
+    assert not d.full()
+    assert d.push(15.0) == 5.0
+    assert d.push(21.0) == 11.0            # 4 samples = 3 intervals
+    assert d.full()
+    assert d.push(22.0) == 10.0            # oldest (10.0 -> 12.0) fell off
+
+
+def test_edge_latch_one_alert_per_episode():
+    la = EdgeLatch(arm_ticks=3)
+    assert [la.push(True) for _ in range(5)] == [False, False, True,
+                                                False, False]
+    la.push(False)                         # episode ends, latch clears
+    assert [la.push(True) for _ in range(3)] == [False, False, True]
+    assert la.active
+    la.rearm()                             # warmup boundary: re-fires while
+    assert la.push(True) is True           # the condition still holds
+
+
+def test_fast_median_matches_numpy():
+    for vals in ([3.0], [4.0, 1.0], [5.0, 2.0, 9.0],
+                 [1.0, 7.0, 3.0, 3.0], list(range(11))):
+        assert fast_median(vals) == float(np.median(vals))
+        assert peer_median(vals) == float(np.median(vals))
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_monitor_spec_validation():
+    with pytest.raises(ValueError, match="tick_dt"):
+        MonitorSpec(tick_dt=0.0)
+    with pytest.raises(ValueError, match="rules"):
+        MonitorSpec(rules=("gc_storm", "nope"))
+    with pytest.raises(TypeError, match="MonitorSpec"):
+        _array(monitor=object())
+    with pytest.raises(TypeError, match="MonitorSpec"):
+        SAFSSim(n_ssds=2, ssd=P, monitor=object())
+    with pytest.raises(TypeError, match="MonitorSpec"):
+        ShardedArraySim(4, ssd=P, monitor=object())
+    with pytest.raises(TypeError, match="MonitorSpec"):
+        ShardedSAFSSim(4, ssd=P, monitor=object())
+
+
+# ---------------------------------------------------------------------------
+# alert rules on hand-built metric streams
+# ---------------------------------------------------------------------------
+
+def _drive(mon, n_ticks):
+    """Walk the tick grid like the loop hook would."""
+    for k in range(n_ticks):
+        mon.on_tick(k * mon.dt)
+
+
+def test_gc_storm_rule():
+    spec = MonitorSpec(rules=("gc_storm",), gc_storm_ticks=3,
+                       include_warmup=True)
+    mon = HealthMonitor(spec, 4)
+    state = {"gc": [False] * 4}
+    mon._gc_fn = lambda: state["gc"]
+    _drive(mon, 5)
+    assert mon.alerts == []
+    state["gc"] = [True] * 4               # storm: all devices collecting
+    for k in range(5, 20):
+        mon.on_tick(k * mon.dt)
+    assert len(mon.alerts) == 1            # latched: one alert per episode
+    t, seq, rule, dev, tenant, value, thresh, cause = mon.alerts[0]
+    assert rule == "gc_storm" and dev == -1 and value == 1.0
+    assert cause == "gc:4_devices"
+    state["gc"] = [False] * 4
+    _drive_from(mon, 20, 25)
+    state["gc"] = [True] * 4               # second episode, second alert
+    _drive_from(mon, 25, 40)
+    assert len(mon.alerts) == 2
+
+
+def _drive_from(mon, k0, k1):
+    for k in range(k0, k1):
+        mon.on_tick(k * mon.dt)
+
+
+def test_util_skew_rule():
+    spec = MonitorSpec(rules=("util_skew",), util_skew_window=4,
+                       util_skew_ratio=2.0, include_warmup=True)
+    mon = HealthMonitor(spec, 3)
+    state = {"busy": [0.0, 0.0, 0.0]}
+    mon._busy_fn = lambda: list(state["busy"])
+
+    def step(rates):
+        for i, r in enumerate(rates):
+            state["busy"][i] += r
+    for k in range(6):                     # balanced: no alert
+        step([1.0, 1.0, 1.0])
+        mon.on_tick(k * mon.dt)
+    assert mon.alerts == []
+    for k in range(6, 20):                 # device 2 runs 10x its peers
+        step([1.0, 1.0, 10.0])
+        mon.on_tick(k * mon.dt)
+    assert len(mon.alerts) == 1
+    t, _, rule, dev, _, value, thresh, cause = mon.alerts[0]
+    assert rule == "util_skew" and dev == 2 and value > 2.0
+    assert thresh == 2.0 and cause == "none"
+
+
+def test_backlog_sat_rule():
+    spec = MonitorSpec(rules=("backlog_sat",), backlog_frac=1.0,
+                       backlog_ticks=3, include_warmup=True)
+    mon = HealthMonitor(spec, 2)
+    mon._qd = 16
+    state = {"bl": [0, 0]}
+    mon._backlog_fn = lambda: list(state["bl"])
+    _drive(mon, 4)
+    state["bl"] = [16, 3]                  # device 0 pinned at the bound
+    _drive_from(mon, 4, 10)
+    assert [a[3] for a in mon.alerts] == [0]
+    assert mon.alerts[0][2] == "backlog_sat"
+    assert mon.alerts[0][5] == 16.0
+
+
+def test_wa_spike_rule():
+    spec = MonitorSpec(rules=("wa_spike",), wa_window=4, wa_ratio=1.5,
+                       wa_min_writes=1.0, include_warmup=True)
+    mon = HealthMonitor(spec, 2)
+    state = {"w": 0.0, "c": 0.0}
+    mon._wa_fn = lambda: (state["w"], state["c"])
+
+    def step(dw, dc):
+        state["w"] += dw
+        state["c"] += dc
+    for k in range(8):                     # two windows at WA = 1.0
+        step(10.0, 0.0)
+        mon.on_tick(k * mon.dt)
+    assert mon.alerts == []
+    for k in range(8, 12):                 # copies spike: WA jumps to 2.0
+        step(10.0, 10.0)
+        mon.on_tick(k * mon.dt)
+    assert len(mon.alerts) == 1
+    assert mon.alerts[0][2] == "wa_spike"
+    assert mon.alerts[0][5] == pytest.approx(2.0)
+
+
+def test_hit_collapse_rule():
+    spec = MonitorSpec(rules=("hit_collapse",), hit_window=4, hit_drop=0.5,
+                       hit_min_lookups=1.0, include_warmup=True)
+    mon = HealthMonitor(spec, 2)
+    state = {"h": 0.0, "l": 0.0}
+    mon._cache_fn = lambda: (state["h"], state["l"])
+
+    def step(dh, dl):
+        state["h"] += dh
+        state["l"] += dl
+    for k in range(8):                     # hit rate 0.9
+        step(9.0, 10.0)
+        mon.on_tick(k * mon.dt)
+    assert mon.alerts == []
+    for k in range(8, 12):                 # collapse to 0.1 < 0.5 * 0.9
+        step(1.0, 10.0)
+        mon.on_tick(k * mon.dt)
+    assert len(mon.alerts) == 1
+    assert mon.alerts[0][2] == "hit_collapse"
+    assert mon.alerts[0][5] == pytest.approx(0.1)
+
+
+def test_slo_burn_rule():
+    spec = MonitorSpec(rules=("slo_burn",), slo_burn_window=16,
+                       slo_burn_frac=0.5, slo_burn_min_samples=8,
+                       include_warmup=True)
+    mon = HealthMonitor(spec, 2)
+    pol = QosPolicy(tenants=(TenantSpec(0, slo_p99=1e-3), TenantSpec(1)))
+    mon.register_slo(pol)
+    for i in range(8):                     # healthy latencies: no burn
+        mon.note_completion(0, 5e-4, i * 1e-4)
+    mon.note_completion(1, 5.0, 1e-3)      # unprotected tenant: untracked
+    assert mon.alerts == []
+    for i in range(12):                    # every op busts the SLO
+        mon.note_completion(0, 5e-3, 1e-3 + i * 1e-4)
+    assert len(mon.alerts) == 1
+    t, _, rule, dev, tenant, value, thresh, cause = mon.alerts[0]
+    assert rule == "slo_burn" and tenant == 0 and dev == -1
+    assert value > 0.5 and thresh == 0.5
+
+
+def test_root_cause_priority():
+    class FakeInj:
+        quarantined = [False, True]
+        crashed = [False, False]
+
+        def is_slow_now(self, i, now):
+            return False
+
+    mon = HealthMonitor(MonitorSpec(include_warmup=True), 2)
+    mon._inj = FakeInj()
+    mon._gc_fn = lambda: [True, True]
+    # fault beats GC; device-scoped lookup only sees that device
+    assert mon._root_cause(1, 0.0) == "fault:quarantined:dev1"
+    assert mon._root_cause(0, 0.0) == "gc:dev0"
+    assert mon._root_cause(-1, 0.0) == "fault:quarantined:dev1"
+    mon._inj = None
+    assert mon._root_cause(-1, 0.0) == "gc:2_devices"
+    mon._gc_fn = lambda: [False, False]
+    assert mon._root_cause(0, 0.0) == "none"
+
+
+def test_warmup_suppression_and_rearm():
+    """Alerts are suppressed until begin_measure; a pathology persisting
+    across the boundary alerts on the first measured tick."""
+    spec = MonitorSpec(rules=("gc_storm",), gc_storm_ticks=2)
+    mon = HealthMonitor(spec, 2)
+    mon._gc_fn = lambda: [True, True]
+    _drive(mon, 10)                        # warmup: latched but silent
+    assert mon.alerts == []
+    mon.begin_measure(10 * mon.dt)
+    _drive_from(mon, 10, 12)
+    assert len(mon.alerts) == 1
+
+
+# ---------------------------------------------------------------------------
+# ON == OFF byte-identity on every run loop
+# ---------------------------------------------------------------------------
+
+def test_fast_loop_monitor_identity():
+    off, on = _array(), _array(MON)
+    ra, rb = off.run(4000), on.run(4000)
+    _assert_same_results(ra, rb)
+    np.testing.assert_array_equal(off.last_latency, on.last_latency)
+    assert off.rng.bit_generator.state == on.rng.bit_generator.state
+    assert ra.monitor is None
+    assert rb.monitor is not None
+
+
+def test_layout_loop_monitor_identity():
+    kw = dict(n_ssds=6, workload=Workload(w_total=192, qd_per_ssd=16,
+                                          n_streams=6),
+              layout=Raid5Layout(group=6), seed=7)
+    off, on = _array(**kw), _array(MON, **kw)
+    ra, rb = off.run(3000), on.run(3000)
+    _assert_same_results(ra, rb)
+    np.testing.assert_array_equal(off.last_latency, on.last_latency)
+
+
+def test_qos_loop_monitor_identity():
+    qos = QosPolicy(tenants=(TenantSpec(0, weight=2.0, slo_p99=5e-3),
+                             TenantSpec(1, weight=1.0)))
+    kw = dict(n_ssds=4, workload=Workload(w_total=128, qd_per_ssd=16,
+                                          n_streams=4),
+              qos=qos, seed=3)
+    off, on = _array(**kw), _array(MON, **kw)
+    ra, rb = off.run(3000), on.run(3000)
+    _assert_same_results(ra, rb)
+    np.testing.assert_array_equal(off.last_latency, on.last_latency)
+
+
+def test_safs_loop_monitor_identity():
+    def mk(mon):
+        return SAFSSim(n_ssds=4, ssd=P, occupancy=0.85,
+                       workload=SAFSWorkload(read_frac=0.3, concurrency=128),
+                       cache_frac=0.08, seed=11, monitor=mon)
+    off, on = mk(None), mk(MON)
+    ra, rb = off.run(3000), on.run(3000)
+    assert ra.app_iops == rb.app_iops
+    assert ra.mean_latency == rb.mean_latency
+    assert ra.p99_latency == rb.p99_latency
+    assert ra.events == rb.events
+    assert ra.hit_rate == rb.hit_rate
+    np.testing.assert_array_equal(ra.util, rb.util)
+    np.testing.assert_array_equal(off.last_latency, on.last_latency)
+    assert off.rng.bit_generator.state == on.rng.bit_generator.state
+    assert ra.monitor is None and rb.monitor is not None
+
+
+def test_monitor_identity_with_faults_and_telemetry():
+    """Monitor + telemetry + spans + faults all compose without perturbing
+    the run, and chaining off telemetry's grid produces the same alerts
+    as self-hooking."""
+    fp = FaultPolicy(events=(FailSlow(device=1, onset=0.02, duration=5.0,
+                                      slow_factor=4.0),))
+    kw = dict(faults=fp, seed=9)
+    off = _array(**kw).run(4000)
+    solo = _array(MON, **kw).run(4000)
+    chained = _array(MON, telemetry=TelemetrySpec(spans=True), **kw).run(4000)
+    _assert_same_results(off, solo)
+    _assert_same_results(off, chained)
+    assert solo.monitor.alerts == chained.monitor.alerts
+    assert solo.monitor.counts == chained.monitor.counts
+
+
+def test_rerun_same_seed_same_alerts():
+    a = _array(MON, faults=FaultPolicy(events=(
+        FailSlow(device=0, onset=0.02, duration=5.0, slow_factor=4.0),)))
+    b = _array(MON, faults=FaultPolicy(events=(
+        FailSlow(device=0, onset=0.02, duration=5.0, slow_factor=4.0),)))
+    ra, rb = a.run(4000), b.run(4000)
+    assert ra.monitor.alerts == rb.monitor.alerts
+    assert ra.monitor.alerts                # the scenario does alert
+
+
+# ---------------------------------------------------------------------------
+# sharded: serial == parallel bit-identical alert streams
+# ---------------------------------------------------------------------------
+
+def test_sharded_array_serial_equals_parallel_alerts():
+    fp = FaultPolicy(events=(FailSlow(device=4, onset=0.02, duration=5.0,
+                                      slow_factor=5.0),))
+    kw = dict(n_ssds=6, ssd=P, occupancy=0.6,
+              workload=Workload(w_total=96, qd_per_ssd=16, n_streams=6),
+              seed=5, n_shards=2, faults=fp, monitor=MON)
+    ser = ShardedArraySim(parallel=False, **kw).run(3000)
+    par = ShardedArraySim(parallel=True, **kw).run(3000)
+    assert ser.monitor is not None and ser.monitor.merged
+    assert ser.monitor.alerts == par.monitor.alerts
+    assert ser.monitor.counts == par.monitor.counts
+    assert ser.monitor.n_devices == 6
+    # the faulted device keeps its array-wide id through the merge
+    assert any(a[3] == 4 or "dev4" in a[7] for a in ser.monitor.alerts)
+    assert ser.iops == par.iops
+
+
+def test_sharded_safs_serial_equals_parallel_alerts():
+    fp = FaultPolicy(events=(FailSlow(device=2, onset=0.02, duration=5.0,
+                                      slow_factor=6.0),))
+    kw = dict(n_ssds=4, ssd=P, occupancy=0.85,
+              workload=SAFSWorkload(read_frac=0.3, concurrency=128),
+              seed=3, n_shards=2, faults=fp, monitor=MON)
+    ser = ShardedSAFSSim(parallel=False, **kw).run(3000)
+    par = ShardedSAFSSim(parallel=True, **kw).run(3000)
+    assert ser.monitor is not None and ser.monitor.merged
+    assert ser.monitor.alerts == par.monitor.alerts
+    assert ser.monitor.counts == par.monitor.counts
+    assert ser.app_iops == par.app_iops
+
+
+def test_sharded_monitor_none_propagates():
+    kw = dict(n_ssds=4, ssd=P, occupancy=0.6,
+              workload=Workload(w_total=96, qd_per_ssd=16, n_streams=4),
+              seed=5, n_shards=2)
+    r = ShardedArraySim(parallel=False, **kw).run(2000)
+    assert r.monitor is None
+
+
+# ---------------------------------------------------------------------------
+# merge_monitor unit behavior
+# ---------------------------------------------------------------------------
+
+def _mr(n_devices, alerts):
+    counts = {}
+    for a in alerts:
+        counts[a[2]] = counts.get(a[2], 0) + 1
+    return MonitorResult(spec=MON, n_devices=n_devices, alerts=list(alerts),
+                         counts=counts)
+
+
+def test_merge_monitor_rebases_and_renumbers():
+    a = _mr(3, [(0.1, 0, "util_skew", 2, -1, 3.0, 2.0, "fault:fail_slow:dev2"),
+                (0.4, 1, "gc_storm", -1, -1, 1.0, 1.0, "gc:3_devices")])
+    b = _mr(3, [(0.2, 0, "backlog_sat", 1, -1, 16.0, 16.0, "gc:dev1")])
+    m = merge_monitor([a, b])
+    assert m.merged and m.n_devices == 6
+    # time-ordered, seq renumbered, shard-1 devices re-based by +3
+    assert [x[0] for x in m.alerts] == [0.1, 0.2, 0.4]
+    assert [x[1] for x in m.alerts] == [0, 1, 2]
+    assert m.alerts[1][3] == 4
+    assert m.alerts[1][7] == "gc:dev4"
+    assert m.alerts[0][7] == "fault:fail_slow:dev2"   # shard 0: unshifted
+    assert m.counts == {"util_skew": 1, "gc_storm": 1, "backlog_sat": 1}
+
+
+def test_merge_monitor_none_propagation():
+    assert merge_monitor([]) is None
+    assert merge_monitor([None, _mr(2, [])]) is None
+
+
+def test_rebase_cause():
+    assert _rebase_cause("fault:fail_slow:dev1", 4) == "fault:fail_slow:dev5"
+    assert _rebase_cause("gc:dev0", 2) == "gc:dev2"
+    assert _rebase_cause("gc:3_devices", 4) == "gc:3_devices"
+    assert _rebase_cause("throttle:tenant1:0.5", 4) == "throttle:tenant1:0.5"
+    assert _rebase_cause("none", 4) == "none"
+    assert _rebase_cause("fault:fail_slow:dev1", 0) == "fault:fail_slow:dev1"
+
+
+# ---------------------------------------------------------------------------
+# exports
+# ---------------------------------------------------------------------------
+
+def _faulted_run(telemetry=None):
+    fp = FaultPolicy(events=(FailSlow(device=1, onset=0.02, duration=5.0,
+                                      slow_factor=4.0),))
+    return _array(MON, faults=fp, telemetry=telemetry, seed=9).run(4000)
+
+
+def test_to_jsonl(tmp_path):
+    r = _faulted_run()
+    assert r.monitor.n_alerts > 0
+    path = tmp_path / "alerts.jsonl"
+    n = r.monitor.to_jsonl(path)
+    lines = path.read_text().splitlines()
+    assert n == len(lines) == r.monitor.n_alerts
+    first = json.loads(lines[0])
+    assert set(first) == {"time", "seq", "rule", "device", "tenant",
+                          "value", "threshold", "cause"}
+    assert first["rule"] in RULES
+
+
+def test_export_trace_alert_instants(tmp_path):
+    r = _faulted_run(telemetry=TelemetrySpec(spans=True))
+    path = tmp_path / "trace.json"
+    r.telemetry.export_trace(path, monitor=r.monitor)
+    events = json.loads(path.read_text())["traceEvents"]
+    instants = [e for e in events if e.get("cat") == "alert"]
+    assert len(instants) == r.monitor.n_alerts
+    for e in instants:
+        assert e["ph"] == "i"
+        assert e["name"] in RULES
+        assert "cause" in e["args"]
+
+
+# ---------------------------------------------------------------------------
+# fault-aware GC coordination (gc_lease_skipped)
+# ---------------------------------------------------------------------------
+
+def _quarantine_run(gc):
+    fp = FaultPolicy(events=(FailSlow(device=1, onset=0.02, duration=10.0,
+                                      slow_factor=6.0),), detect=True)
+    return _array(gc=gc, faults=fp, seed=4).run(6000)
+
+
+def test_staggered_gc_skips_quarantined_member():
+    r = _quarantine_run(StaggeredGc())
+    assert r.faults["quarantines"] >= 1
+    assert r.gc_lease_skipped > 0
+
+
+def test_reactive_gc_never_defers_for_quarantine():
+    """ReactiveGc grants unconditionally (it models the uncoordinated
+    baseline), so the quarantine skip must not change it vs gc=None."""
+    r = _quarantine_run(ReactiveGc())
+    assert r.gc_lease_skipped == 0
+    fp = FaultPolicy(events=(FailSlow(device=1, onset=0.02, duration=10.0,
+                                      slow_factor=6.0),), detect=True)
+    bare = _array(faults=fp, seed=4).run(6000)
+    assert r.iops == bare.iops
+    assert r.p99_latency == bare.p99_latency
+
+
+def test_sharded_lease_skipped_merges():
+    fp = FaultPolicy(events=(FailSlow(device=1, onset=0.02, duration=10.0,
+                                      slow_factor=6.0),), detect=True)
+    kw = dict(n_ssds=6, ssd=P, occupancy=0.6,
+              workload=Workload(w_total=96, qd_per_ssd=16, n_streams=6),
+              seed=4, n_shards=2, gc=StaggeredGc(scope="group"),
+              faults=fp)
+    ser = ShardedArraySim(parallel=False, **kw).run(4000)
+    par = ShardedArraySim(parallel=True, **kw).run(4000)
+    assert ser.gc_lease_skipped == par.gc_lease_skipped

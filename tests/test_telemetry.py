@@ -240,16 +240,44 @@ def test_safs_span_components_partition():
         assert comps[1] == comps[2] == comps[3] == comps[4] == 0.0
 
 
-def test_spans_reject_faults():
-    from repro.core.faults import FailSlow, FaultPolicy
-    fp = FaultPolicy(events=(FailSlow(device=0, slow_factor=4.0),))
-    with pytest.raises(ValueError, match="spans"):
-        _array(FULL, faults=fp)
+def test_spans_compose_with_faults():
+    """Spans + faults: the retry/hedge vocabulary keeps the latency budget
+    exactly additive with a fault policy attached (the PR 8 mutual
+    exclusivity is lifted)."""
+    from repro.core.faults import FailSlow, FaultPolicy, RetryPolicy
+    fp = FaultPolicy(events=(FailSlow(device=0, onset=0.01, duration=5.0,
+                                      slow_factor=4.0),),
+                     retry=RetryPolicy())
     with pytest.raises(TypeError, match="TelemetrySpec"):
         _array(telemetry=object())
-    # series-only probes DO compose with faults
-    r = _array(TelemetrySpec(series_dt=5e-4), faults=fp).run(1000)
-    assert r.telemetry is not None and r.telemetry.budget is None
+    off = _array(faults=fp).run(3000)
+    on = _array(FULL, faults=fp).run(3000)
+    _assert_same_results(off, on)          # spans stay passive under faults
+    bud = on.telemetry.budget
+    assert bud is not None
+    assert list(bud["mean"]) == list(ARRAY_COMPONENTS)
+    assert "retry" in bud["mean"] and "hedge" in bud["mean"]
+    assert sum(bud["mean"].values()) == pytest.approx(bud["mean_latency"],
+                                                      rel=1e-9)
+    assert bud["mean_latency"] == pytest.approx(on.mean_latency, rel=1e-12)
+
+
+def test_hedge_component_raid5():
+    """Hedged striped reads attribute their extra wait to the ``hedge``
+    span component, and the budget stays additive."""
+    from repro.core.faults import FailSlow, FaultPolicy
+    fp = FaultPolicy(events=(FailSlow(device=0, onset=0.0, duration=10.0,
+                                      slow_factor=8.0),),
+                     hedge_after=0.002)
+    r = ArraySim(n_ssds=3, ssd=P, occupancy=0.6,
+                 workload=Workload(w_total=96, qd_per_ssd=16, n_streams=3,
+                                   read_frac=0.8),
+                 seed=42, layout=Raid5Layout(), faults=fp,
+                 telemetry=FULL).run(3000)
+    assert r.faults["hedged_reads"] > 0
+    bud = r.telemetry.budget
+    assert sum(bud["mean"].values()) == pytest.approx(bud["mean_latency"],
+                                                      rel=1e-9)
 
 
 # ---------------------------------------------------------------------------
