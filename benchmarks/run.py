@@ -53,6 +53,9 @@ _SECTIONS: list[tuple[str, str, str, bool]] = [
     ("monitor", "monitor_demo",
      "Monitor -- online alert rules, root causes, alert-vs-quarantine race",
      True),
+    ("serving_replay", "serving_replay",
+     "Serving replay -- KV-spill trace emit -> sharded replay under QoS+GC",
+     True),
     ("paper_tables", "paper_tables",
      "Paper -- Table 1 / Table 2 / Figure 2 (raw array under GC)", False),
     ("paper_figs", "paper_figs",

@@ -442,6 +442,7 @@ class Workload:
     hot_frac: float = 0.1            # hot-zone share of the LBA space
     hot_ops: float = 0.9             # op share hitting the hot zone
     wtr_span: int = 4096             # extent pages for "write_then_read"
+    trace_time_scale: float = 1.0    # seconds-per-trace-second for "trace"
 
 
 @dataclass
@@ -654,17 +655,39 @@ class ArraySim:
                             f"got {type(gc).__name__}")
         self.qos = qos
         if qos is not None:
-            # under QoS each tenant runs its own closed-loop source built
-            # from its TenantSpec; a caller-supplied source/trace/scenario
-            # would be silently ignored — refuse instead of lying
-            if source is not None or trace is not None:
-                raise ValueError("qos= builds per-tenant sources from the "
-                                 "TenantSpecs; source=/trace= would be "
-                                 "ignored — drop them or drop qos")
-            if workload.scenario != "random":
-                raise ValueError(f"qos= ignores workload.scenario="
-                                 f"{workload.scenario!r}; describe each "
-                                 f"tenant's workload in its TenantSpec")
+            if workload.scenario == "trace":
+                # trace replay honours the recorded admission order; qos=
+                # supplies per-tenant SLO targets/weights for ACCOUNTING
+                # (tenant_stats/share_error) — the scheduler's throttling
+                # is not re-applied to a fixed open-loop arrival stream.
+                if source is None and trace is None:
+                    raise ValueError("qos + scenario='trace' needs the "
+                                     "trace (trace= or source=)")
+                if layout is not None and not layout.trivial:
+                    raise ValueError("qos + trace replay supports only "
+                                     "trivial (JBOD) layouts")
+                if faults is not None:
+                    raise ValueError("qos + trace replay does not compose "
+                                     "with faults= yet")
+                if telemetry is not None and getattr(telemetry, "spans",
+                                                     False):
+                    raise ValueError("qos + trace replay does not compose "
+                                     "with telemetry spans yet")
+            else:
+                # under QoS each tenant runs its own closed-loop source
+                # built from its TenantSpec; a caller-supplied source/
+                # trace/scenario would be silently ignored — refuse
+                # instead of lying
+                if source is not None or trace is not None:
+                    raise ValueError("qos= builds per-tenant sources from "
+                                     "the TenantSpecs; source=/trace= "
+                                     "would be ignored — drop them or "
+                                     "drop qos")
+                if workload.scenario != "random":
+                    raise ValueError(f"qos= ignores workload.scenario="
+                                     f"{workload.scenario!r}; describe "
+                                     f"each tenant's workload in its "
+                                     f"TenantSpec")
         self.faults = faults
         if faults is not None:
             from .faults import validate_fault_policy
@@ -741,7 +764,7 @@ class ArraySim:
 
     # -- main loop -------------------------------------------------------------
     def run(self, measure_ops: int, warmup_ops: int | None = None) -> ArrayResults:
-        if self.qos is not None:
+        if self.qos is not None and self.wl.scenario != "trace":
             return self._run_qos(measure_ops, warmup_ops)
         if not self.layout.trivial:
             return self._run_layout(measure_ops, warmup_ops)
@@ -799,9 +822,19 @@ class ArraySim:
         mr = [0, 0]                  # measured [reads, writes]
         ftl_snap = [(0, 0, 0)] * n   # (writes, gc_copies, trims) at warmup
 
+        # qos + trace replay: per-tenant latency accounting. ten_on gates
+        # every tenant touch so the qos=None fast path stays byte-identical.
+        qos = self.qos
+        ten_on = qos is not None
+        trec = {t: LatencyRecorder() for t in qos.ids} if ten_on else None
+        cur_tenant = [0] * n_streams if ten_on else None
+
         def begin_measure():
             measured[:] = [0] * n
             mr[0] = mr[1] = 0
+            if ten_on:
+                for r in trec.values():
+                    r.reset()
             for ss in ssds:
                 ss.busy_time = 0.0
                 ss.gc_time = 0.0
@@ -999,6 +1032,42 @@ class ArraySim:
                     stream_fill(stream)
                 return on_done
 
+            if ten_on:
+                # tenant variant: identical mutations in identical order;
+                # the tenant id rides as the request tuple's 7th element
+                # and feeds the per-tenant recorder on measured completions
+                def on_done(req):
+                    stream, lba, is_read, coal, t_issue, kind, tenant = req
+                    outstanding[stream] -= 1
+                    if is_read:
+                        s.served_reads += 1
+                    elif kind == OP_TRIM:
+                        ftl.trim(lba)
+                        s.served_trims += 1
+                    else:
+                        s.served_writes += 1
+                        c = pw[lba] - 1
+                        if c:
+                            pw[lba] = c
+                        else:
+                            del pw[lba]
+                        if not coal:      # inlined ftl.user_write
+                            program(lba)
+                            ftl.writes += 1
+                    if note_completion(t_issue):
+                        measured[i] += 1
+                        if is_read:
+                            mr[0] += 1
+                        else:
+                            mr[1] += 1
+                        r = trec.get(tenant)
+                        if r is not None:
+                            r.record(loop.now - t_issue)
+                    if w:
+                        unpark(i)
+                    stream_fill(stream)
+                return on_done
+
             def on_done(req):
                 stream, lba, is_read, coal, t_issue, kind = req
                 outstanding[stream] -= 1
@@ -1064,6 +1133,9 @@ class ArraySim:
                            tel.new_span(kind, stream, ssd_i, loop.now))
             elif media_on:  # attempt counter rides at the end, same shape
                 req = (stream, lba, is_read, coal, loop.now, kind, 0)
+            elif ten_on:    # tenant id rides at the end (qos trace replay)
+                req = (stream, lba, is_read, coal, loop.now, kind,
+                       cur_tenant[stream])
             else:
                 req = (stream, lba, is_read, coal, loop.now, kind)
             hq = host_queues[ssd_i]
@@ -1103,6 +1175,8 @@ class ArraySim:
                 return
             while outstanding[stream] < window:
                 op = next_op(loop.now)
+                if ten_on:
+                    cur_tenant[stream] = op.tenant
                 glba = op.lba
                 ssd_i, lba = glba % n, glba // n
                 kind = op.kind
@@ -1134,8 +1208,9 @@ class ArraySim:
 
         if coord is not None:
             coord.on_release = unpark
-        for si in range(n_streams):
-            stream_fill(si)
+        if total_ops > 0:   # run(0) is a no-op: never pull from the source
+            for si in range(n_streams):
+                stream_fill(si)
 
         t_wall = time.perf_counter()
         # total_ops == 0: nothing to measure (matches the old run_while exit)
@@ -1150,7 +1225,15 @@ class ArraySim:
         summ = mw.latency.summary()
         self.last_latency = mw.latency.values()
         self.last_stall = None
-        self.last_tenant_latency = None
+        tstats, share_err = None, 0.0
+        if ten_on:
+            from .qos import build_tenant_stats
+            tstats, share_err = build_tenant_stats(
+                qos, trec, span, {t: 0.0 for t in qos.ids})
+            self.last_tenant_latency = {t: r.values()
+                                        for t, r in trec.items()}
+        else:
+            self.last_tenant_latency = None
         self.last_telemetry = tel.result() if tel is not None else None
         self.last_monitor = mon.result() if mon is not None else None
         measured_arr = np.asarray(measured, dtype=np.int64)
@@ -1182,6 +1265,8 @@ class ArraySim:
             trims=trims,
             ftl_writes=ftl_w,
             ftl_gc_copies=ftl_c,
+            tenant_stats=tstats,
+            share_error=share_err,
             faults=inj.finalize(loop.now) if inj is not None else None,
             telemetry=self.last_telemetry,
             monitor=self.last_monitor,

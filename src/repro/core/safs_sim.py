@@ -202,6 +202,7 @@ class SAFSWorkload:
     hot_frac: float = 0.1          # hot-zone share of the LBA space
     hot_ops: float = 0.9           # op share hitting the hot zone
     wtr_span: int = 4096           # extent pages for "write_then_read"
+    trace_time_scale: float = 1.0  # seconds-per-trace-second for "trace"
 
 
 @dataclass
@@ -706,7 +707,9 @@ class SAFSSim:
         # chain is self-sustaining (every completion respawns), so a later
         # run() — a new phase — resumes the in-flight population instead of
         # doubling it. First-run behaviour is unchanged (goldens).
-        if not self._spawned:
+        # total == 0 (an empty-trace shard) must be a no-op: leave
+        # _spawned False so a later real run still seeds the population.
+        if not self._spawned and total > 0:
             self._spawned = True
             for _ in range(self.wl.concurrency):
                 self._spawn_op()

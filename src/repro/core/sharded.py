@@ -51,7 +51,7 @@ from .gc_sim import ArrayResults, ArraySim, SSDParams, Workload
 from .monitor import merge_monitor
 from .safs_sim import SAFSResults, SAFSSim, SAFSWorkload
 from .telemetry import merge_telemetry
-from .workloads import _mix64
+from .workloads import _mix64, shard_trace
 
 __all__ = ["ShardedArraySim", "ShardedSAFSSim", "shard_sizes",
            "merge_results", "merge_safs_results", "pool_samples",
@@ -79,6 +79,18 @@ def _split_budget(total: int, sizes: list[int], n_ssds: int) -> list[int]:
     if total <= 0:
         return [0] * len(sizes)
     return [max(1, (total * sz) // n_ssds) for sz in sizes]
+
+
+def _split_budget_by(total: int, weights: list[int]) -> list[int]:
+    """Proportional split by arbitrary weights — used by the trace scenario,
+    where a shard's fair budget share follows its RECORD count, not its
+    device count. A zero-weight shard gets a hard 0 (its trace slice is
+    empty and must never be pulled from); every positive-weight shard gets
+    at least 1."""
+    if total <= 0 or sum(weights) <= 0:
+        return [0] * len(weights)
+    wsum = sum(weights)
+    return [max(1, (total * w) // wsum) if w else 0 for w in weights]
 
 
 def _shard_workload(wl: Workload, sz: int, n_ssds: int) -> Workload:
@@ -129,10 +141,12 @@ def _check_monitor(monitor) -> None:
 
 def _run_shard(args):
     (sz, ssd, occupancy, wl, seed, measure_ops, warmup_ops,
-     prefill_cache, layout, qos, gc, faults, telemetry, monitor) = args
+     prefill_cache, layout, qos, gc, faults, telemetry, monitor,
+     trace) = args
     sim = ArraySim(sz, ssd, occupancy, wl, seed=seed,
                    prefill_cache=prefill_cache, layout=layout, qos=qos, gc=gc,
-                   faults=faults, telemetry=telemetry, monitor=monitor)
+                   faults=faults, telemetry=telemetry, monitor=monitor,
+                   trace=trace)
     res = sim.run(measure_ops, warmup_ops)
     return (res, sim.last_latency, sim.last_stall, sim.last_tenant_latency,
             sim.last_gc_wait)
@@ -330,9 +344,22 @@ class ShardedArraySim:
                  seed: int = 0, n_shards: int | None = None,
                  parallel: bool = True, prefill_cache: bool = True,
                  layout=None, qos=None, gc=None, faults=None,
-                 telemetry=None, monitor=None):
+                 telemetry=None, monitor=None, trace=None):
         from .raid import JBODLayout
         self.layout = layout if layout is not None else JBODLayout()
+        self.trace = trace           # (n, 3|4) array for scenario="trace" —
+                                     # sliced per shard by owning device
+                                     # (workloads.shard_trace)
+        if workload.scenario == "trace":
+            if trace is None:
+                raise ValueError("scenario='trace' needs a trace array")
+            if not self.layout.trivial:
+                raise ValueError("sharded trace replay supports only "
+                                 "trivial (JBOD) layouts: the device-"
+                                 "partitioning rule lba % n assumes no "
+                                 "striping")
+        elif trace is not None:
+            raise ValueError("trace= requires workload.scenario='trace'")
         self.qos = qos               # QosPolicy | None (frozen — ships to
                                      # workers; each shard runs its own
                                      # scheduler over its slice)
@@ -393,9 +420,20 @@ class ShardedArraySim:
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
         if warmup_ops is None:
             warmup_ops = measure_ops // 2
-        measures = _split_budget(measure_ops, self.sizes, self.n)
-        warmups = _split_budget(warmup_ops, self.sizes, self.n) \
-            if warmup_ops else [0] * len(self.sizes)
+        traces = [None] * len(self.sizes)
+        if self.trace is not None:
+            # budgets follow each shard's record count: a shard owning few
+            # (or no) trace records must not be asked to replay more ops
+            # than its slice offers at the recorded rate
+            traces = shard_trace(self.trace, self.n, self.sizes)
+            counts = [len(t) for t in traces]
+            measures = _split_budget_by(measure_ops, counts)
+            warmups = _split_budget_by(warmup_ops, counts) \
+                if warmup_ops else [0] * len(self.sizes)
+        else:
+            measures = _split_budget(measure_ops, self.sizes, self.n)
+            warmups = _split_budget(warmup_ops, self.sizes, self.n) \
+                if warmup_ops else [0] * len(self.sizes)
         faults = [None] * len(self.sizes)
         if self.faults is not None:
             from .faults import slice_policy
@@ -409,7 +447,7 @@ class ShardedArraySim:
              shard_seed(self.seed, k), measures[k], warmups[k],
              self.prefill_cache, self.layout,
              _shard_qos(self.qos, sz, self.n), self.gc, faults[k],
-             self.telemetry, self.monitor)
+             self.telemetry, self.monitor, traces[k])
             for k, sz in enumerate(self.sizes)
         ]
 
@@ -465,11 +503,11 @@ def _shard_safs_workload(wl: SAFSWorkload, sz: int, n_ssds: int) -> SAFSWorkload
 def _run_safs_shard(args):
     (sz, ssd, occupancy, wl, cache_frac, use_flusher, clean_first,
      score_threshold, seed, measure_ops, warmup_ops, faults,
-     telemetry, monitor) = args
+     telemetry, monitor, trace) = args
     sim = SAFSSim(sz, ssd, occupancy, wl, cache_frac=cache_frac,
                   use_flusher=use_flusher, clean_first=clean_first,
                   score_threshold=score_threshold, seed=seed, faults=faults,
-                  telemetry=telemetry, monitor=monitor)
+                  telemetry=telemetry, monitor=monitor, trace=trace)
     res = sim.run(measure_ops, warmup_ops)
     return (res, sim.last_latency)
 
@@ -535,15 +573,20 @@ class ShardedSAFSSim:
                  clean_first: bool = True, score_threshold: int = 2,
                  seed: int = 0, n_shards: int | None = None,
                  parallel: bool = True, qos=None, faults=None,
-                 telemetry=None, monitor=None):
+                 telemetry=None, monitor=None, trace=None):
         if qos is not None:
             raise NotImplementedError(
                 "per-tenant QoS couples every device through one scheduler "
                 "and cannot be sharded; use SAFSSim(qos=...) unsharded")
+        self.trace = trace           # (n, 3|4) array for scenario="trace" —
+                                     # sliced per shard by owning device
+                                     # (workloads.shard_trace); records never
+                                     # reorder within a device group
         if workload.scenario == "trace":
-            raise NotImplementedError(
-                "trace replay has one global arrival order and cannot be "
-                "partitioned; use SAFSSim unsharded")
+            if trace is None:
+                raise ValueError("scenario='trace' needs a trace array")
+        elif trace is not None:
+            raise ValueError("trace= requires workload.scenario='trace'")
         self.n = n_ssds
         self.p = ssd if ssd is not None else SSDParams()
         self.wl = workload
@@ -573,9 +616,17 @@ class ShardedSAFSSim:
     def _shard_args(self, measure_ops: int, warmup_ops: int | None):
         if warmup_ops is None:
             warmup_ops = measure_ops // 2
-        measures = _split_budget(measure_ops, self.sizes, self.n)
-        warmups = _split_budget(warmup_ops, self.sizes, self.n) \
-            if warmup_ops else [0] * len(self.sizes)
+        traces = [None] * len(self.sizes)
+        if self.trace is not None:
+            traces = shard_trace(self.trace, self.n, self.sizes)
+            counts = [len(t) for t in traces]
+            measures = _split_budget_by(measure_ops, counts)
+            warmups = _split_budget_by(warmup_ops, counts) \
+                if warmup_ops else [0] * len(self.sizes)
+        else:
+            measures = _split_budget(measure_ops, self.sizes, self.n)
+            warmups = _split_budget(warmup_ops, self.sizes, self.n) \
+                if warmup_ops else [0] * len(self.sizes)
         faults = [None] * len(self.sizes)
         if self.faults is not None:
             from .faults import slice_policy
@@ -589,7 +640,7 @@ class ShardedSAFSSim:
              self.cache_frac, self.use_flusher, self.clean_first,
              self.score_threshold, shard_seed(self.seed, k),
              measures[k], warmups[k], faults[k], self.telemetry,
-             self.monitor)
+             self.monitor, traces[k])
             for k, sz in enumerate(self.sizes)
         ]
 

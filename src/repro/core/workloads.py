@@ -51,6 +51,12 @@ import numpy as np
 TRACE_READ = 0
 TRACE_WRITE = 1
 
+# Trace schema (see ``TraceSource``): a trace is a float64 array of shape
+# (n, 3) — ``(time, lba, op)`` — or (n, 4) with a trailing integer tenant
+# column. ``serving.trace_shim`` emits/loads the versioned ``.npz`` form.
+TRACE_VERSION = 1
+TRACE_COLUMNS = ("time", "lba", "op", "tenant")
+
 # op kinds (``Op.kind``). KIND_AUTO derives the kind from ``is_read`` so every
 # pre-existing two-argument ``Op(lba, is_read)`` call site keeps working; only
 # sources that emit the newer command types set an explicit kind.
@@ -279,34 +285,101 @@ class MixedTenantSource(OpSource):
 
 
 class TraceSource(OpSource):
-    """Replay a ``(time, lba, op)`` array (op: 0 = read, 1 = write).
+    """Replay a ``(time, lba, op[, tenant])`` array (op: 0 = read, 1 = write).
 
-    Rows must be time-sorted. LBAs are folded onto the live space with
-    ``mod n_live``. When the trace is exhausted it loops, shifting times by
-    the trace span so arrival times stay monotone."""
+    Schema (``TRACE_COLUMNS``, version ``TRACE_VERSION``): column 0 is the
+    arrival time in seconds (scaled by ``time_scale``), column 1 the page
+    LBA (folded onto the live space with ``mod n_live``), column 2 the op
+    code (``TRACE_READ``/``TRACE_WRITE``), and the optional column 3 an
+    integer tenant id carried onto ``Op.tenant`` (3-column traces replay
+    bit-identically to before, tenant 0). Tenant ids map to ``QosPolicy``
+    tenants positionally — tenant ``t`` in the trace is accounted against
+    ``qos.tenants[t]``'s SLO/weight spec at replay time.
+
+    Rows must be time-sorted. When the trace is exhausted it loops,
+    shifting times by the trace span (plus one mean gap) so arrival times
+    stay monotone. An empty trace is allowed at construction (a sharded
+    replay may hand a shard zero records); drawing from one raises.
+
+    Worked emit -> replay round trip::
+
+        from repro.serving.trace_shim import ServingTraceRecorder, save_trace
+        rec = ServingTraceRecorder(n_targets=4)
+        pool = make_pool(...); rec.attach_pool(pool)   # swap in recorder
+        ... drive the pool ...                         # offloads / fetches
+        save_trace("kv.npz", rec.to_array())
+
+        from repro.serving.trace_shim import load_trace
+        wl = Workload(scenario="trace")
+        r = ArraySim(4, ssd, 0.6, wl, seed=1,
+                     trace=load_trace("kv.npz"), qos=policy).run(20000)
+    """
 
     def __init__(self, trace: np.ndarray, n_live: int, time_scale: float = 1.0):
         trace = np.asarray(trace)
-        assert trace.ndim == 2 and trace.shape[1] == 3, \
-            "trace must be (n, 3): time, lba, op"
-        assert trace.shape[0] > 0, "empty trace"
+        assert trace.ndim == 2 and trace.shape[1] in (3, 4), \
+            "trace must be (n, 3) time/lba/op or (n, 4) time/lba/op/tenant"
+        self.has_tenants = trace.shape[1] == 4
         self.times = trace[:, 0].astype(np.float64) * time_scale
-        self.lbas = trace[:, 1].astype(np.int64) % n_live
+        self.lbas = trace[:, 1].astype(np.int64) % max(n_live, 1)
         self.ops = trace[:, 2].astype(np.int64)
+        self.tenants = (trace[:, 3].astype(np.int64) if self.has_tenants
+                        else np.zeros(len(self.times), dtype=np.int64))
         # loop period: span plus one mean inter-arrival gap
-        span = float(self.times[-1] - self.times[0])
-        self.period = span + max(span / max(len(self.times) - 1, 1), 1e-9)
+        if len(self.times):
+            span = float(self.times[-1] - self.times[0])
+            self.period = span + max(span / max(len(self.times) - 1, 1),
+                                     1e-9)
+        else:
+            self.period = 1e-9
         self._i = 0
         self._offset = 0.0
 
     def next_op(self, now: float) -> Op:
         if self._i >= len(self.times):
+            if not len(self.times):
+                raise RuntimeError("next_op() on an empty trace — give "
+                                   "empty shards a zero op budget")
             self._i = 0
             self._offset += self.period
         i = self._i
         self._i += 1
         return Op(int(self.lbas[i]), self.ops[i] == TRACE_READ,
-                  at=self._offset + float(self.times[i]))
+                  at=self._offset + float(self.times[i]),
+                  tenant=int(self.tenants[i]))
+
+
+def shard_trace(trace: np.ndarray, n_ssds: int,
+                sizes: Sequence[int]) -> list:
+    """Partition trace records across shards by owning device.
+
+    On a JBOD array of ``n_ssds`` members a folded LBA lands on device
+    ``lba % n_ssds`` (``gc_sim`` fast loop / ``safs_sim`` tag mapping), so
+    the shard covering devices ``[lo, lo + sz)`` owns exactly the records
+    whose device falls in that range. Records keep their original relative
+    order — a trace never reorders within a device group — and the LBA is
+    remapped to the shard-local space as ``(lba // n_ssds) * sz +
+    (device - lo)``, which preserves both the owning device (now ``device
+    - lo``) and the per-device page index modulo the live space. The
+    identity holds for any fold the shard applies later because
+    ``n_live`` is always a multiple of the member count.
+
+    Time/op/tenant columns pass through untouched; slices of a (n, 4)
+    trace keep the tenant column. Returns one (possibly empty) array per
+    shard."""
+    arr = np.asarray(trace, dtype=np.float64)
+    assert arr.ndim == 2 and arr.shape[1] in (3, 4), "bad trace shape"
+    devs = arr[:, 1].astype(np.int64) % n_ssds
+    out, lo = [], 0
+    for sz in sizes:
+        mask = (devs >= lo) & (devs < lo + sz)
+        sub = arr[mask].copy()
+        if len(sub):
+            raw = sub[:, 1].astype(np.int64)
+            sub[:, 1] = (raw // n_ssds) * sz + (devs[mask] - lo)
+        out.append(sub)
+        lo += sz
+    return out
 
 
 class StridedSource(OpSource):
@@ -591,7 +664,8 @@ def _build_delete_burst(wl, n_live, rng, trace):
 @register_pattern("trace")
 def _build_trace(wl, n_live, rng, trace):
     assert trace is not None, "scenario='trace' needs a trace array"
-    return TraceSource(trace, n_live)
+    return TraceSource(trace, n_live,
+                       time_scale=getattr(wl, "trace_time_scale", 1.0))
 
 
 def source_for(wl, n_live: int, rng: np.random.Generator,

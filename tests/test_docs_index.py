@@ -1,0 +1,46 @@
+"""Docs-consistency: the root README's artifact index must cover every
+committed benchmark artifact (the front door may not silently rot as PRs
+add BENCH files)."""
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def _artifacts():
+    return sorted(p.name for p in ROOT.glob("BENCH_*")
+                  if p.suffix in (".json", ".jsonl"))
+
+
+def test_readme_exists_with_required_sections():
+    readme = ROOT / "README.md"
+    assert readme.exists(), "repo front door missing: README.md"
+    text = readme.read_text()
+    for heading in ("## Quickstart", "## Architecture map",
+                    "## Benchmark artifacts", "## Determinism contract"):
+        assert heading in text, f"README.md lost its '{heading}' section"
+    assert "benchmarks/README.md" in text
+
+
+def test_every_committed_bench_artifact_is_indexed():
+    arts = _artifacts()
+    assert arts, "no BENCH_* artifacts at the repo root?"
+    text = (ROOT / "README.md").read_text()
+    missing = [a for a in arts if a not in text]
+    assert not missing, (
+        f"committed artifacts absent from the README index: {missing} — "
+        "add a row to the 'Benchmark artifacts' table")
+
+
+def test_index_rows_point_at_real_producer_modules():
+    """Each producer named in the index table is a real benchmarks/ module
+    (catches renames that would orphan a table row)."""
+    import re
+    text = (ROOT / "README.md").read_text()
+    block = text.split("## Benchmark artifacts")[1].split("\n## ")[0]
+    rows = re.findall(r"^\| `(BENCH_[\w.]+)` \| `(\w+)` \|", block,
+                      flags=re.M)
+    assert rows, "no artifact rows parsed from the index table"
+    for artifact, producer in rows:
+        assert (ROOT / "benchmarks" / f"{producer}.py").exists(), (
+            f"README row for {artifact} names producer '{producer}' but "
+            f"benchmarks/{producer}.py does not exist")

@@ -218,11 +218,12 @@ class TestFaultedDeterminism:
         assert a.faults == b.faults
         assert a.faults["crashes"] == 1
 
-    def test_sharded_safs_qos_and_trace_still_refused(self):
+    def test_sharded_safs_qos_still_refused(self):
         with pytest.raises(NotImplementedError, match="QoS"):
             ShardedSAFSSim(4, P, qos=QosPolicy(
                 tenants=(TenantSpec(tenant=0, weight=1.0),)))
-        with pytest.raises(NotImplementedError, match="trace"):
+        # trace replay is sharded now, but the trace array is mandatory
+        with pytest.raises(ValueError, match="trace"):
             ShardedSAFSSim(4, P, workload=SAFSWorkload(scenario="trace"))
 
 

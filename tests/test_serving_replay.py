@@ -1,0 +1,285 @@
+"""Serving-trace bridge: shim determinism, the .npz container, fleet
+emission, and replay through the (sharded) array simulator."""
+import numpy as np
+import pytest
+
+from repro.core.gc_sim import ArraySim, SSDParams, Workload
+from repro.core.io_queues import HIGH, LOW, IORequest
+from repro.core.qos import QosPolicy, TenantSpec
+from repro.core.sharded import ShardedArraySim
+from repro.core.workloads import TRACE_READ, TRACE_WRITE
+from repro.serving.fleet import (PAGES_PER_SESSION_CAP, FleetConfig,
+                                 run_fleet)
+from repro.serving.kv_pool import PagedKVPool
+from repro.serving.trace_shim import (CKPT_TENANT, LogicalClock,
+                                      ServingTraceRecorder, load_trace,
+                                      save_trace, stable_key_lba,
+                                      trace_digest)
+
+SMALL = SSDParams(capacity_pages=4096)
+
+SMOKE = FleetConfig(n_targets=4, duration_s=0.2, arrival_rate=400.0,
+                    pool_sets=8, set_size=8, flush_trigger=1)
+
+
+# -- recorder mechanics ------------------------------------------------------
+
+
+def _pool_with_recorder(n_targets=4, tenant_of=None):
+    rec = ServingTraceRecorder(n_targets, tenant_of=tenant_of)
+    pool = PagedKVPool(8, 8, n_targets=n_targets,
+                       copy_out=lambda tag: (),
+                       copy_in=lambda tag, data: None,
+                       flush_trigger=0)
+    rec.attach_pool(pool)
+    return pool, rec
+
+
+def test_recorder_captures_offload_and_fetch_with_tenants():
+    pool, rec = _pool_with_recorder(tenant_of=lambda tag: tag % 3)
+    for tag in (5, 6):
+        pool.alloc.alloc(tag)
+        pool.alloc.mark_full(tag)
+        pool.note_page_full(pool.alloc.set_of(tag))
+    rec.advance(1e-3)
+    rec.pump()
+    assert pool.alloc.stats.offloads == 2
+    # evict from HBM then fetch back: a HIGH read, served synchronously
+    pool.alloc.free([5])
+    rec.advance(1e-3)
+    pool.fetch([5])
+    tr = rec.to_array()
+    assert tr.shape == (3, 4)
+    writes = tr[tr[:, 2] == TRACE_WRITE]
+    reads = tr[tr[:, 2] == TRACE_READ]
+    assert {int(r[1]) for r in writes} == {5, 6}
+    assert [int(r[1]) for r in reads] == [5]
+    # tenant column comes from tenant_of(tag)
+    for row in tr:
+        assert int(row[3]) == int(row[1]) % 3
+    # clock stamped: offloads at t=1ms, fetch at t=2ms
+    assert list(tr[:, 0]) == pytest.approx([1e-3, 1e-3, 2e-3])
+    pool.close()
+
+
+def test_recorder_counts_stale_discards_without_emitting():
+    """A flush whose page was freed before reaching the queue head is
+    discarded by the dual-queue staleness check: counted, never recorded."""
+    pool, rec = _pool_with_recorder()
+    pool.alloc.alloc(9)
+    pool.alloc.mark_full(9)
+    pool.note_page_full(pool.alloc.set_of(9))
+    pool.alloc.free([9])               # sequence finished before the flush
+    rec.pump()
+    assert rec.stale_discards() == 1
+    assert pool.alloc.stats.stale_discards == 1
+    assert rec.to_array().shape == (0, 4)
+    pool.close()
+
+
+def test_recorder_high_priority_is_synchronous():
+    """HIGH requests must complete inside submit() — the pool's fetch()
+    blocks on a semaphore the device callback releases."""
+    hits = []
+    rec = ServingTraceRecorder(2)
+    ex = rec._make_exec(2, lambda dev, payload: hits.append(dev))
+    ex.submit(1, IORequest(payload={"op": "fetch", "tag": 3}, priority=HIGH))
+    assert hits == [1]
+    ex.submit(0, IORequest(payload={"op": "offload", "tag": 2},
+                           priority=LOW))
+    assert hits == [1]                 # LOW waits for an explicit pump
+    assert ex.pump() == 1
+    assert hits == [1, 0]
+
+
+def test_recorder_unknown_payload_executes_but_records_nothing():
+    hits = []
+    rec = ServingTraceRecorder(1)
+    ex = rec._make_exec(1, lambda dev, payload: hits.append(payload))
+    ex.submit(0, IORequest(payload={"op": "mystery"}, priority=HIGH))
+    assert hits == [{"op": "mystery"}]
+    assert rec.to_array().shape == (0, 4)
+
+
+def test_logical_clock_and_record_direct():
+    rec = ServingTraceRecorder(2)
+    rec.advance(0.5)
+    rec.record_direct(17, TRACE_WRITE, tenant=4)
+    tr = rec.to_array()
+    assert tr.tolist() == [[0.5, 17.0, 1.0, 4.0]]
+    assert isinstance(rec.clock, LogicalClock)
+
+
+def test_stable_key_lba_is_process_stable():
+    """Pinned values: a salted hash() here would silently break the
+    emit-twice byte-identity contract across processes."""
+    assert stable_key_lba("ckpt/0/layer0") == stable_key_lba("ckpt/0/layer0")
+    assert stable_key_lba("a") != stable_key_lba("b")
+    # float64-exact: the lba column must round-trip the int losslessly
+    v = stable_key_lba("x")
+    assert 0 <= v < 2 ** 52 and int(float(v)) == v
+
+
+def test_attach_ckpt_records_chunk_writes(tmp_path):
+    jax = pytest.importorskip("jax")
+    from repro.checkpoint.async_ckpt import CheckpointManager
+    rec = ServingTraceRecorder(4)
+    mgr = CheckpointManager(tmp_path, n_targets=4)
+    rec.attach_ckpt(mgr)
+    mgr.save_async(step=1, tree={"w": jax.numpy.zeros((4,)),
+                                 "b": jax.numpy.ones((2,))})
+    mgr.barrier()
+    tr = rec.to_array()
+    assert len(tr) == 2
+    assert set(tr[:, 2]) == {float(TRACE_WRITE)}
+    assert set(tr[:, 3]) == {float(CKPT_TENANT)}
+    # placement was pinned to the stable hash: the recorded LBA names the
+    # target that actually served the write
+    assert {int(row[1]) % 4 for row in tr} == \
+        {mgr._target_of(k) for k in ("w", "b")}
+    assert {int(row[1]) for row in tr} == \
+        {stable_key_lba("w"), stable_key_lba("b")}
+    mgr.close()
+
+
+# -- container ---------------------------------------------------------------
+
+
+def test_save_load_round_trip(tmp_path):
+    tr = np.array([[0.0, 5, 1, 0], [1.0, 6, 0, 2]], dtype=np.float64)
+    p = tmp_path / "t.npz"
+    save_trace(p, tr, meta={"n_targets": 4})
+    back, meta = load_trace(p, with_meta=True)
+    np.testing.assert_array_equal(back, tr)
+    assert trace_digest(back) == trace_digest(tr)
+    assert meta == {"n_targets": 4}
+
+
+def test_load_rejects_future_version(tmp_path):
+    p = tmp_path / "t.npz"
+    np.savez(p, version=np.int64(99), trace=np.zeros((1, 4)))
+    with pytest.raises(ValueError):
+        load_trace(p)
+
+
+def test_trace_digest_distinguishes_shape_and_content():
+    a = np.zeros((2, 4))
+    assert trace_digest(a) == trace_digest(a.copy())
+    assert trace_digest(a) != trace_digest(np.zeros((4, 2)))
+    b = a.copy()
+    b[0, 0] = 1e-9
+    assert trace_digest(a) != trace_digest(b)
+
+
+# -- fleet -------------------------------------------------------------------
+
+
+def test_fleet_same_seed_emits_byte_identical_trace():
+    a = run_fleet(SMOKE, seed=11)
+    b = run_fleet(SMOKE, seed=11)
+    assert trace_digest(a.trace) == trace_digest(b.trace)
+    assert a.tokens_total == b.tokens_total
+    assert a.offloads == b.offloads and a.fetches == b.fetches
+
+
+def test_fleet_different_seed_differs():
+    a = run_fleet(SMOKE, seed=11)
+    b = run_fleet(SMOKE, seed=12)
+    assert trace_digest(a.trace) != trace_digest(b.trace)
+
+
+def test_fleet_trace_is_nontrivial_and_well_formed():
+    r = run_fleet(SMOKE, seed=11)
+    tr = r.trace
+    assert len(tr) > 0 and tr.shape[1] == 4
+    assert r.offloads > 0 and r.stale_discards > 0
+    assert np.all(np.diff(tr[:, 0]) >= 0)              # time-ordered
+    assert set(np.unique(tr[:, 2])) <= {0.0, 1.0}
+    # tenants are the two fleet classes (no checkpoint manager attached)
+    assert set(np.unique(tr[:, 3])) <= {0.0, 1.0}
+    # tag layout round-trips to a session id
+    sids = tr[:, 1].astype(np.int64) // PAGES_PER_SESSION_CAP
+    assert sids.max() < r.sessions_started
+
+
+# -- replay ------------------------------------------------------------------
+
+
+def _qos():
+    return QosPolicy(tenants=(TenantSpec(0, 2.0, slo_p99=4e-3),
+                              TenantSpec(1, 1.0)))
+
+
+def test_replay_propagates_tenants_into_tenant_stats():
+    r = run_fleet(SMOKE, seed=11)
+    wl = Workload(scenario="trace", w_total=4 * 8, qd_per_ssd=8,
+                  n_streams=4, trace_time_scale=0.05)
+    res = ArraySim(4, SMALL, 0.6, wl, seed=2, trace=r.trace,
+                   qos=_qos()).run(len(r.trace))
+    assert set(res.tenant_stats) == {0, 1}
+    assert res.tenant_stats[0].ops > 0
+    # every measured completion is attributed to exactly one tenant
+    assert sum(s.ops for s in res.tenant_stats.values()) == len(r.trace)
+    assert res.tenant_stats[0].slo_p99 == 4e-3
+
+
+def test_replay_is_deterministic():
+    r = run_fleet(SMOKE, seed=11)
+    wl = Workload(scenario="trace", w_total=4 * 8, qd_per_ssd=8, n_streams=4)
+    runs = [ArraySim(4, SMALL, 0.6, wl, seed=2, trace=r.trace,
+                     qos=_qos()).run(800) for _ in range(2)]
+    assert runs[0].iops == runs[1].iops
+    assert runs[0].p99_latency == runs[1].p99_latency
+    assert all(runs[0].tenant_stats[t].p99_latency
+               == runs[1].tenant_stats[t].p99_latency
+               for t in runs[0].tenant_stats)
+
+
+def test_replay_sharded_serial_equals_parallel():
+    """Acceptance: the emitted trace replays bit-identically whether the
+    shard decomposition runs in-process or across workers."""
+    r = run_fleet(SMOKE, seed=11)
+    wl = Workload(scenario="trace", w_total=4 * 8, qd_per_ssd=8, n_streams=4,
+                  trace_time_scale=0.05)
+    mk = lambda par: ShardedArraySim(4, SMALL, 0.6, wl, seed=2, n_shards=2,
+                                     trace=r.trace, qos=_qos(), parallel=par)
+    a, b = mk(False).run(len(r.trace)), mk(True).run(len(r.trace))
+    assert a.iops == b.iops
+    assert a.p99_latency == b.p99_latency
+    np.testing.assert_array_equal(a.per_ssd_iops, b.per_ssd_iops)
+    assert all(a.tenant_stats[t].p99_latency == b.tenant_stats[t].p99_latency
+               and a.tenant_stats[t].ops == b.tenant_stats[t].ops
+               for t in a.tenant_stats)
+
+
+def test_replay_single_op_trace():
+    tr = np.array([[0.0, 3, TRACE_WRITE, 0]])
+    wl = Workload(scenario="trace", w_total=8, qd_per_ssd=4, n_streams=2)
+    res = ArraySim(2, SMALL, 0.6, wl, seed=0, trace=tr,
+                   qos=QosPolicy(tenants=(TenantSpec(0, 1.0),))).run(4)
+    assert res.tenant_stats[0].ops == 4                # the one-row trace loops
+
+
+def test_sharded_replay_with_empty_shard():
+    """A trace touching only low devices leaves the high shard with zero
+    records AND a zero op budget — its sim must be a no-op, not a crash."""
+    n = 80
+    tr = np.stack([np.arange(200) * 1e-5,
+                   (np.arange(200) * 2) % 8,           # devices 0..7 only
+                   np.ones(200), np.zeros(200)], axis=1)
+    wl = Workload(scenario="trace", w_total=n * 4, qd_per_ssd=4, n_streams=n)
+    res = ShardedArraySim(n, SMALL, 0.6, wl, seed=1, n_shards=4,
+                          trace=tr, parallel=False).run(200)
+    assert res.events > 0
+    assert res.per_ssd_iops.shape == (n,)
+    assert np.all(res.per_ssd_iops[40:] == 0.0)        # untouched shards
+
+
+def test_sharded_replay_requires_trace_and_trivial_layout():
+    wl = Workload(scenario="trace", w_total=16, qd_per_ssd=4, n_streams=4)
+    with pytest.raises(ValueError):
+        ShardedArraySim(4, SMALL, 0.6, wl)             # no trace given
+    from repro.core.raid import Raid5Layout
+    with pytest.raises(ValueError):
+        ShardedArraySim(4, SMALL, 0.6, wl, trace=np.zeros((1, 4)),
+                        layout=Raid5Layout(group=4))

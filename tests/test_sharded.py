@@ -152,7 +152,9 @@ def test_safs_sharded_rejects_qos_and_trace():
     qos = QosPolicy(tenants=(TenantSpec(0, 1.0), TenantSpec(1, 1.0)))
     with pytest.raises(NotImplementedError):
         ShardedSAFSSim(4, SMALL, qos=qos)
-    with pytest.raises(NotImplementedError):
+    # trace replay IS sharded now (per-shard slicing) — but it still needs
+    # the trace array itself
+    with pytest.raises(ValueError):
         ShardedSAFSSim(4, SMALL, workload=SAFSWorkload(scenario="trace"))
 
 

@@ -3,10 +3,11 @@ import numpy as np
 import pytest
 
 from repro.core.gc_sim import ArraySim, SSDParams, Workload
-from repro.core.workloads import (OP_TRIM, TRACE_READ, TRACE_WRITE,
-                                  BurstySource, DeleteBurstSource,
-                                  MixedTenantSource, SequentialSource,
-                                  TraceSource, UniformSource, ZipfSource,
+from repro.core.workloads import (OP_TRIM, TRACE_COLUMNS, TRACE_READ,
+                                  TRACE_VERSION, TRACE_WRITE, BurstySource,
+                                  DeleteBurstSource, MixedTenantSource,
+                                  SequentialSource, TraceSource,
+                                  UniformSource, ZipfSource, shard_trace,
                                   source_for)
 
 SMALL = SSDParams(capacity_pages=8192)
@@ -63,6 +64,108 @@ def test_trace_source_replays_and_loops():
 def test_trace_source_folds_lbas():
     trace = np.array([[0.0, 1005, TRACE_WRITE]])
     assert TraceSource(trace, n_live=100).next_op(0.0).lba == 5
+
+
+def test_trace_schema_constants():
+    """The schema the .npz container and the docs both reference."""
+    assert TRACE_VERSION == 1
+    assert TRACE_COLUMNS == ("time", "lba", "op", "tenant")
+
+
+def test_trace_source_tenant_column():
+    trace = np.array([[0.0, 5, TRACE_WRITE, 1],
+                      [1.0, 6, TRACE_READ, 0],
+                      [2.0, 7, TRACE_WRITE, 2]])
+    src = TraceSource(trace, n_live=100)
+    assert src.has_tenants
+    ops = [src.next_op(0.0) for _ in range(6)]        # two full loops
+    assert [o.tenant for o in ops] == [1, 0, 2, 1, 0, 2]
+    assert [o.lba for o in ops] == [5, 6, 7] * 2
+
+
+def test_trace_source_three_columns_default_tenant_zero():
+    """(n, 3) traces stay valid — tenant defaults to 0, op stream
+    bit-identical to the 4-column equivalent with a zero tenant column."""
+    t3 = np.array([[0.0, 5, TRACE_WRITE], [1.0, 6, TRACE_READ]])
+    t4 = np.hstack([t3, np.zeros((2, 1))])
+    a, b = TraceSource(t3, n_live=100), TraceSource(t4, n_live=100)
+    assert not a.has_tenants and b.has_tenants
+    for _ in range(4):
+        x, y = a.next_op(0.0), b.next_op(0.0)
+        assert (x.lba, x.is_read, x.at, x.tenant) == \
+            (y.lba, y.is_read, y.at, y.tenant)
+        assert x.tenant == 0
+
+
+def test_trace_source_empty_trace():
+    """Empty traces construct (an empty SHARD of a partitioned trace is
+    legitimate) but refuse to produce ops."""
+    src = TraceSource(np.empty((0, 4)), n_live=100)
+    assert src.has_tenants
+    with pytest.raises(RuntimeError):
+        src.next_op(0.0)
+
+
+def test_trace_source_rejects_bad_width():
+    with pytest.raises(AssertionError):
+        TraceSource(np.zeros((3, 2)), n_live=100)
+
+
+# -- shard_trace: the sharded-replay partitioning rule -----------------------
+
+
+def test_shard_trace_partitions_by_device_and_preserves_order():
+    """Each record goes to the shard owning device ``lba % n_ssds``; within
+    a shard the records keep their original (time) order."""
+    n, sizes = 8, [3, 3, 2]
+    rng = np.random.default_rng(0)
+    trace = np.stack([np.arange(50) * 1e-3,
+                      rng.integers(0, 10_000, size=50),
+                      rng.integers(0, 2, size=50),
+                      rng.integers(0, 3, size=50)], axis=1)
+    parts = shard_trace(trace, n, sizes)
+    assert len(parts) == 3
+    assert sum(len(p) for p in parts) == 50
+    lo = 0
+    for part, sz in zip(parts, sizes):
+        raws = trace[np.isin(trace[:, 1].astype(np.int64) % n,
+                             range(lo, lo + sz))]
+        # order preserved: times match the original subsequence exactly
+        np.testing.assert_array_equal(part[:, 0], raws[:, 0])
+        np.testing.assert_array_equal(part[:, 2:], raws[:, 2:])
+        # remap: local device = global device - lo, op count per device kept
+        np.testing.assert_array_equal(
+            part[:, 1].astype(np.int64) % sz,
+            raws[:, 1].astype(np.int64) % n - lo)
+        lo += sz
+
+
+def test_shard_trace_remap_matches_unsharded_device_lba():
+    """The two-step fold (shard slice then per-device fold) must land every
+    record on the same per-device LBA the unsharded sim computes:
+    (raw // n) % live_per_ssd."""
+    n, sizes, live_per_ssd = 6, [4, 2], 512
+    raw = np.array([7, 6 * 900 + 4, 6 * 1200 + 5, 13, 6 * 77 + 1])
+    trace = np.stack([np.arange(5.0), raw.astype(float),
+                      np.ones(5), np.zeros(5)], axis=1)
+    lo = 0
+    for part, sz in zip(shard_trace(trace, n, sizes), sizes):
+        local = part[:, 1].astype(np.int64)
+        got_dev = local % sz + lo
+        got_lba = (local % (live_per_ssd * sz)) // sz
+        raws = raw[(raw % n >= lo) & (raw % n < lo + sz)]
+        np.testing.assert_array_equal(got_dev, raws % n)
+        np.testing.assert_array_equal(got_lba, (raws // n) % live_per_ssd)
+        lo += sz
+
+
+def test_shard_trace_empty_shard():
+    """A shard owning devices no record touches gets a (0, k) slice."""
+    trace = np.array([[0.0, 0, TRACE_WRITE, 0],    # device 0 only
+                      [1.0, 4, TRACE_WRITE, 0]])
+    parts = shard_trace(trace, 4, [2, 2])
+    assert len(parts[0]) == 2
+    assert parts[1].shape == (0, 4)
 
 
 def test_delete_burst_source_emits_aligned_trim_runs():
